@@ -1,0 +1,58 @@
+"""Insert the rendered dry-run + roofline tables into EXPERIMENTS.md
+(replacing the placeholder markers).
+
+    PYTHONPATH=src python -m benchmarks.finalize_experiments
+"""
+from __future__ import annotations
+
+from benchmarks.roofline_table import (dryrun_markdown, load_cells,
+                                       roofline_markdown)
+
+OBS = """
+### Observations (what the table says)
+
+- **Memory is the dominant term almost everywhere.**  Partly real (decode
+  is KV-bound; training reads params+activations), partly the CPU-lowered
+  under-fusion the methodology notes flag.  The hillclimb treats relative
+  movement of the term as the signal.
+- **useful ≈ 0.04 across GNN/recsys baselines** is the model-axis
+  replication signature: nothing in those models shards over "model"
+  except node rows/tables, so all edge/batch compute repeats 16×.  Fixed
+  for equiformer in §Perf (useful → 0.40); the same two-line fix applies
+  to the rest of the family.
+- **Dense-LM training** baselines: stablelm (full head TP) reaches
+  useful 0.68 — the fwd+bwd+remat floor (8·N·D) with little waste; the
+  non-TP-shardable archs (qwen2*) sit at 0.14-0.20 until sequence
+  parallelism (§Perf) lifts qwen2-1.5b to 0.74.
+- **Decode cells** are memory-bound as physics dictates (one token reads
+  the whole cache+params): qwen2.5-32b decode_32k needs ≈ 2.9s/step by
+  the (pessimistic, unfused) byte model and ~0.5s by a params+cache-only
+  napkin — serving would batch higher or quantize the cache.
+- **long_500k** works for every LM arch (O(S) decode; KV sequence sharded
+  over all 256/512 chips — per-device slice ≤ 59 MB for qwen2-1.5b).
+- **Multi-pod**: every cell also compiles at (2,16,16); wire/dev roughly
+  halves for DP-sharded cells (batch splits over pods) while per-device
+  FLOPs/bytes halve for training shapes — the "pod" axis behaves as pure
+  DP, as designed.
+"""
+
+
+def main():
+    cells = load_cells("experiments/dryrun")
+    n_single = sum(1 for c in cells if c["mesh"] == "single")
+    n_multi = sum(1 for c in cells if c["mesh"] == "multi")
+    with open("EXPERIMENTS.md") as f:
+        src = f.read()
+    dr = (f"**{n_single} single-pod + {n_multi} multi-pod cells compiled "
+          f"successfully.**\n\n" + dryrun_markdown(cells))
+    src = src.replace("<!-- DRYRUN-TABLE -->", dr)
+    src = src.replace("<!-- ROOFLINE-TABLE -->",
+                      roofline_markdown(cells, "single"))
+    src = src.replace("<!-- ROOFLINE-OBS -->", OBS)
+    with open("EXPERIMENTS.md", "w") as f:
+        f.write(src)
+    print(f"EXPERIMENTS.md finalized: {n_single}+{n_multi} cells")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,109 @@
+"""Paper evaluation benchmarks (one per figure).
+
+Fig 14 (update-dominated) / Fig 15 (contains-dominated): throughput of the
+batched concurrent engine vs the coarse-grained baseline (one op at a time
+== the paper's single global lock) as ops-per-batch grows (batch size is
+the TPU analogue of thread count).
+
+Fig 16 (acyclic workload, 25% AcyclicAddEdge): same comparison with the
+reachability-checked edge inserts.
+
+Beyond paper: false-abort rate vs sub-batch count K (K=1 is the
+paper-faithful relaxed spec; K=B is sequential/zero-false-positive).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dag
+from repro.configs import paper_dag as PD
+
+
+def gen_workload(rng, n_ops: int, mix: dict, key_space: int):
+    ops_list = list(mix)
+    probs = np.array([mix[o] for o in ops_list])
+    probs = probs / probs.sum()
+    op = rng.choice(np.array(ops_list, np.int32), n_ops, p=probs)
+    a = rng.integers(0, key_space, n_ops).astype(np.int32)
+    b = rng.integers(0, key_space, n_ops).astype(np.int32)
+    return jnp.asarray(op), jnp.asarray(a), jnp.asarray(b)
+
+
+def _time(fn, *args, iters: int = 5) -> float:
+    out = fn(*args)           # compile
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def _prepopulate(capacity: int, key_space: int):
+    st = dag.new_state(capacity)
+    keys = jnp.arange(0, key_space, 2, dtype=jnp.int32)
+    st, _ = dag.add_vertices(st, keys)
+    return st
+
+
+def workload_rows(mix_name: str, mix: dict, acyclic: bool = False,
+                  capacity: int = 512, key_space: int = 256,
+                  batches=(64, 256, 1024)):
+    rows = []
+    rng = np.random.default_rng(0)
+    for n_ops in batches:
+        st0 = _prepopulate(capacity, key_space)
+        op, a, b = gen_workload(rng, n_ops, mix, key_space)
+
+        batched = jax.jit(lambda s, o, x, y: dag.apply_op_batch(
+            s, o, x, y, acyclic=acyclic))
+        seq = jax.jit(lambda s, o, x, y: dag.apply_op_sequential(
+            s, o, x, y, acyclic=acyclic))
+
+        t_b = _time(batched, st0, op, a, b)
+        t_s = _time(seq, st0, op, a, b, iters=2)
+        speedup = t_s / t_b
+        rows.append((f"{mix_name}_batched_n{n_ops}",
+                     t_b * 1e6, f"ops_per_s={n_ops/t_b:.0f}"))
+        rows.append((f"{mix_name}_coarse_n{n_ops}",
+                     t_s * 1e6, f"speedup_batched={speedup:.1f}x"))
+    return rows
+
+
+def false_abort_rows(capacity: int = 256, key_space: int = 96,
+                     n_edges: int = 64):
+    """Abort-rate vs sub-batch K on a contended acyclic insert workload."""
+    from repro.core import acyclic as AC
+    rows = []
+    rng = np.random.default_rng(1)
+    st0 = dag.new_state(capacity)
+    st0, _ = dag.add_vertices(st0, jnp.arange(key_space, dtype=jnp.int32))
+    us = jnp.asarray(rng.integers(0, key_space, n_edges), jnp.int32)
+    vs = jnp.asarray(rng.integers(0, key_space, n_edges), jnp.int32)
+    # sequential ground truth (zero false positives)
+    _, ok_seq = AC.acyclic_add_edges(st0, us, vs, subbatches=n_edges)
+    n_seq = int(jnp.sum(ok_seq))
+    for k in (1, 2, 4, 16, n_edges):
+        fn = jax.jit(lambda s, u, v, k=k: AC.acyclic_add_edges(
+            s, u, v, subbatches=k))
+        t = _time(fn, st0, us, vs, iters=3)
+        _, ok = fn(st0, us, vs)
+        n_ok = int(jnp.sum(ok))
+        false_aborts = n_seq - n_ok
+        rows.append((f"acyclic_subbatch_K{k}", t * 1e6,
+                     f"accepted={n_ok}/{n_seq}_false_aborts={false_aborts}"))
+    return rows
+
+
+def all_rows():
+    rows = []
+    rows += workload_rows("fig14_update_dom", PD.UPDATE_DOMINATED)
+    rows += workload_rows("fig15_contains_dom", PD.CONTAINS_DOMINATED)
+    rows += workload_rows("fig16_acyclic", PD.ACYCLIC_MIX, acyclic=True,
+                          capacity=256, key_space=128, batches=(64, 256))
+    rows += false_abort_rows()
+    return rows

@@ -1,0 +1,110 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf iteration runner: re-lower one cell with config overrides and diff
+the roofline terms against the baseline JSON.
+
+  python -m benchmarks.perf_iter --arch qwen2-1.5b --shape train_4k \
+      --tag sp --set attn_seq_parallel=True sp_degree=16 [--profile]
+"""
+import argparse     # noqa: E402
+import ast          # noqa: E402
+import json         # noqa: E402
+import sys          # noqa: E402
+import time         # noqa: E402
+
+import jax          # noqa: E402
+
+
+def parse_overrides(pairs):
+    out = {}
+    for p in pairs or []:
+        k, v = p.split("=", 1)
+        try:
+            out[k] = ast.literal_eval(v)
+        except (ValueError, SyntaxError):
+            out[k] = v
+    return out
+
+
+def main() -> int:
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", required=True)
+    p.add_argument("--shape", required=True)
+    p.add_argument("--mesh", choices=["single", "multi"], default="single")
+    p.add_argument("--tag", required=True)
+    p.add_argument("--set", nargs="*", default=[])
+    p.add_argument("--profile", action="store_true")
+    p.add_argument("--baseline-dir", default="experiments/dryrun")
+    p.add_argument("--out", default="experiments/perf")
+    args = p.parse_args()
+
+    from repro.configs import get_bundle
+    from repro.ft.elastic import sharding_tree
+    from repro.launch.mesh import make_production_mesh
+    from repro.roofline.analysis import analyze_compiled
+    from repro.roofline.hlo_cost import top_contributors
+
+    overrides = parse_overrides(args.set)
+    mesh = make_production_mesh(multi_pod=args.mesh == "multi")
+    bundle = get_bundle(args.arch, args.shape, overrides=overrides)
+    shardings = tuple(
+        sharding_tree(mesh, ps, a)
+        for ps, a in zip(bundle.in_pspecs, bundle.args))
+    t0 = time.time()
+    with jax.set_mesh(mesh):
+        compiled = jax.jit(bundle.fn, in_shardings=shardings,
+                           donate_argnums=bundle.donate
+                           ).lower(*bundle.args).compile()
+    result = analyze_compiled(compiled, bundle.model_flops,
+                              mesh.devices.size)
+    result.update({"arch": args.arch, "shape": args.shape,
+                   "mesh": args.mesh, "tag": args.tag,
+                   "overrides": overrides,
+                   "compile_s": round(time.time() - t0, 1)})
+
+    base_path = os.path.join(
+        args.baseline_dir, f"{args.arch}__{args.shape}__{args.mesh}.json")
+    base = None
+    if os.path.exists(base_path):
+        with open(base_path) as f:
+            base = json.load(f)
+
+    def row(tag, r):
+        t = r["roofline"]
+        print(f"  {tag:12s} flops/dev={r['per_device_flops']:.3e} "
+              f"bytes/dev={r['per_device_bytes']:.3e} "
+              f"wire/dev={r['collectives']['total_wire_bytes']:.3e} | "
+              f"compute={t['compute_s']*1e3:.1f}ms "
+              f"memory={t['memory_s']*1e3:.1f}ms "
+              f"coll={t['collective_s']*1e3:.1f}ms "
+              f"dominant={t['dominant']} useful={r['useful_flops_ratio']:.3f}")
+
+    print(f"[perf] {args.arch} x {args.shape} x {args.mesh} "
+          f"tag={args.tag} overrides={overrides}")
+    if base:
+        row("baseline", base)
+    row(args.tag, result)
+    if base:
+        bb, nb = base["roofline"], result["roofline"]
+        for term in ("compute_s", "memory_s", "collective_s"):
+            delta = (nb[term] - bb[term]) / max(bb[term], 1e-12)
+            print(f"  {term}: {bb[term]*1e3:.1f} -> {nb[term]*1e3:.1f} ms "
+                  f"({delta:+.1%})")
+    if args.profile:
+        txt = compiled.as_text()
+        for metric in ("flops", "bytes"):
+            print(f"  == top {metric} ==")
+            for f, op, name, t, m in top_contributors(txt, 8, metric):
+                print(f"  {f:.3e} x{m:>7.0f} {op:14s} {name[:34]:34s} "
+                      f"{t[:44]}")
+    os.makedirs(args.out, exist_ok=True)
+    out_path = os.path.join(
+        args.out, f"{args.arch}__{args.shape}__{args.mesh}__{args.tag}.json")
+    with open(out_path, "w") as f:
+        json.dump(result, f, indent=1)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,85 @@
+"""Render EXPERIMENTS.md tables from the dry-run JSON artifacts.
+
+    PYTHONPATH=src python -m benchmarks.roofline_table [--dir experiments/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def load_cells(directory: str):
+    cells = []
+    for path in sorted(glob.glob(os.path.join(directory, "*.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}us"
+
+
+def roofline_markdown(cells, mesh: str = "single") -> str:
+    rows = [
+        "| arch | shape | kind | FLOPs/dev | bytes/dev | wire/dev | "
+        "compute | memory | collective | dominant | MODEL_FLOPS | useful |",
+        "|---|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for c in cells:
+        if c["mesh"] != mesh:
+            continue
+        r = c["roofline"]
+        rows.append(
+            f"| {c['arch']} | {c['shape']} | {c['kind']} "
+            f"| {c['per_device_flops']:.2e} | {c['per_device_bytes']:.2e} "
+            f"| {c['collectives']['total_wire_bytes']:.2e} "
+            f"| {fmt_s(r['compute_s'])} | {fmt_s(r['memory_s'])} "
+            f"| {fmt_s(r['collective_s'])} | **{r['dominant']}** "
+            f"| {c['model_flops']:.2e} | {c['useful_flops_ratio']:.3f} |")
+    return "\n".join(rows)
+
+
+def dryrun_markdown(cells) -> str:
+    rows = [
+        "| arch | shape | mesh | devices | compile | args bytes/dev | "
+        "temps bytes/dev (CPU-lowered) | collectives (count) |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for c in cells:
+        mem = c.get("memory_analysis", {})
+        args_b = mem.get("argument_size_in_bytes", 0) / c["n_devices"]
+        temp_b = mem.get("temp_size_in_bytes", 0) / c["n_devices"]
+        counts = c["collectives"].get("counts", {})
+        cstr = " ".join(f"{k}:{int(v)}" for k, v in sorted(counts.items()))
+        rows.append(
+            f"| {c['arch']} | {c['shape']} | {c['mesh']} | {c['n_devices']} "
+            f"| {c.get('compile_s', 0):.0f}s | {args_b:.2e} | {temp_b:.2e} "
+            f"| {cstr or '-'} |")
+    return "\n".join(rows)
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--dir", default="experiments/dryrun")
+    p.add_argument("--section", choices=["roofline", "dryrun", "both"],
+                   default="both")
+    args = p.parse_args()
+    cells = load_cells(args.dir)
+    if args.section in ("roofline", "both"):
+        print("## Roofline (single-pod 16x16)\n")
+        print(roofline_markdown(cells, "single"))
+        print()
+    if args.section in ("dryrun", "both"):
+        print("## Dry-run\n")
+        print(dryrun_markdown(cells))
+
+
+if __name__ == "__main__":
+    main()

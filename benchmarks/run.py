@@ -1,0 +1,29 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Run:
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    quick = "--quick" in sys.argv
+    rows = []
+
+    from benchmarks import paper_workloads, kernel_bench
+    rows += paper_workloads.all_rows()
+    if not quick:
+        rows += kernel_bench.all_rows()
+
+    from benchmarks import sgt_bench
+    rows += sgt_bench.all_rows(quick=quick)
+
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,16 @@
+"""SGT scheduler end-to-end benchmark (the paper's motivating application):
+sustained scheduling throughput and abort rate under contention."""
+from __future__ import annotations
+
+
+def all_rows(quick: bool = False):
+    from repro.launch.serve import serve_sgt
+    rows = []
+    for batch, sub in ((128, 1), (512, 1), (512, 4)):
+        out = serve_sgt(capacity=1024, batch=batch,
+                        ticks=10 if quick else 30, subbatches=sub)
+        rows.append((f"sgt_tick_b{batch}_K{sub}",
+                     1e6 / (out["ops_per_s"] / batch),
+                     f"ops_per_s={out['ops_per_s']:.0f}"
+                     f"_abort_rate={out['abort_rate']:.3f}"))
+    return rows

@@ -1,0 +1,48 @@
+"""Train NequIP on batched synthetic molecules (energy regression) —
+exercises the equivariant GNN stack end to end.
+
+    PYTHONPATH=src python examples/gnn_molecules.py --steps 30
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.graph_sampler import disjoint_union_batch
+from repro.models.gnn import nequip
+from repro.models.gnn.graphs import GraphBatch
+from repro.optim.adamw import AdamWConfig
+from repro.train.state import make_train_state
+from repro.train.step import make_train_step
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--steps", type=int, default=30)
+    args = p.parse_args()
+    cfg = nequip.NequIPConfig(name="molecules", n_layers=2, d_hidden=16,
+                              d_feat=8)
+    rng = np.random.default_rng(0)
+    raw = disjoint_union_batch(rng, n_graphs=16, nodes_per=10, edges_per=24,
+                               d_feat=8)
+    batch = GraphBatch(**{k: jnp.asarray(v) for k, v in raw.items()})
+
+    params = nequip.init_params(cfg, jax.random.key(0))
+    opt = AdamWConfig(lr=3e-3)
+    state = make_train_state(params, opt)
+    step = jax.jit(make_train_step(
+        lambda p, b: (nequip.loss(cfg, p, b), {}), opt, warmup=3,
+        total_steps=args.steps))
+    losses = []
+    for i in range(args.steps):
+        state, m = step(state, batch)
+        losses.append(float(m["loss"]))
+        if (i + 1) % 10 == 0:
+            print(f"step {i+1}: loss {losses[-1]:.4f}")
+    print(f"energy MSE {losses[0]:.4f} -> {losses[-1]:.4f}")
+    assert losses[-1] < losses[0]
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from repro.configs.registry import (  # noqa: F401
+    ARCHS, get_bundle, list_archs, list_cells, run_smoke, shapes_for,
+)

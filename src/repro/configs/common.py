@@ -1,0 +1,54 @@
+"""Config/registry plumbing: a StepBundle is everything the dry-run needs to
+lower one (arch x shape) cell — the step callable, ShapeDtypeStruct args,
+matching PartitionSpec trees, and the analytic MODEL_FLOPS."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.optim.adamw import AdamWConfig, AdamWState
+from repro.train.state import TrainState
+
+
+@dataclass
+class StepBundle:
+    fn: Callable
+    args: Tuple[Any, ...]          # ShapeDtypeStruct pytrees
+    in_pspecs: Tuple[Any, ...]     # matching PartitionSpec pytrees
+    model_flops: float             # analytic useful FLOPs of one step
+    kind: str                      # train | prefill | decode | serve | ...
+    donate: Tuple[int, ...] = ()
+    notes: str = ""
+
+
+def sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def replicated_pspecs(tree):
+    return jax.tree.map(lambda _: P(), tree)
+
+
+def train_state_shapes(init_fn, opt_cfg: AdamWConfig):
+    """ShapeDtypeStructs of a full TrainState without allocating."""
+    from repro.train.state import make_train_state
+
+    def build():
+        return make_train_state(init_fn(jax.random.key(0)), opt_cfg)
+
+    return jax.eval_shape(build)
+
+
+def train_state_pspecs(param_pspecs, opt_cfg: AdamWConfig) -> TrainState:
+    return TrainState(
+        step=P(),
+        params=param_pspecs,
+        opt=AdamWState(
+            step=P(), m=param_pspecs, v=param_pspecs,
+            master=param_pspecs if opt_cfg.use_master else None),
+        comp_residual=None,
+    )

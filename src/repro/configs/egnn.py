@@ -1,0 +1,17 @@
+"""egnn [gnn] n_layers=4 d_hidden=64 equivariance=E(n)
+[arXiv:2102.09844; paper]."""
+from repro.models.gnn.egnn import EGNNConfig
+
+ARCH_ID = "egnn"
+FAMILY = "gnn"
+WITH_POS = True
+
+CFG = EGNNConfig(name=ARCH_ID, n_layers=4, d_hidden=64)
+
+SMOKE_OVERRIDES = dict(n_layers=2, d_hidden=16)
+
+
+def model_flops(cfg, info) -> float:
+    n, e, d = info["n_nodes"], info["n_edges"], cfg.d_hidden
+    return cfg.n_layers * (6.0 * e * d * d + 6.0 * n * d * d) \
+        + 2.0 * n * info["d_feat"] * d

@@ -1,0 +1,24 @@
+"""equiformer-v2 [gnn] n_layers=12 d_hidden=128 l_max=6 m_max=2 n_heads=8
+equivariance=SO(2)-eSCN [arXiv:2306.12059; unverified]."""
+from repro.models.gnn.equiformer_v2 import EquiformerV2Config
+
+ARCH_ID = "equiformer-v2"
+FAMILY = "gnn"
+WITH_POS = True
+
+CFG = EquiformerV2Config(name=ARCH_ID, n_layers=12, d_hidden=128, l_max=6,
+                         m_max=2, n_heads=8)
+
+SMOKE_OVERRIDES = dict(n_layers=2, d_hidden=16, l_max=3, edge_chunk=64)
+
+
+def model_flops(cfg, info) -> float:
+    n, e, c = info["n_nodes"], info["n_edges"], cfg.d_hidden
+    nl = cfg.l_max + 1
+    irrep_dim = sum(2 * l + 1 for l in range(nl))
+    rotate = 2 * 2 * sum((2 * l + 1) ** 2 for l in range(nl)) * c
+    so2 = 2 * (nl * nl + sum(4 * (nl - m) ** 2
+                             for m in range(1, cfg.m_max + 1))) * c * c
+    per_node = 2 * 2 * nl * c * c + 2 * irrep_dim * c * c  # FFN + out proj
+    return cfg.n_layers * (e * (rotate + so2) + n * per_node) \
+        + 2.0 * n * info["d_feat"] * c

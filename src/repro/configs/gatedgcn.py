@@ -1,0 +1,17 @@
+"""gatedgcn [gnn] n_layers=16 d_hidden=70 aggregator=gated
+[arXiv:2003.00982; paper]."""
+from repro.models.gnn.gatedgcn import GatedGCNConfig
+
+ARCH_ID = "gatedgcn"
+FAMILY = "gnn"
+WITH_POS = False
+
+CFG = GatedGCNConfig(name=ARCH_ID, n_layers=16, d_hidden=70)
+
+SMOKE_OVERRIDES = dict(n_layers=3, d_hidden=16)
+
+
+def model_flops(cfg, info) -> float:
+    n, e, d = info["n_nodes"], info["n_edges"], cfg.d_hidden
+    return cfg.n_layers * (8.0 * e * d * d + 2.0 * n * d * d) \
+        + 2.0 * n * info["d_feat"] * d

@@ -1,0 +1,134 @@
+"""Shared GNN-architecture plumbing: the four shape cells every GNN arch
+gets.  Sizes are padded so node dims shard over "model" (16) and edge dims
+over ("pod","data") (32) — padding is masked, never computed on.
+
+Equivariant archs (egnn/nequip/equiformer) on the non-geometric shapes
+(cora/products/reddit-like) receive synthesized 3D positions as inputs —
+the compute/communication pattern the dry-run measures is identical
+(DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.common import (StepBundle, replicated_pspecs, sds,
+                                  train_state_pspecs, train_state_shapes)
+from repro.data.graph_sampler import minibatch_spec_sizes
+from repro.models.common import BATCH_AXES
+from repro.models.gnn.graphs import GraphBatch
+from repro.optim.adamw import AdamWConfig
+from repro.train.step import make_train_step
+
+
+def _pad(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult
+
+
+def gnn_shapes() -> Dict[str, dict]:
+    mb_nodes, mb_edges = minibatch_spec_sizes(1024, (15, 10))
+    return {
+        "full_graph_sm": dict(kind="train", n_nodes=_pad(2708, 32),
+                              n_edges=_pad(10556, 1024), d_feat=1433,
+                              n_classes=7, task="node"),
+        "minibatch_lg": dict(kind="train", n_nodes=_pad(mb_nodes, 32),
+                             n_edges=_pad(mb_edges, 1024), d_feat=128,
+                             n_classes=41, task="node"),
+        "ogb_products": dict(kind="train", n_nodes=_pad(2_449_029, 2048),
+                             n_edges=_pad(61_859_140, 65536), d_feat=100,
+                             n_classes=47, task="node"),
+        "molecule": dict(kind="train", n_nodes=128 * 30, n_edges=128 * 64,
+                         d_feat=16, n_classes=0, n_graphs=128,
+                         task="energy"),
+    }
+
+
+def graph_arg_shapes(info: dict, with_pos: bool) -> GraphBatch:
+    n, e = info["n_nodes"], info["n_edges"]
+    if info["task"] == "energy":
+        labels = sds((info["n_graphs"],), jnp.float32)
+        graph_id = sds((n,), jnp.int32)
+    else:
+        labels = sds((n,), jnp.int32)
+        graph_id = sds((n,), jnp.int32)
+    return GraphBatch(
+        x=sds((n, info["d_feat"]), jnp.float32),
+        pos=sds((n, 3), jnp.float32) if with_pos else None,
+        src=sds((e,), jnp.int32), dst=sds((e,), jnp.int32),
+        edge_mask=sds((e,), jnp.bool_), node_mask=sds((n,), jnp.bool_),
+        labels=labels, graph_id=graph_id)
+
+
+def graph_arg_pspecs(info: dict, with_pos: bool,
+                     edges_over_model: bool = False) -> GraphBatch:
+    edge = P(BATCH_AXES + ("model",)) if edges_over_model else P(BATCH_AXES)
+    return GraphBatch(
+        x=P("model", None),
+        pos=P("model", None) if with_pos else None,
+        src=edge, dst=edge, edge_mask=edge, node_mask=P("model"),
+        labels=P() if info["task"] == "energy" else P("model"),
+        graph_id=P("model"))
+
+
+def build_gnn_bundle(module, cfg, shape_name: str, with_pos: bool,
+                     flops_fn) -> StepBundle:
+    info = gnn_shapes()[shape_name]
+    cfg = dataclasses.replace(cfg, d_feat=info["d_feat"],
+                              n_classes=info["n_classes"])
+    opt_cfg = AdamWConfig()
+
+    def loss_fn(params, batch):
+        return module.loss(cfg, params, batch), {}
+
+    step = make_train_step(loss_fn, opt_cfg)
+    state_shapes = train_state_shapes(
+        lambda key: module.init_params(cfg, key), opt_cfg)
+    pps = replicated_pspecs(
+        jax.eval_shape(lambda: module.init_params(cfg, jax.random.key(0))))
+    eom = bool(getattr(cfg, "shard_edges_model", False))
+    return StepBundle(
+        fn=step,
+        args=(state_shapes, graph_arg_shapes(info, with_pos)),
+        in_pspecs=(train_state_pspecs(pps, opt_cfg),
+                   graph_arg_pspecs(info, with_pos, edges_over_model=eom)),
+        model_flops=3.0 * flops_fn(cfg, info),   # fwd + ~2x fwd for bwd
+        kind="train", donate=(0,))
+
+
+def random_graph_batch(rng, n, e, d_feat, n_classes, with_pos: bool,
+                       n_graphs: int = 0) -> GraphBatch:
+    """Concrete small batch for smoke tests."""
+    x = jnp.asarray(rng.standard_normal((n, d_feat)), jnp.float32)
+    pos = (jnp.asarray(rng.standard_normal((n, 3)), jnp.float32)
+           if with_pos else None)
+    src = jnp.asarray(rng.integers(0, n, e), jnp.int32)
+    dst = jnp.asarray(rng.integers(0, n, e), jnp.int32)
+    if n_graphs:
+        labels = jnp.asarray(rng.standard_normal(n_graphs), jnp.float32)
+        graph_id = jnp.asarray(rng.integers(0, n_graphs, n), jnp.int32)
+    else:
+        labels = jnp.asarray(rng.integers(0, n_classes, n), jnp.int32)
+        graph_id = jnp.zeros((n,), jnp.int32)
+    return GraphBatch(x=x, pos=pos, src=src, dst=dst,
+                      edge_mask=jnp.ones(e, bool),
+                      node_mask=jnp.ones(n, bool), labels=labels,
+                      graph_id=graph_id)
+
+
+def run_gnn_smoke(module, cfg, with_pos: bool, smoke_overrides: dict):
+    small = dataclasses.replace(cfg, d_feat=8, n_classes=4,
+                                **smoke_overrides)
+    rng = np.random.default_rng(0)
+    batch = random_graph_batch(rng, n=32, e=96, d_feat=8, n_classes=4,
+                               with_pos=with_pos)
+    params = module.init_params(small, jax.random.key(0))
+    l = module.loss(small, params, batch)
+    assert bool(jnp.isfinite(l)), small
+    g = jax.grad(lambda p: module.loss(small, p, batch))(params)
+    assert all(bool(jnp.isfinite(x).all()) for x in jax.tree.leaves(g))
+    return {"loss": float(l)}

@@ -1,0 +1,20 @@
+"""granite-moe-1b-a400m [moe] 24L d_model=1024 16H (GQA kv=8) d_ff=512
+vocab=49155, MoE 32 experts top-8 [hf:ibm-granite/granite-3.0-1b-a400m-base].
+
+EP: 32 experts over the 16-wide model axis (2 per shard); 16 heads TP-shard,
+kv (8) replicated across the model axis for train/prefill.
+"""
+from repro.models.moe import MoEConfig
+from repro.models.transformer import LMConfig
+
+ARCH_ID = "granite-moe-1b-a400m"
+FAMILY = "lm"
+
+CFG = LMConfig(
+    name=ARCH_ID,
+    n_layers=24, d_model=1024, n_heads=16, n_kv=8, d_ff=512,
+    vocab=49155, qkv_bias=False, rope_theta=10_000.0,
+    moe=MoEConfig(n_experts=32, top_k=8, d_ff=512),
+    train_microbatch=2,
+    shard_heads=True, shard_kv=False,
+)

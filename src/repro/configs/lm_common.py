@@ -1,0 +1,133 @@
+"""Shared LM-architecture plumbing: the four shape cells every LM arch gets.
+
+  train_4k     seq 4096,   global_batch 256  -> train_step (fwd+bwd+AdamW)
+  prefill_32k  seq 32768,  global_batch 32   -> prefill (logits + KV cache)
+  decode_32k   cache 32768, batch 128        -> serve_step (1 new token)
+  long_500k    cache 524288, batch 1         -> serve_step (1 new token)
+
+long_500k note (DESIGN.md §Arch-applicability): decode against a 500k cache
+is O(S) per step even for full attention; prefill at 500k (quadratic) is out
+of scope for these full-attention archs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.common import (StepBundle, sds, train_state_pspecs,
+                                  train_state_shapes)
+from repro.models import transformer as T
+from repro.models.common import BATCH_AXES
+from repro.optim.adamw import AdamWConfig
+from repro.train.step import make_lm_train_step
+
+LM_SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1),
+}
+
+BATCH_SPEC = P(BATCH_AXES, None)
+
+
+def _opt_cfg() -> AdamWConfig:
+    return AdamWConfig()
+
+
+def build_bundle(cfg: T.LMConfig, shape_name: str) -> StepBundle:
+    info = LM_SHAPES[shape_name]
+    seq, batch = info["seq"], info["batch"]
+    n_active = cfg.active_param_count()
+    pps = T.param_pspecs(cfg)
+
+    if info["kind"] == "train":
+        opt_cfg = _opt_cfg()
+        step = make_lm_train_step(cfg, opt_cfg,
+                                  microbatch=cfg.train_microbatch)
+        state_shapes = train_state_shapes(
+            lambda key: T.init_params(cfg, key), opt_cfg)
+        batch_shapes = {"tokens": sds((batch, seq), jnp.int32),
+                        "labels": sds((batch, seq), jnp.int32)}
+        return StepBundle(
+            fn=step,
+            args=(state_shapes, batch_shapes),
+            in_pspecs=(train_state_pspecs(pps, opt_cfg),
+                       {"tokens": BATCH_SPEC, "labels": BATCH_SPEC}),
+            model_flops=6.0 * n_active * batch * seq,
+            kind="train", donate=(0,))
+
+    params_shapes = jax.eval_shape(lambda: T.init_params(
+        cfg, jax.random.key(0)))
+
+    if info["kind"] == "prefill":
+        def prefill_fn(params, tokens):
+            return T.prefill(cfg, params, tokens, max_len=seq)
+
+        return StepBundle(
+            fn=prefill_fn,
+            args=(params_shapes, sds((batch, seq), jnp.int32)),
+            in_pspecs=(pps, BATCH_SPEC),
+            model_flops=2.0 * n_active * batch * seq,
+            kind="prefill")
+
+    # decode: one new token against a seq-length cache.  Batched decode
+    # shards the cache sequence dim over "model" (flash-decode); batch-1
+    # long-context decode shards it over every mesh axis.
+    cache_shapes = {
+        "k": sds((cfg.n_layers, batch, seq, cfg.n_kv, cfg.d_head), cfg.dtype),
+        "v": sds((cfg.n_layers, batch, seq, cfg.n_kv, cfg.d_head), cfg.dtype),
+    }
+    seq_axes = ("model",) if batch >= 32 else ("pod", "data", "model")
+    cache_spec = P(None, BATCH_AXES, seq_axes, None, None)
+
+    def decode_fn(params, cache, tokens, pos):
+        return T.decode_step(cfg, params, cache, tokens, pos,
+                             seq_axes=seq_axes)
+
+    return StepBundle(
+        fn=decode_fn,
+        args=(params_shapes, cache_shapes, sds((batch,), jnp.int32),
+              sds((), jnp.int32)),
+        in_pspecs=(pps, {"k": cache_spec, "v": cache_spec}, P(BATCH_AXES),
+                   P()),
+        model_flops=2.0 * n_active * batch,
+        kind="decode", donate=(1,))
+
+
+def smoke_cfg(cfg: T.LMConfig) -> T.LMConfig:
+    """Reduced same-family config for CPU smoke tests."""
+    import dataclasses
+    moe = cfg.moe
+    if moe is not None:
+        n_e = min(4, moe.n_experts)
+        moe = dataclasses.replace(moe, n_experts=n_e,
+                                  top_k=min(moe.top_k, n_e), d_ff=32)
+    return dataclasses.replace(
+        cfg, n_layers=2, d_model=64,
+        n_heads=max(2, min(4, cfg.n_heads)),
+        n_kv=2 if cfg.n_kv > 1 else 1, d_ff=128, vocab=512, moe=moe,
+        q_chunk=32, kv_chunk=32)
+
+
+def run_smoke(cfg: T.LMConfig):
+    """One reduced forward + train step on CPU; returns metrics."""
+    small = smoke_cfg(cfg)
+    params = T.init_params(small, jax.random.key(0))
+    tokens = jax.random.randint(jax.random.key(1), (2, 64), 0, small.vocab)
+    logits, _ = T.forward(small, params, tokens)
+    assert logits.shape == (2, 64, small.vocab)
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
+    opt_cfg = _opt_cfg()
+    step = make_lm_train_step(small, opt_cfg, warmup=1)
+    from repro.train.state import make_train_state
+    st = make_train_state(params, opt_cfg)
+    st, m = jax.jit(step)(st, {"tokens": tokens, "labels": tokens})
+    assert bool(jnp.isfinite(m["loss"]))
+    # decode path
+    lg, cache = T.prefill(small, params, tokens, max_len=128)
+    lg2, _ = T.decode_step(small, params, cache, tokens[:, -1],
+                           jnp.int32(64))
+    assert bool(jnp.isfinite(lg2.astype(jnp.float32)).all())
+    return {"loss": float(m["loss"])}

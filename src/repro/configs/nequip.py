@@ -1,0 +1,22 @@
+"""nequip [gnn] n_layers=5 d_hidden=32 l_max=2 n_rbf=8 cutoff=5
+equivariance=E(3)-tensor-product [arXiv:2101.03164; paper]."""
+from repro.models.gnn.nequip import NequIPConfig, _paths
+
+ARCH_ID = "nequip"
+FAMILY = "gnn"
+WITH_POS = True
+
+CFG = NequIPConfig(name=ARCH_ID, n_layers=5, d_hidden=32, l_max=2,
+                   n_rbf=8, cutoff=5.0)
+
+SMOKE_OVERRIDES = dict(n_layers=2, d_hidden=8)
+
+
+def model_flops(cfg, info) -> float:
+    n, e, c = info["n_nodes"], info["n_edges"], cfg.d_hidden
+    tp = sum((2 * lf + 1) * (2 * li + 1) * (2 * lo + 1) * c * 2
+             for lf, li, lo in _paths(cfg.l_max))
+    radial = 2 * (cfg.n_rbf * 2 * c + 2 * c * len(_paths(cfg.l_max)) * c)
+    per_node = (cfg.l_max + 1) * 2 * 2 * c * c
+    return cfg.n_layers * (e * (tp + radial) + n * per_node) \
+        + 2.0 * n * info["d_feat"] * c

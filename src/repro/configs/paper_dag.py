@@ -1,0 +1,49 @@
+"""The paper's own configurations: concurrent-DAG engine sizes + the
+workload mixes of its evaluation (section 7).
+
+Workload mixes (op-type fractions), as in the paper:
+  update-dominated : 25% AddVertex, 25% AddEdge, 10% RemoveVertex,
+                     10% RemoveEdge, 15% ContainsVertex, 15% ContainsEdge
+  contains-dominated: 7/7/3/3/40/40
+  acyclic          : 25% AcyclicAddEdge + reads (Fig 16 uses 25% acyclic
+                     add-edge against the incremental-cycle-detect baseline)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict
+
+from repro.core import dag
+
+ARCH_ID = "paper-dag"
+
+UPDATE_DOMINATED: Dict[int, float] = {
+    dag.ADD_VERTEX: 0.25, dag.ADD_EDGE: 0.25, dag.REMOVE_VERTEX: 0.10,
+    dag.REMOVE_EDGE: 0.10, dag.CONTAINS_VERTEX: 0.15,
+    dag.CONTAINS_EDGE: 0.15,
+}
+
+CONTAINS_DOMINATED: Dict[int, float] = {
+    dag.ADD_VERTEX: 0.07, dag.ADD_EDGE: 0.07, dag.REMOVE_VERTEX: 0.03,
+    dag.REMOVE_EDGE: 0.03, dag.CONTAINS_VERTEX: 0.40,
+    dag.CONTAINS_EDGE: 0.40,
+}
+
+ACYCLIC_MIX: Dict[int, float] = {
+    dag.ADD_VERTEX: 0.25, dag.ADD_EDGE: 0.25, dag.REMOVE_VERTEX: 0.10,
+    dag.REMOVE_EDGE: 0.10, dag.CONTAINS_VERTEX: 0.15,
+    dag.CONTAINS_EDGE: 0.15,
+}
+
+
+@dataclass(frozen=True)
+class DagEngineConfig:
+    capacity: int = 1024        # live-vertex slots (paper: live txns)
+    batch: int = 256            # ops per tick == concurrency degree
+    key_space: int = 512        # key draw range (contention knob)
+    subbatches: int = 1         # 1 == paper-faithful max concurrency
+
+
+SMALL = DagEngineConfig(capacity=256, batch=64, key_space=128)
+DEFAULT = DagEngineConfig()
+LARGE = DagEngineConfig(capacity=4096, batch=1024, key_space=2048)

@@ -1,0 +1,19 @@
+"""phi3.5-moe-42b-a6.6b [moe] 32L d_model=4096 32H (GQA kv=8) d_ff=6400
+vocab=32064, MoE 16 experts top-2 [hf:microsoft/Phi-3.5-MoE-instruct; hf].
+
+EP: 16 experts == 1 per model-axis shard; 32 heads TP-shard, kv replicated.
+"""
+from repro.models.moe import MoEConfig
+from repro.models.transformer import LMConfig
+
+ARCH_ID = "phi3.5-moe-42b-a6.6b"
+FAMILY = "lm"
+
+CFG = LMConfig(
+    name=ARCH_ID,
+    n_layers=32, d_model=4096, n_heads=32, n_kv=8, d_ff=6400,
+    vocab=32064, qkv_bias=False, rope_theta=10_000.0,
+    moe=MoEConfig(n_experts=16, top_k=2, d_ff=6400),
+    train_microbatch=4,
+    shard_heads=True, shard_kv=False,
+)

@@ -1,0 +1,18 @@
+"""qwen2.5-32b [dense] 64L d_model=5120 40H (GQA kv=8) d_ff=27648
+vocab=152064 — GQA, QKV bias [hf:Qwen/Qwen2.5-32B; hf].
+
+40 heads don't divide the 16-wide model axis -> d_ff/vocab TP, FSDP over
+"data" carries the 32B parameters.
+"""
+from repro.models.transformer import LMConfig
+
+ARCH_ID = "qwen2.5-32b"
+FAMILY = "lm"
+
+CFG = LMConfig(
+    name=ARCH_ID,
+    n_layers=64, d_model=5120, n_heads=40, n_kv=8, d_ff=27648,
+    vocab=152064, qkv_bias=True, rope_theta=1_000_000.0,
+    train_microbatch=8,
+    shard_heads=False, shard_kv=False,
+)

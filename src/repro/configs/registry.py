@@ -1,0 +1,87 @@
+"""Architecture registry: ``--arch <id>`` selection for every launcher.
+
+10 assigned architectures x their own shape sets = 40 dry-run cells, plus
+the paper's own DAG-engine configs (``paper-dag``) as a bonus arch.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+from repro.configs import (egnn, equiformer_v2, gatedgcn, granite_moe_1b,
+                           nequip, phi3_5_moe, qwen2_1_5b, qwen2_5_32b,
+                           stablelm_1_6b, xdeepfm)
+from repro.configs import gnn_common, lm_common
+from repro.configs.common import StepBundle
+
+_LM = {m.ARCH_ID: m for m in (qwen2_1_5b, qwen2_5_32b, stablelm_1_6b,
+                              granite_moe_1b, phi3_5_moe)}
+_GNN = {m.ARCH_ID: m for m in (equiformer_v2, gatedgcn, egnn, nequip)}
+_REC = {xdeepfm.ARCH_ID: xdeepfm}
+
+ARCHS: Dict[str, str] = {**{k: "lm" for k in _LM},
+                         **{k: "gnn" for k in _GNN},
+                         **{k: "recsys" for k in _REC}}
+
+_GNN_MODEL_MODULES = {
+    "gatedgcn": "repro.models.gnn.gatedgcn",
+    "egnn": "repro.models.gnn.egnn",
+    "nequip": "repro.models.gnn.nequip",
+    "equiformer-v2": "repro.models.gnn.equiformer_v2",
+}
+
+
+def _gnn_model_module(arch: str):
+    import importlib
+    return importlib.import_module(_GNN_MODEL_MODULES[arch])
+
+
+def list_archs() -> List[str]:
+    return list(ARCHS)
+
+
+def shapes_for(arch: str) -> List[str]:
+    fam = ARCHS[arch]
+    if fam == "lm":
+        return list(lm_common.LM_SHAPES)
+    if fam == "gnn":
+        return list(gnn_common.gnn_shapes())
+    return list(xdeepfm.SHAPES)
+
+
+def list_cells() -> List[Tuple[str, str]]:
+    return [(a, s) for a in ARCHS for s in shapes_for(a)]
+
+
+def get_bundle(arch: str, shape: str, overrides: dict | None = None
+               ) -> StepBundle:
+    """overrides: dataclasses.replace kwargs applied to the arch config
+    (the §Perf hillclimb hook)."""
+    import dataclasses
+    fam = ARCHS[arch]
+    if fam == "lm":
+        cfg = _LM[arch].CFG
+        if overrides:
+            cfg = dataclasses.replace(cfg, **overrides)
+        return lm_common.build_bundle(cfg, shape)
+    if fam == "gnn":
+        mod = _GNN[arch]
+        cfg = mod.CFG
+        if overrides:
+            cfg = dataclasses.replace(cfg, **overrides)
+        return gnn_common.build_gnn_bundle(
+            _gnn_model_module(arch), cfg, shape, mod.WITH_POS,
+            mod.model_flops)
+    assert not overrides, "xdeepfm overrides not supported"
+    return xdeepfm.build_bundle(shape)
+
+
+def run_smoke(arch: str) -> dict:
+    fam = ARCHS[arch]
+    if fam == "lm":
+        return lm_common.run_smoke(_LM[arch].CFG)
+    if fam == "gnn":
+        mod = _GNN[arch]
+        return gnn_common.run_gnn_smoke(
+            _gnn_model_module(arch), mod.CFG, mod.WITH_POS,
+            mod.SMOKE_OVERRIDES)
+    return xdeepfm.run_smoke()

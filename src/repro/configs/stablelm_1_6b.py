@@ -1,0 +1,17 @@
+"""stablelm-1.6b [dense] 24L d_model=2048 32H (GQA kv=32) d_ff=5632
+vocab=100352 [hf:stabilityai/stablelm-2-1_6b; unverified].
+
+32 heads == 2 per model-axis shard: full head TP (q and kv).
+"""
+from repro.models.transformer import LMConfig
+
+ARCH_ID = "stablelm-1.6b"
+FAMILY = "lm"
+
+CFG = LMConfig(
+    name=ARCH_ID,
+    n_layers=24, d_model=2048, n_heads=32, n_kv=32, d_ff=5632,
+    vocab=100352, qkv_bias=False, rope_theta=10_000.0,
+    train_microbatch=2,
+    shard_heads=True, shard_kv=True,
+)

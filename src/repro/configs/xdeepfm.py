@@ -1,0 +1,125 @@
+"""xdeepfm [recsys] n_sparse=39 embed_dim=10 cin_layers=200-200-200
+mlp=400-400 interaction=cin [arXiv:1803.05170; paper].
+
+Criteo-like power-law field vocabularies (~33M total rows, matching the
+Criteo-Kaggle scale); tables row-shard over "model".
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.common import (StepBundle, sds, train_state_pspecs,
+                                  train_state_shapes)
+from repro.models.common import BATCH_AXES
+from repro.models.recsys import xdeepfm as X
+from repro.optim.adamw import AdamWConfig
+from repro.train.step import make_train_step
+
+ARCH_ID = "xdeepfm"
+FAMILY = "recsys"
+
+CFG = X.XDeepFMConfig(
+    name=ARCH_ID, n_fields=39, embed_dim=10, cin_layers=(200, 200, 200),
+    mlp_dims=(400, 400),
+    vocab_sizes=X.default_vocab_sizes(39, total=33_000_000),
+    n_items=1_000_000, retrieval_dim=64)
+
+SHAPES = {
+    "train_batch": dict(kind="train", batch=65536),
+    "serve_p99": dict(kind="serve", batch=512),
+    "serve_bulk": dict(kind="serve", batch=262144),
+    "retrieval_cand": dict(kind="retrieval", batch=1,
+                           n_candidates=1_000_000),
+}
+
+
+def _param_pspecs(params_shapes):
+    pps = jax.tree.map(lambda _: P(), params_shapes)
+    pps["table"] = P("model", None)
+    pps["linear_table"] = P("model", None)
+    pps["item_table"] = P("model", None)
+    return pps
+
+
+def _fwd_flops(cfg: X.XDeepFMConfig, batch: int) -> float:
+    f, d = cfg.n_fields, cfg.embed_dim
+    cin = 0.0
+    h_prev = f
+    for h in cfg.cin_layers:
+        cin += 2.0 * batch * h * h_prev * f * d
+        h_prev = h
+    dims = [f * d, *cfg.mlp_dims, 1]
+    dnn = sum(2.0 * batch * dims[i] * dims[i + 1] for i in range(len(dims) - 1))
+    return cin + dnn
+
+
+def build_bundle(shape_name: str) -> StepBundle:
+    info = SHAPES[shape_name]
+    b = info["batch"]
+    cfg = CFG
+    params_shapes = jax.eval_shape(
+        lambda: X.init_params(cfg, jax.random.key(0)))
+    pps = _param_pspecs(params_shapes)
+    ids_shape = sds((b, cfg.n_fields), jnp.int32)
+    ids_spec = P(BATCH_AXES, None)
+
+    if info["kind"] == "train":
+        opt_cfg = AdamWConfig()
+
+        def loss_fn(params, batch):
+            return X.loss(cfg, params, batch), {}
+
+        step = make_train_step(loss_fn, opt_cfg)
+        state_shapes = train_state_shapes(
+            lambda key: X.init_params(cfg, key), opt_cfg)
+        batch_shapes = {"ids": ids_shape, "labels": sds((b,), jnp.int32)}
+        return StepBundle(
+            fn=step, args=(state_shapes, batch_shapes),
+            in_pspecs=(train_state_pspecs(pps, opt_cfg),
+                       {"ids": ids_spec, "labels": P(BATCH_AXES)}),
+            model_flops=3.0 * _fwd_flops(cfg, b), kind="train", donate=(0,))
+
+    if info["kind"] == "serve":
+        def serve_fn(params, ids):
+            return X.forward(cfg, params, ids)
+
+        return StepBundle(
+            fn=serve_fn, args=(params_shapes, ids_shape),
+            in_pspecs=(pps, ids_spec),
+            model_flops=_fwd_flops(cfg, b), kind="serve")
+
+    nc = info["n_candidates"]
+
+    def retr_fn(params, ids, cand):
+        return X.retrieval_score(cfg, params, ids, cand)
+
+    return StepBundle(
+        fn=retr_fn,
+        args=(params_shapes, sds((1, cfg.n_fields), jnp.int32),
+              sds((nc,), jnp.int32)),
+        in_pspecs=(pps, P(None, None), P(BATCH_AXES)),
+        model_flops=_fwd_flops(cfg, 1) + 2.0 * nc * cfg.retrieval_dim,
+        kind="retrieval")
+
+
+def run_smoke():
+    cfg = dataclasses.replace(
+        CFG, n_fields=6, embed_dim=8, cin_layers=(16, 16), mlp_dims=(32,),
+        vocab_sizes=(16, 32, 8, 64, 16, 8), n_items=256, retrieval_dim=16)
+    params = X.init_params(cfg, jax.random.key(0))
+    rng = np.random.default_rng(0)
+    ids = jnp.asarray(np.stack([rng.integers(0, v, 8)
+                                for v in cfg.vocab_sizes], 1), jnp.int32)
+    batch = {"ids": ids,
+             "labels": jnp.asarray(rng.integers(0, 2, 8), jnp.int32)}
+    l = X.loss(cfg, params, batch)
+    assert bool(jnp.isfinite(l))
+    s = X.retrieval_score(cfg, params, ids[:1],
+                          jnp.arange(256, dtype=jnp.int32))
+    assert bool(jnp.isfinite(s).all())
+    return {"loss": float(l)}

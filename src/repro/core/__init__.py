@@ -1,0 +1,24 @@
+"""Core library: the paper's non-blocking concurrent DAG, TPU-native.
+
+Public API:
+  DagState / new_state / add_vertices / remove_vertices / add_edges /
+  remove_edges / contains_vertices / contains_edges / apply_op_batch
+  acyclic_add_edges (relaxed acyclic insert, the paper's AcyclicAddEdge)
+  path_exists / reach_sets / transitive_closure / is_acyclic
+  SgtState / new_scheduler / begin / conflicts / finish (SGT application)
+"""
+from repro.core.dag import (  # noqa: F401
+    DagState, new_state, add_vertices, remove_vertices, add_edges,
+    remove_edges, contains_vertices, contains_edges, apply_op_batch,
+    apply_op_sequential, live_vertex_count, edge_count,
+    REMOVE_VERTEX, ADD_VERTEX, REMOVE_EDGE, ADD_EDGE,
+    CONTAINS_VERTEX, CONTAINS_EDGE,
+)
+from repro.core.acyclic import acyclic_add_edges  # noqa: F401
+from repro.core.reachability import (  # noqa: F401
+    path_exists, reach_sets, transitive_closure, is_acyclic,
+    bool_matmul_packed, expand_frontier,
+)
+from repro.core.sgt import (  # noqa: F401
+    SgtState, new_scheduler, begin, conflicts, finish, schedule_tick,
+)

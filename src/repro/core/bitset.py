@@ -1,0 +1,117 @@
+"""Bit-packed boolean matrices (the TPU-native adjacency representation).
+
+The paper's adjacency lazy-lists become a capacity-bounded bit matrix
+``uint32[C, C/32]``.  Logical+physical deletion collapse to bit clears, and
+reachability becomes boolean matrix products over packed words.
+
+All functions are pure and jit-friendly; capacities must be multiples of 32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+WORD = 32
+
+
+def n_words(capacity: int) -> int:
+    if capacity % WORD != 0:
+        raise ValueError(f"capacity must be a multiple of {WORD}, got {capacity}")
+    return capacity // WORD
+
+
+def pack_bits(bits: jax.Array) -> jax.Array:
+    """bool[..., C] -> uint32[..., C/32] (little-endian bit order within a word)."""
+    *lead, c = bits.shape
+    w = n_words(c)
+    weights = (jnp.uint32(1) << jnp.arange(WORD, dtype=jnp.uint32))
+    grouped = bits.reshape(*lead, w, WORD)
+    return jnp.sum(grouped * weights, axis=-1, dtype=jnp.uint32)
+
+
+def unpack_bits(packed: jax.Array) -> jax.Array:
+    """uint32[..., W] -> bool[..., W*32]."""
+    *lead, w = packed.shape
+    shifts = jnp.arange(WORD, dtype=jnp.uint32)
+    bits = (packed[..., None] >> shifts) & jnp.uint32(1)
+    return bits.astype(bool).reshape(*lead, w * WORD)
+
+
+def bit_get(packed: jax.Array, rows: jax.Array, cols: jax.Array) -> jax.Array:
+    """Read bits at (rows[b], cols[b]) from packed[C, W] -> bool[B]."""
+    word = cols >> 5
+    shift = (cols & 31).astype(jnp.uint32)
+    return ((packed[rows, word] >> shift) & jnp.uint32(1)).astype(bool)
+
+
+def onehot_rows(slots: jax.Array, capacity: int) -> jax.Array:
+    """slots int32[B] -> packed one-hot uint32[B, W]."""
+    w = n_words(capacity)
+    word = slots >> 5
+    shift = (slots & 31).astype(jnp.uint32)
+    mask = jnp.uint32(1) << shift
+    base = jnp.zeros((slots.shape[0], w), jnp.uint32)
+    return base.at[jnp.arange(slots.shape[0]), word].set(mask)
+
+
+def _first_occurrence(key: jax.Array) -> jax.Array:
+    """bool[B]: True at the first occurrence of each distinct key value."""
+    order = jnp.argsort(key)
+    sk = key[order]
+    first_sorted = jnp.concatenate(
+        [jnp.ones((1,), bool), sk[1:] != sk[:-1]])
+    return jnp.zeros_like(first_sorted).at[order].set(first_sorted)
+
+
+def _dedupe_enabled(rows: jax.Array, cols: jax.Array, enable: jax.Array,
+                    capacity: int) -> jax.Array:
+    """First-occurrence mask over enabled (row, col) pairs.
+
+    Disabled entries get unique sentinel keys so they never suppress an
+    enabled duplicate.
+    """
+    b = rows.shape[0]
+    key = rows * capacity + cols
+    sentinel = capacity * capacity + jnp.arange(b, dtype=key.dtype)
+    key = jnp.where(enable, key, sentinel)
+    return _first_occurrence(key)
+
+
+def scatter_set_bits(packed: jax.Array, rows: jax.Array, cols: jax.Array,
+                     enable: jax.Array) -> jax.Array:
+    """Set bits (rows[b], cols[b]) where enable[b]; duplicate-safe."""
+    capacity = packed.shape[0]
+    word = cols >> 5
+    shift = (cols & 31).astype(jnp.uint32)
+    mask = jnp.uint32(1) << shift
+    existing = (packed[rows, word] >> shift) & jnp.uint32(1)
+    first = _dedupe_enabled(rows, cols, enable, capacity)
+    do = enable & first & (existing == 0)
+    tgt_row = jnp.where(do, rows, capacity)  # OOB rows are dropped
+    return packed.at[tgt_row, word].add(jnp.where(do, mask, 0), mode="drop")
+
+
+def scatter_clear_bits(packed: jax.Array, rows: jax.Array, cols: jax.Array,
+                       enable: jax.Array) -> jax.Array:
+    """Clear bits (rows[b], cols[b]) where enable[b]; duplicate-safe."""
+    capacity = packed.shape[0]
+    word = cols >> 5
+    shift = (cols & 31).astype(jnp.uint32)
+    mask = jnp.uint32(1) << shift
+    existing = (packed[rows, word] >> shift) & jnp.uint32(1)
+    first = _dedupe_enabled(rows, cols, enable, capacity)
+    do = enable & first & (existing == 1)
+    tgt_row = jnp.where(do, rows, capacity)
+    # the bit is known-set, so subtracting the mask flips exactly that bit
+    neg = jnp.zeros_like(mask) - mask
+    return packed.at[tgt_row, word].add(jnp.where(do, neg, 0), mode="drop")
+
+
+def popcount(packed: jax.Array) -> jax.Array:
+    """Number of set bits (summed over the last axis)."""
+    x = packed
+    x = x - ((x >> 1) & jnp.uint32(0x55555555))
+    x = (x & jnp.uint32(0x33333333)) + ((x >> 2) & jnp.uint32(0x33333333))
+    x = (x + (x >> 4)) & jnp.uint32(0x0F0F0F0F)
+    return jnp.sum((x * jnp.uint32(0x01010101)) >> 24, axis=-1,
+                   dtype=jnp.int32)

@@ -1,0 +1,212 @@
+"""Batched non-blocking concurrent DAG — the paper's object, TPU-native.
+
+A batch of operation requests (one per logical "thread") is applied in a
+single data-parallel step.  Every operation in the batch completes in a
+bounded number of dataflow steps (wait-free by construction); the result is
+a deterministic linearization (phase order, then batch-index order) that is
+property-tested against a sequential oracle (`core/oracle.py`).
+
+State layout (capacity-bounded slab, slots recycled via a free list):
+  keys  : int32[C]    key stored in each slot (EMPTY_KEY when free)
+  alive : bool[C]     slot liveness (logical deletion == clearing this)
+  adj   : uint32[C,W] bit-packed adjacency rows (out-edges over slots)
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitset
+
+EMPTY_KEY = jnp.int32(-1)
+
+# op codes for mixed workloads (phase order == linearization order)
+REMOVE_VERTEX = 0
+ADD_VERTEX = 1
+REMOVE_EDGE = 2
+ADD_EDGE = 3
+CONTAINS_VERTEX = 4
+CONTAINS_EDGE = 5
+
+
+class DagState(NamedTuple):
+    keys: jax.Array       # int32[C]
+    alive: jax.Array      # bool[C]
+    adj: jax.Array        # uint32[C, W]
+    n_overflow: jax.Array  # int32 scalar: vertex adds dropped for capacity
+
+    @property
+    def capacity(self) -> int:
+        return self.keys.shape[0]
+
+
+def new_state(capacity: int) -> DagState:
+    w = bitset.n_words(capacity)
+    return DagState(
+        keys=jnp.full((capacity,), EMPTY_KEY, jnp.int32),
+        alive=jnp.zeros((capacity,), bool),
+        adj=jnp.zeros((capacity, w), jnp.uint32),
+        n_overflow=jnp.zeros((), jnp.int32),
+    )
+
+
+def lookup_slots(state: DagState, keys: jax.Array):
+    """keys int32[B] -> (slot int32[B], found bool[B])."""
+    m = state.alive[None, :] & (state.keys[None, :] == keys[:, None])
+    found = m.any(axis=1)
+    slot = jnp.argmax(m, axis=1).astype(jnp.int32)
+    return slot, found
+
+
+def _valid(valid, like):
+    if valid is None:
+        return jnp.ones(like.shape[0], bool)
+    return valid
+
+
+# ---------------------------------------------------------------- vertices
+
+def add_vertices(state: DagState, keys: jax.Array, valid=None):
+    """AddVertex batch. Returns (state, ok[B]).
+
+    Per the sequential spec AddVertex(u) returns true (unique keys assumed);
+    re-adding a live key is a no-op returning true.  Capacity overflow yields
+    ok=False and bumps ``n_overflow`` (host controller contract).
+    """
+    valid = _valid(valid, keys)
+    c = state.capacity
+    _, exists = lookup_slots(state, keys)
+    first = bitset._first_occurrence(
+        jnp.where(valid & ~exists, keys, -jnp.arange(keys.shape[0]) - 2))
+    need = valid & ~exists & first
+    free = ~state.alive
+    free_rank = jnp.cumsum(free) - 1
+    slot_for_rank = jnp.zeros((c,), jnp.int32).at[
+        jnp.where(free, free_rank, c)
+    ].set(jnp.arange(c, dtype=jnp.int32), mode="drop")
+    n_free = jnp.sum(free)
+    need_rank = jnp.cumsum(need) - 1
+    overflow = need & (need_rank >= n_free)
+    place = need & ~overflow
+    tgt = slot_for_rank[jnp.where(place, need_rank, 0)]
+    tgt_safe = jnp.where(place, tgt, c)
+    keys_new = state.keys.at[tgt_safe].set(keys, mode="drop")
+    alive_new = state.alive.at[tgt_safe].set(True, mode="drop")
+    state = state._replace(
+        keys=keys_new, alive=alive_new,
+        n_overflow=state.n_overflow + jnp.sum(overflow, dtype=jnp.int32))
+    # ok == "key is live in the post-state" (covers pre-existing keys,
+    # placements, and in-batch duplicates; overflowed keys report False)
+    _, exists_after = lookup_slots(state, keys)
+    return state, valid & exists_after
+
+
+def remove_vertices(state: DagState, keys: jax.Array, valid=None):
+    """RemoveVertex batch: logical+physical removal, plus the paper's
+    RemoveIncomingEdges as a single masked column clear. Returns (state, ok)."""
+    valid = _valid(valid, keys)
+    c = state.capacity
+    slot, found = lookup_slots(state, keys)
+    first = bitset._first_occurrence(
+        jnp.where(valid & found, keys, -jnp.arange(keys.shape[0]) - 2))
+    rem = valid & found & first
+    tgt = jnp.where(rem, slot, c)
+    alive_new = state.alive.at[tgt].set(False, mode="drop")
+    keys_new = state.keys.at[tgt].set(EMPTY_KEY, mode="drop")
+    removed_row = jnp.zeros((c,), bool).at[tgt].set(True, mode="drop")
+    colmask = bitset.pack_bits(removed_row)  # (W,)
+    adj_new = jnp.where(removed_row[:, None], jnp.uint32(0), state.adj)
+    adj_new = adj_new & ~colmask[None, :]
+    state = state._replace(keys=keys_new, alive=alive_new, adj=adj_new)
+    return state, rem
+
+
+# ------------------------------------------------------------------- edges
+
+def add_edges(state: DagState, us: jax.Array, vs: jax.Array, valid=None):
+    """Plain AddEdge batch (no acyclicity): ok iff both endpoints live."""
+    valid = _valid(valid, us)
+    u_slot, u_found = lookup_slots(state, us)
+    v_slot, v_found = lookup_slots(state, vs)
+    ok = valid & u_found & v_found
+    adj = bitset.scatter_set_bits(state.adj, u_slot, v_slot, ok)
+    return state._replace(adj=adj), ok
+
+
+def remove_edges(state: DagState, us: jax.Array, vs: jax.Array, valid=None):
+    valid = _valid(valid, us)
+    u_slot, u_found = lookup_slots(state, us)
+    v_slot, v_found = lookup_slots(state, vs)
+    ok = valid & u_found & v_found
+    adj = bitset.scatter_clear_bits(state.adj, u_slot, v_slot, ok)
+    return state._replace(adj=adj), ok
+
+
+# ---------------------------------------------------- wait-free reads
+
+def contains_vertices(state: DagState, keys: jax.Array) -> jax.Array:
+    _, found = lookup_slots(state, keys)
+    return found
+
+
+def contains_edges(state: DagState, us: jax.Array, vs: jax.Array) -> jax.Array:
+    u_slot, u_found = lookup_slots(state, us)
+    v_slot, v_found = lookup_slots(state, vs)
+    return u_found & v_found & bitset.bit_get(state.adj, u_slot, v_slot)
+
+
+# ------------------------------------------------- mixed-op workloads
+
+def apply_op_batch(state: DagState, op: jax.Array, a: jax.Array, b: jax.Array,
+                   acyclic: bool = False, subbatches: int = 1):
+    """Apply a mixed batch with the documented linearization:
+    RemoveVertex -> AddVertex -> RemoveEdge -> AddEdge -> reads.
+
+    Returns (state, ok[B]).
+    """
+    from repro.core import acyclic as acyclic_mod
+
+    res = jnp.zeros(op.shape[0], bool)
+    state, r = remove_vertices(state, a, valid=op == REMOVE_VERTEX)
+    res = jnp.where(op == REMOVE_VERTEX, r, res)
+    state, r = add_vertices(state, a, valid=op == ADD_VERTEX)
+    res = jnp.where(op == ADD_VERTEX, r, res)
+    state, r = remove_edges(state, a, b, valid=op == REMOVE_EDGE)
+    res = jnp.where(op == REMOVE_EDGE, r, res)
+    if acyclic:
+        state, r = acyclic_mod.acyclic_add_edges(
+            state, a, b, valid=op == ADD_EDGE, subbatches=subbatches)
+    else:
+        state, r = add_edges(state, a, b, valid=op == ADD_EDGE)
+    res = jnp.where(op == ADD_EDGE, r, res)
+    r = contains_vertices(state, a)
+    res = jnp.where(op == CONTAINS_VERTEX, r, res)
+    r = contains_edges(state, a, b)
+    res = jnp.where(op == CONTAINS_EDGE, r, res)
+    return state, res
+
+
+def apply_op_sequential(state: DagState, op: jax.Array, a: jax.Array,
+                        b: jax.Array, acyclic: bool = False):
+    """Coarse-grained baseline: one op at a time (the moral equivalent of the
+    paper's single global lock).  Same linearization as a size-1 batch chain.
+    """
+    def body(st, xs):
+        o, aa, bb = xs
+        st, r = apply_op_batch(st, o[None], aa[None], bb[None],
+                               acyclic=acyclic, subbatches=1)
+        return st, r[0]
+
+    return jax.lax.scan(body, state, (op, a, b))
+
+
+# ------------------------------------------------------------- invariants
+
+def live_vertex_count(state: DagState) -> jax.Array:
+    return jnp.sum(state.alive, dtype=jnp.int32)
+
+
+def edge_count(state: DagState) -> jax.Array:
+    return jnp.sum(bitset.popcount(state.adj), dtype=jnp.int32)

@@ -1,0 +1,116 @@
+"""Host-side graph generation + a real neighbor sampler (GraphSAGE-style).
+
+``minibatch_lg`` needs fanout sampling from a large CSR graph; the sampler
+produces fixed-shape padded subgraphs (static shapes for jit) in the
+disjoint-union layout `models/gnn/graphs.py` consumes.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Sequence
+
+import numpy as np
+
+
+class CSRGraph(NamedTuple):
+    indptr: np.ndarray   # (N+1,)
+    indices: np.ndarray  # (E,)
+    n_nodes: int
+
+
+def random_power_law_graph(n_nodes: int, avg_degree: int,
+                           seed: int = 0) -> CSRGraph:
+    """Preferential-attachment-flavoured random graph in CSR form."""
+    rng = np.random.default_rng(seed)
+    e = n_nodes * avg_degree
+    # power-law-ish target selection via Zipf over node ids
+    dst = (rng.zipf(1.5, e) % n_nodes).astype(np.int64)
+    src = rng.integers(0, n_nodes, e, dtype=np.int64)
+    order = np.argsort(src, kind="stable")
+    src, dst = src[order], dst[order]
+    indptr = np.zeros(n_nodes + 1, np.int64)
+    np.add.at(indptr, src + 1, 1)
+    indptr = np.cumsum(indptr)
+    return CSRGraph(indptr, dst.astype(np.int32), n_nodes)
+
+
+def sample_fanout(graph: CSRGraph, roots: np.ndarray,
+                  fanouts: Sequence[int], rng: np.random.Generator):
+    """k-hop fanout sampling. Returns (nodes, src, dst, edge_mask) padded to
+    the static worst-case sizes implied by len(roots) x fanouts."""
+    max_nodes = len(roots)
+    max_edges = 0
+    cur = len(roots)
+    for f in fanouts:
+        max_edges += cur * f
+        cur = cur * f
+        max_nodes += cur
+
+    nodes = [roots.astype(np.int64)]
+    node_pos = {int(r): i for i, r in enumerate(roots)}
+    src_l, dst_l = [], []
+    frontier = roots.astype(np.int64)
+    for f in fanouts:
+        nxt = []
+        for u in frontier:
+            lo, hi = graph.indptr[u], graph.indptr[u + 1]
+            deg = hi - lo
+            if deg == 0:
+                continue
+            picks = graph.indices[lo + rng.integers(0, deg, f)]
+            for v in picks:
+                v = int(v)
+                if v not in node_pos:
+                    node_pos[v] = len(node_pos)
+                    nodes.append(np.array([v]))
+                    nxt.append(v)
+                # message flows neighbor -> center
+                src_l.append(node_pos[v])
+                dst_l.append(node_pos[int(u)])
+        frontier = np.asarray(nxt, np.int64) if nxt else np.empty(0, np.int64)
+
+    all_nodes = np.concatenate(nodes) if nodes else np.empty(0, np.int64)
+    n_real = len(all_nodes)
+    e_real = len(src_l)
+    nodes_pad = np.zeros(max_nodes, np.int64)
+    nodes_pad[:n_real] = all_nodes
+    src = np.zeros(max_edges, np.int32)
+    dst = np.zeros(max_edges, np.int32)
+    src[:e_real] = src_l
+    dst[:e_real] = dst_l
+    edge_mask = np.zeros(max_edges, bool)
+    edge_mask[:e_real] = True
+    node_mask = np.zeros(max_nodes, bool)
+    node_mask[:n_real] = True
+    return nodes_pad, src, dst, edge_mask, node_mask
+
+
+def minibatch_spec_sizes(batch_nodes: int, fanouts: Sequence[int]):
+    """Static (n_nodes, n_edges) of the padded sampled subgraph."""
+    max_nodes, max_edges, cur = batch_nodes, 0, batch_nodes
+    for f in fanouts:
+        max_edges += cur * f
+        cur = cur * f
+        max_nodes += cur
+    return max_nodes, max_edges
+
+
+def disjoint_union_batch(rng: np.random.Generator, n_graphs: int,
+                         nodes_per: int, edges_per: int, d_feat: int):
+    """Batched small molecules as one flat disjoint graph (PyG-style)."""
+    n = n_graphs * nodes_per
+    e = n_graphs * edges_per
+    x = rng.standard_normal((n, d_feat)).astype(np.float32)
+    pos = rng.standard_normal((n, 3)).astype(np.float32)
+    src = np.empty(e, np.int32)
+    dst = np.empty(e, np.int32)
+    for g in range(n_graphs):
+        off = g * nodes_per
+        src[g * edges_per:(g + 1) * edges_per] = \
+            off + rng.integers(0, nodes_per, edges_per)
+        dst[g * edges_per:(g + 1) * edges_per] = \
+            off + rng.integers(0, nodes_per, edges_per)
+    graph_id = np.repeat(np.arange(n_graphs, dtype=np.int32), nodes_per)
+    labels = rng.standard_normal(n_graphs).astype(np.float32)
+    return dict(x=x, pos=pos, src=src, dst=dst,
+                edge_mask=np.ones(e, bool), node_mask=np.ones(n, bool),
+                graph_id=graph_id, labels=labels)

@@ -1,0 +1,153 @@
+"""Fault-tolerant checkpointing: atomic, optionally async, reshard-on-restore.
+
+Layout: <dir>/step_<N>/ { manifest.json, arrays.npz }.
+Atomicity: write into ``step_<N>.tmp`` then ``os.rename`` (POSIX-atomic), so
+a crash mid-write never corrupts the latest checkpoint — restart scans for
+the highest complete step.  Async mode hands the (host-copied) tree to a
+writer thread so the train loop doesn't block on disk.
+
+Restore takes a target sharding tree (or None for single-device) so a
+checkpoint taken on one mesh restores onto another — the elastic-scaling
+path (`ft/elastic.py`).
+"""
+from __future__ import annotations
+
+import json
+import os
+import queue
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def save_checkpoint(directory: str, step: int, tree: Any) -> str:
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    os.makedirs(tmp, exist_ok=True)
+    leaves, treedef = _flatten(tree)
+
+    def to_np(x):
+        a = np.asarray(x)
+        # npz can't represent ml_dtypes (bfloat16 etc.); store as f32
+        # (bf16 -> f32 is exact) and restore casts back via the template.
+        if a.dtype.kind == "V" or a.dtype.name == "bfloat16":
+            a = a.astype(np.float32)
+        return a
+
+    arrays = {f"leaf_{i}": to_np(x) for i, x in enumerate(leaves)}
+    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    manifest = {
+        "step": step,
+        "n_leaves": len(leaves),
+        "treedef": str(treedef),
+        "dtypes": [str(np.asarray(x).dtype) for x in leaves],
+        "shapes": [list(np.asarray(x).shape) for x in leaves],
+    }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        os.rename(final, final + ".old")
+    os.rename(tmp, final)
+    old = final + ".old"
+    if os.path.exists(old):
+        import shutil
+        shutil.rmtree(old)
+    return final
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = []
+    for name in os.listdir(directory):
+        if name.startswith("step_") and not name.endswith(".tmp") \
+                and not name.endswith(".old"):
+            if os.path.exists(os.path.join(directory, name, "manifest.json")):
+                steps.append(int(name.split("_")[1]))
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(directory: str, like: Any, step: Optional[int] = None,
+                       shardings: Any = None) -> Any:
+    """Restore into the structure of ``like``; optionally place leaves with
+    ``shardings`` (a matching tree of jax.sharding.Sharding) — this is how a
+    checkpoint taken on mesh A restores onto mesh B (elastic re-mesh)."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {directory}")
+    path = os.path.join(directory, f"step_{step:08d}")
+    data = np.load(os.path.join(path, "arrays.npz"))
+    leaves_like, treedef = _flatten(like)
+    leaves = [data[f"leaf_{i}"] for i in range(len(leaves_like))]
+    leaves = [jax.numpy.asarray(a).astype(b.dtype) if hasattr(b, "dtype")
+              else a for a, b in zip(leaves, leaves_like)]
+    tree = jax.tree_util.tree_unflatten(treedef, leaves)
+    if shardings is not None:
+        tree = jax.tree.map(lambda x, s: jax.device_put(x, s), tree,
+                            shardings)
+    else:
+        tree = jax.tree.map(jax.numpy.asarray, tree)
+    return tree
+
+
+class CheckpointManager:
+    """Async checkpointing with bounded queue + keep-last-k retention."""
+
+    def __init__(self, directory: str, keep: int = 3, async_write: bool = True):
+        self.directory = directory
+        self.keep = keep
+        self.async_write = async_write
+        self._q: queue.Queue = queue.Queue(maxsize=2)
+        self._err: Optional[BaseException] = None
+        if async_write:
+            self._thread = threading.Thread(target=self._worker, daemon=True)
+            self._thread.start()
+
+    def _worker(self):
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            step, host_tree = item
+            try:
+                save_checkpoint(self.directory, step, host_tree)
+                self._gc()
+            except BaseException as e:  # surfaced on next save/finalize
+                self._err = e
+
+    def _gc(self):
+        if not os.path.isdir(self.directory):
+            return
+        steps = sorted(
+            int(n.split("_")[1]) for n in os.listdir(self.directory)
+            if n.startswith("step_") and "." not in n)
+        for s in steps[:-self.keep]:
+            import shutil
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    def save(self, step: int, tree: Any):
+        if self._err is not None:
+            raise RuntimeError("async checkpoint failed") from self._err
+        host_tree = jax.tree.map(lambda x: np.asarray(x), tree)
+        if self.async_write:
+            self._q.put((step, host_tree))
+        else:
+            save_checkpoint(self.directory, step, host_tree)
+            self._gc()
+
+    def finalize(self):
+        if self.async_write:
+            self._q.put(None)
+            self._thread.join(timeout=120)
+        if self._err is not None:
+            raise RuntimeError("async checkpoint failed") from self._err

@@ -1,0 +1,36 @@
+"""Elastic scaling: reshard a state tree onto a different mesh.
+
+On node loss/join the controller builds a new mesh from the surviving
+devices and re-places the restored checkpoint with the same PartitionSpecs
+(axis sizes change, specs don't).  ``reshard_tree`` is also used live (no
+checkpoint round-trip) when the state still exists on the old mesh.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.common import normalize_pspec
+
+
+def sharding_tree(mesh: Mesh, pspec_tree: Any, like: Any) -> Any:
+    """Build NamedShardings for every leaf of ``like`` from a pspec tree
+    (pspecs may reference axes the mesh doesn't have — they're pruned)."""
+    def mk(spec, leaf):
+        if not isinstance(spec, P):
+            spec = P()
+        spec = normalize_pspec(spec, mesh.axis_names)
+        if hasattr(leaf, "shape"):
+            from repro.models.common import prune_pspec_for_shape
+            spec = prune_pspec_for_shape(spec, leaf.shape, mesh)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree.map(mk, pspec_tree, like,
+                        is_leaf=lambda x: isinstance(x, P) or x is None)
+
+
+def reshard_tree(tree: Any, mesh: Mesh, pspec_tree: Any) -> Any:
+    shardings = sharding_tree(mesh, pspec_tree, tree)
+    return jax.tree.map(lambda x, s: jax.device_put(x, s), tree, shardings)

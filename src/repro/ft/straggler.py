@@ -1,0 +1,58 @@
+"""Straggler detection & mitigation hooks.
+
+On a real pod the primary signal is per-host step wall-time (SPMD steps are
+globally synchronous, so one slow host drags the step).  The monitor keeps a
+rolling median and flags steps slower than ``threshold x median``; repeated
+flags trip the mitigation callback (e.g. checkpoint + evict host + elastic
+re-mesh — wired in launch/train.py).
+"""
+from __future__ import annotations
+
+import collections
+import time
+from typing import Callable, Optional
+
+
+class StragglerMonitor:
+    def __init__(self, window: int = 50, threshold: float = 2.0,
+                 patience: int = 3,
+                 on_straggler: Optional[Callable[[dict], None]] = None):
+        self.window = window
+        self.threshold = threshold
+        self.patience = patience
+        self.on_straggler = on_straggler
+        self.durations: collections.deque = collections.deque(maxlen=window)
+        self.consecutive_slow = 0
+        self.n_flagged = 0
+        self.n_mitigations = 0
+        self._t0: Optional[float] = None
+
+    def start_step(self):
+        self._t0 = time.perf_counter()
+
+    def end_step(self) -> dict:
+        assert self._t0 is not None, "start_step() not called"
+        dt = time.perf_counter() - self._t0
+        self._t0 = None
+        return self.observe(dt)
+
+    def observe(self, dt: float) -> dict:
+        info = {"duration": dt, "slow": False, "median": None,
+                "mitigate": False}
+        if len(self.durations) >= max(5, self.window // 5):
+            med = sorted(self.durations)[len(self.durations) // 2]
+            info["median"] = med
+            if dt > self.threshold * med:
+                info["slow"] = True
+                self.n_flagged += 1
+                self.consecutive_slow += 1
+                if self.consecutive_slow >= self.patience:
+                    info["mitigate"] = True
+                    self.n_mitigations += 1
+                    self.consecutive_slow = 0
+                    if self.on_straggler is not None:
+                        self.on_straggler(info)
+            else:
+                self.consecutive_slow = 0
+        self.durations.append(dt)
+        return info

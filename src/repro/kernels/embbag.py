@@ -1,0 +1,72 @@
+"""Embedding-bag gather-reduce Pallas kernel (the recsys hot path).
+
+JAX has no native EmbeddingBag; the portable implementation is
+``jnp.take`` + ``segment_sum`` (``models/recsys/embedding.py``).  On TPU the
+lookup is DMA-bound: this kernel keeps the table in HBM (memory space ANY)
+and issues per-row async copies into a VMEM scratch line, accumulating the
+weighted bag sum on-chip — rows never round-trip through an (B, K, D)
+intermediate in HBM (a K·x write+read saving over the take+reduce path).
+
+Layout: table (R, D) HBM; idx (B, K) int32 (scalar-prefetched to SMEM);
+weights (B, K) f32 (0 for padding); out (B, D).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _embbag_kernel(idx_ref, w_ref, table_ref, out_ref, row_scr, sem, *,
+                   bb: int, kk: int):
+    i = pl.program_id(0)
+
+    def body_b(b, _):
+        def body_k(kj, acc):
+            rid = idx_ref[(i * bb + b) * kk + kj]
+            copy = pltpu.make_async_copy(
+                table_ref.at[pl.ds(rid, 1), :], row_scr, sem)
+            copy.start()
+            copy.wait()
+            w = w_ref[b, kj]
+            return acc + row_scr[0, :].astype(jnp.float32) * w
+
+        acc = jax.lax.fori_loop(
+            0, kk, body_k, jnp.zeros(out_ref.shape[1:], jnp.float32))
+        out_ref[b, :] = acc.astype(out_ref.dtype)
+        return 0
+
+    jax.lax.fori_loop(0, bb, body_b, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("bb", "interpret"))
+def embbag(table: jax.Array, idx: jax.Array, weights: jax.Array, *,
+           bb: int = 8, interpret: bool = False) -> jax.Array:
+    """table (R, D), idx (B, K) int32, weights (B, K) -> (B, D)."""
+    r, d = table.shape
+    b, k = idx.shape
+    bb = min(bb, b)
+    assert b % bb == 0
+    kernel = functools.partial(_embbag_kernel, bb=bb, kk=k)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b // bb,),
+        in_specs=[
+            pl.BlockSpec((bb, k), lambda i, idx_ref: (i, 0)),
+            pl.BlockSpec(memory_space=pltpu.MemorySpace.ANY),
+        ],
+        out_specs=pl.BlockSpec((bb, d), lambda i, idx_ref: (i, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1, d), table.dtype),
+            pltpu.SemaphoreType.DMA,
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, d), table.dtype),
+        interpret=interpret,
+    )(idx.reshape(-1), weights.astype(jnp.float32), table)

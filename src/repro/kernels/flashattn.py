@@ -1,0 +1,109 @@
+"""Flash attention (GQA) Pallas kernel — online-softmax, causal, VMEM-tiled.
+
+Used by the LM stack for train/prefill on TPU.  The pure-jnp chunked
+implementation in `models/attention.py` is the portable path (and what the
+dry-run lowers); this kernel is the TPU hot-spot replacement, validated in
+interpret mode against `ref.flash_attention_ref`.
+
+Layout: q (BHq, Tq, d), kv (BHkv, Tk, d); grid (BHq, Tq/bq, Tk/bk) with the
+kv axis innermost; running (m, l, acc) state lives in VMEM scratch and the
+output block is written once on the final kv step.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  causal: bool, scale: float, nk: int, bq: int, bk: int,
+                  q_offset: int):
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)   # (bq, d)
+    k = k_ref[0].astype(jnp.float32)   # (bk, d)
+    v = v_ref[0].astype(jnp.float32)   # (bk, d)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if causal:
+        iq = pl.program_id(1)
+        qpos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0) \
+            + q_offset
+        kpos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        s = jnp.where(qpos >= kpos, s, NEG_INF)
+
+    m_prev = m_scr[...]                       # (bq, 1)
+    l_prev = l_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)           # finite: NEG_INF is finite
+    p = jnp.exp(s - m_new)                    # (bq, bk)
+    l_new = alpha * l_prev + p.sum(axis=-1, keepdims=True)
+    acc_scr[...] = alpha * acc_scr[...] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(ik == nk - 1)
+    def _fin():
+        l = l_scr[...]
+        o_ref[0] = (acc_scr[...] / jnp.where(l == 0, 1.0, l)).astype(
+            o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "scale", "bq", "bk", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, scale: float | None = None,
+                    bq: int = 128, bk: int = 128,
+                    interpret: bool = False) -> jax.Array:
+    """GQA flash attention. q (B, Hq, Tq, d); k,v (B, Hkv, Tk, d)."""
+    b, hq, tq, d = q.shape
+    _, hkv, tk, _ = k.shape
+    assert hq % hkv == 0
+    g = hq // hkv
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    bq = min(bq, tq)
+    bk = min(bk, tk)
+    assert tq % bq == 0 and tk % bk == 0
+    nk = tk // bk
+    qr = q.reshape(b * hq, tq, d)
+    kr = k.reshape(b * hkv, tk, d)
+    vr = v.reshape(b * hkv, tk, d)
+
+    kernel = functools.partial(
+        _flash_kernel, causal=causal, scale=scale, nk=nk, bq=bq, bk=bk,
+        q_offset=tk - tq)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * hq, tq // bq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda h, i, j, g=g: (h // g, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda h, i, j, g=g: (h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda h, i, j: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * hq, tq, d), q.dtype),
+        scratch_shapes=[
+            _vmem((bq, 1), jnp.float32),
+            _vmem((bq, 1), jnp.float32),
+            _vmem((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.reshape(b, hq, tq, d)
+
+
+def _vmem(shape, dtype):
+    from jax.experimental.pallas import tpu as pltpu
+    return pltpu.VMEM(shape, dtype)

@@ -1,0 +1,54 @@
+"""Jit'd public wrappers over the Pallas kernels with backend dispatch.
+
+``impl`` selects the execution path:
+  "auto"              Pallas on TPU, jnp oracle elsewhere (CPU dry-run safe)
+  "pallas"            Pallas compiled for the real backend (TPU)
+  "pallas_interpret"  Pallas interpreter (CPU correctness validation)
+  "ref"               pure-jnp oracle
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import bitmm as _bitmm
+from repro.kernels import embbag as _embbag
+from repro.kernels import flashattn as _flash
+from repro.kernels import ref as _ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _resolve(impl: str) -> str:
+    if impl == "auto":
+        return "pallas" if _on_tpu() else "ref"
+    return impl
+
+
+def bitmm_packed(lhs_packed, rhs_packed, *, impl: str = "auto"):
+    """Fused boolean matmul over packed words (reachability hot spot)."""
+    impl = _resolve(impl)
+    if impl == "ref":
+        return _ref.bitmm_ref(lhs_packed, rhs_packed)
+    return _bitmm.bitmm(lhs_packed, rhs_packed,
+                        interpret=impl == "pallas_interpret")
+
+
+def embedding_bag(table, idx, weights, *, impl: str = "auto"):
+    """Weighted embedding-bag reduce (recsys hot path)."""
+    impl = _resolve(impl)
+    if impl == "ref":
+        return _ref.embbag_ref(table, idx, weights)
+    return _embbag.embbag(table, idx, weights,
+                          interpret=impl == "pallas_interpret")
+
+
+def flash_attention(q, k, v, *, causal: bool = True, scale=None,
+                    impl: str = "auto"):
+    """GQA flash attention (LM train/prefill hot spot)."""
+    impl = _resolve(impl)
+    if impl == "ref":
+        return _ref.flash_attention_ref(q, k, v, causal=causal, scale=scale)
+    return _flash.flash_attention(q, k, v, causal=causal, scale=scale,
+                                  interpret=impl == "pallas_interpret")

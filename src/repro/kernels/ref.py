@@ -1,0 +1,55 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness references)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitset
+
+
+def bitmm_ref(lhs_packed: jax.Array, rhs_packed: jax.Array) -> jax.Array:
+    """Boolean matmul over packed words: (M, K/32) x (K, N/32) -> (M, N/32).
+
+    out[m] = OR over {j : lhs bit j set} of rhs[j].
+    """
+    lhs = bitset.unpack_bits(lhs_packed).astype(jnp.float32)
+    rhs = bitset.unpack_bits(rhs_packed).astype(jnp.float32)
+    return bitset.pack_bits((lhs @ rhs) > 0)
+
+
+def embbag_ref(table: jax.Array, idx: jax.Array,
+               weights: jax.Array) -> jax.Array:
+    """Embedding bag: table (R, D), idx (B, K), weights (B, K) -> (B, D).
+
+    Padding entries carry weight 0 (their idx may be arbitrary but in-range).
+    """
+    rows = table[idx]                      # (B, K, D)
+    return jnp.sum(rows * weights[..., None], axis=1).astype(table.dtype)
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                        causal: bool = True,
+                        scale: float | None = None) -> jax.Array:
+    """GQA attention reference.
+
+    q: (B, Hq, Tq, d); k, v: (B, Hkv, Tk, d) with Hq % Hkv == 0.
+    Computed in f32, returned in q.dtype.
+    """
+    b, hq, tq, d = q.shape
+    _, hkv, tk, _ = k.shape
+    assert hq % hkv == 0
+    g = hq // hkv
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    qf = q.astype(jnp.float32).reshape(b, hkv, g, tq, d)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qf, kf) * scale
+    if causal:
+        # queries aligned to the END of the kv sequence (decode-friendly)
+        qpos = jnp.arange(tq) + (tk - tq)
+        kpos = jnp.arange(tk)
+        mask = qpos[:, None] >= kpos[None, :]
+        s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p, vf)
+    return o.reshape(b, hq, tq, d).astype(q.dtype)

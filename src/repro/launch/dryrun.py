@@ -1,0 +1,138 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Proves the distribution config is coherent without hardware: a sharding
+mismatch, compile-time OOM, or unsupported collective fails the cell.
+Writes one JSON per cell (memory analysis, cost analysis, collective
+schedule, roofline terms) under --out; EXPERIMENTS.md reads from these.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2-1.5b --shape train_4k \
+      --mesh single
+  python -m repro.launch.dryrun --all --mesh both     # subprocess per cell
+"""
+import argparse     # noqa: E402
+import json         # noqa: E402
+import subprocess   # noqa: E402
+import sys          # noqa: E402
+import time         # noqa: E402
+
+import jax          # noqa: E402
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: str) -> dict:
+    from repro.configs import get_bundle
+    from repro.ft.elastic import sharding_tree
+    from repro.launch.mesh import make_production_mesh
+    from repro.roofline.analysis import analyze_compiled
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_devices = mesh.devices.size
+    bundle = get_bundle(arch, shape)
+    shardings = tuple(
+        sharding_tree(mesh, ps, arg)
+        for ps, arg in zip(bundle.in_pspecs, bundle.args))
+
+    t0 = time.time()
+    with jax.set_mesh(mesh):
+        jitted = jax.jit(bundle.fn, in_shardings=shardings,
+                         donate_argnums=bundle.donate)
+        lowered = jitted.lower(*bundle.args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    result = analyze_compiled(compiled, bundle.model_flops, n_devices)
+    result.update({
+        "arch": arch, "shape": shape,
+        "mesh": "multi" if multi_pod else "single",
+        "n_devices": n_devices, "kind": bundle.kind,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+    })
+    mem = result.get("memory_analysis", {})
+    print(f"[dryrun] {arch} x {shape} x "
+          f"{'multi' if multi_pod else 'single'}: "
+          f"flops/dev={result['per_device_flops']:.3e} "
+          f"bytes/dev={result['per_device_bytes']:.3e} "
+          f"wire/dev={result['collectives']['total_wire_bytes']:.3e} "
+          f"dominant={result['roofline']['dominant']} "
+          f"useful={result['useful_flops_ratio']:.3f}")
+    if mem:
+        print(f"[dryrun]   memory_analysis: {mem}")
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        tag = f"{arch}__{shape}__{result['mesh']}".replace("/", "_")
+        with open(os.path.join(out_dir, tag + ".json"), "w") as f:
+            json.dump(result, f, indent=1)
+    return result
+
+
+def _spawn_all(mesh_arg: str, out_dir: str, archs=None, jobs: int = 1) -> int:
+    """One subprocess per cell: isolates compile memory + failures."""
+    from concurrent.futures import ThreadPoolExecutor
+    from repro.configs import list_cells
+    failures = []
+    cells = [c for c in list_cells() if archs is None or c[0] in archs]
+    meshes = ["single", "multi"] if mesh_arg == "both" else [mesh_arg]
+    work = []
+    for arch, shape in cells:
+        for mesh in meshes:
+            tag = f"{arch}__{shape}__{mesh}"
+            out_json = os.path.join(out_dir, tag.replace("/", "_") + ".json")
+            if os.path.exists(out_json):
+                print(f"[dryrun] skip {tag} (cached)")
+                continue
+            work.append((tag, arch, shape, mesh))
+
+    def run_one(item):
+        tag, arch, shape, mesh = item
+        cmd = [sys.executable, "-m", "repro.launch.dryrun",
+               "--arch", arch, "--shape", shape, "--mesh", mesh,
+               "--out", out_dir]
+        t0 = time.time()
+        proc = subprocess.run(cmd, capture_output=True, text=True)
+        dt = time.time() - t0
+        return tag, proc, dt
+
+    with ThreadPoolExecutor(max_workers=jobs) as pool:
+        for tag, proc, dt in pool.map(run_one, work):
+            if proc.returncode != 0:
+                failures.append(tag)
+                print(f"[dryrun] FAIL {tag} ({dt:.0f}s)\n"
+                      f"{proc.stdout[-2000:]}\n{proc.stderr[-4000:]}",
+                      flush=True)
+            else:
+                print(proc.stdout.strip(), flush=True)
+                print(f"[dryrun] OK {tag} ({dt:.0f}s)", flush=True)
+    if failures:
+        print(f"[dryrun] {len(failures)} FAILURES: {failures}")
+        return 1
+    print(f"[dryrun] all {len(cells) * len(meshes)} cells passed")
+    return 0
+
+
+def main() -> int:
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch")
+    p.add_argument("--shape")
+    p.add_argument("--mesh", choices=["single", "multi", "both"],
+                   default="single")
+    p.add_argument("--all", action="store_true")
+    p.add_argument("--archs", nargs="*", help="subset filter for --all")
+    p.add_argument("--out", default="experiments/dryrun")
+    p.add_argument("--jobs", type=int, default=1)
+    args = p.parse_args()
+
+    if args.all:
+        return _spawn_all(args.mesh, args.out, args.archs, args.jobs)
+    assert args.arch and args.shape, "--arch/--shape or --all required"
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    for m in meshes:
+        run_cell(args.arch, args.shape, m == "multi", args.out)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

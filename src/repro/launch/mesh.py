@@ -1,0 +1,24 @@
+"""Production mesh construction.
+
+A function (never a module-level constant) so importing this module never
+touches jax device state.  Single pod: (16, 16) ("data", "model") == 256
+chips; multi-pod: (2, 16, 16) ("pod", "data", "model") == 512 chips across
+2 pods — the "pod" axis is the slowest (DCN/inter-pod) dimension and only
+carries data parallelism.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Whatever devices exist, as ("data", "model") with model==1 — used by
+    the CPU train/serve drivers and tests."""
+    n = len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"))

@@ -1,0 +1,243 @@
+"""Attention implementations.
+
+- ``flash_chunked``: pure-jnp online-softmax attention, doubly chunked
+  (q and kv), differentiable, bounded live memory — the portable path that
+  the multi-pod dry-run lowers for train/prefill.
+- ``decode_attention``: single-step attention against a (possibly
+  sequence-sharded) KV cache; softmax statistics reduce across shards via
+  XLA's partitioned reductions (flash-decode communication pattern).
+- On TPU, `repro.kernels.ops.flash_attention` (Pallas) is a drop-in for the
+  train/prefill hot spot (cfg.use_pallas).
+
+Tensor layout at this interface: q/k/v are (B, T, H, Dh).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _chunk_count(t: int, chunk: int) -> int:
+    chunk = min(chunk, t)
+    while t % chunk != 0:
+        chunk //= 2
+    return t // chunk, chunk
+
+
+def _grouped(q, k, v):
+    b, tq, hq, d = q.shape
+    _, tk, hkv, _ = k.shape
+    g = hq // hkv
+    qg = q.reshape(b, tq, hkv, g, d).transpose(0, 2, 3, 1, 4)
+    kg = k.transpose(0, 2, 1, 3)  # (B, Hkv, Tk, d)
+    vg = v.transpose(0, 2, 1, 3)
+    return qg, kg, vg
+
+
+def _ungroup(out, b, tq, hq, d):
+    # out: (B, Hkv, G, Tq, d)
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, tq, hq, d)
+
+
+def _flash_fwd(qg, kg, vg, qpos, causal, q_chunk, kv_chunk, scale):
+    """Grouped flash fwd. Returns (out, lse) with out (B,Hkv,G,Tq,d).
+
+    qpos (B, Tq) int32: global position of each query row (enables
+    sequence-parallel sharding where rows aren't contiguous per shard).
+    """
+    b, hkv, g, tq, d = qg.shape
+    nq = tq // q_chunk
+    nk = kg.shape[2] // kv_chunk
+
+    def q_step(_, iq):
+        qc = jax.lax.dynamic_slice_in_dim(qg, iq * q_chunk, q_chunk, axis=3)
+        qc = qc.astype(jnp.float32)
+        qp = jax.lax.dynamic_slice_in_dim(qpos, iq * q_chunk, q_chunk,
+                                          axis=1)          # (B, bq)
+
+        def kv_step(carry, ik):
+            m, l, acc = carry
+            kc = jax.lax.dynamic_slice_in_dim(
+                kg, ik * kv_chunk, kv_chunk, axis=2).astype(jnp.float32)
+            vc = jax.lax.dynamic_slice_in_dim(
+                vg, ik * kv_chunk, kv_chunk, axis=2).astype(jnp.float32)
+            s = jnp.einsum("bhgqd,bhkd->bhgqk", qc, kc) * scale
+            if causal:
+                kpos = ik * kv_chunk + jnp.arange(kv_chunk)
+                mask = qp[:, :, None] >= kpos[None, None, :]  # (B, bq, bk)
+                s = jnp.where(mask[:, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l_new = alpha * l + p.sum(axis=-1)
+            acc_new = alpha[..., None] * acc + jnp.einsum(
+                "bhgqk,bhkd->bhgqd", p, vc)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, hkv, g, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, q_chunk), jnp.float32)
+        a0 = jnp.zeros((b, hkv, g, q_chunk, d), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0),
+                                      jnp.arange(nk))
+        out_c = acc / jnp.where(l == 0, 1.0, l)[..., None]
+        lse_c = m + jnp.log(jnp.maximum(l, 1e-30))
+        return None, (out_c.astype(qg.dtype), lse_c)
+
+    _, (outs, lses) = jax.lax.scan(q_step, None, jnp.arange(nq))
+    # outs: (nq, B, Hkv, G, q_chunk, d) -> (B, Hkv, G, Tq, d)
+    out = outs.transpose(1, 2, 3, 0, 4, 5).reshape(b, hkv, g, tq, d)
+    lse = lses.transpose(1, 2, 3, 0, 4).reshape(b, hkv, g, tq)
+    return out, lse
+
+
+def _flash_bwd(qg, kg, vg, qpos, out, lse, dout, causal, q_chunk, kv_chunk,
+               scale):
+    """Flash backward: recomputes per-chunk scores (no S^2 residuals)."""
+    b, hkv, g, tq, d = qg.shape
+    tk = kg.shape[2]
+    nq = tq // q_chunk
+    nk = tk // kv_chunk
+    kf = kg.astype(jnp.float32)
+    vf = vg.astype(jnp.float32)
+
+    def q_step(carry, iq):
+        dk, dv = carry
+        qp = jax.lax.dynamic_slice_in_dim(qpos, iq * q_chunk, q_chunk,
+                                          axis=1)
+        qc = jax.lax.dynamic_slice_in_dim(
+            qg, iq * q_chunk, q_chunk, axis=3).astype(jnp.float32)
+        doc = jax.lax.dynamic_slice_in_dim(
+            dout, iq * q_chunk, q_chunk, axis=3).astype(jnp.float32)
+        oc = jax.lax.dynamic_slice_in_dim(
+            out, iq * q_chunk, q_chunk, axis=3).astype(jnp.float32)
+        lsec = jax.lax.dynamic_slice_in_dim(
+            lse, iq * q_chunk, q_chunk, axis=3)
+        delta = jnp.sum(doc * oc, axis=-1)          # (B,Hkv,G,bq)
+
+        def kv_step(carry, ik):
+            dq_c, dk, dv = carry
+            kc = jax.lax.dynamic_slice_in_dim(kf, ik * kv_chunk, kv_chunk,
+                                              axis=2)
+            vc = jax.lax.dynamic_slice_in_dim(vf, ik * kv_chunk, kv_chunk,
+                                              axis=2)
+            s = jnp.einsum("bhgqd,bhkd->bhgqk", qc, kc) * scale
+            if causal:
+                kpos = ik * kv_chunk + jnp.arange(kv_chunk)
+                mask = qp[:, :, None] >= kpos[None, None, :]
+                s = jnp.where(mask[:, None, None], s, NEG_INF)
+            p = jnp.exp(s - lsec[..., None])        # (B,Hkv,G,bq,bk)
+            dv_blk = jnp.einsum("bhgqk,bhgqd->bhkd", p, doc)
+            dp = jnp.einsum("bhgqd,bhkd->bhgqk", doc, vc)
+            ds = p * (dp - delta[..., None]) * scale
+            dq_c = dq_c + jnp.einsum("bhgqk,bhkd->bhgqd", ds, kc)
+            dk_blk = jnp.einsum("bhgqk,bhgqd->bhkd", ds, qc)
+            dk = jax.lax.dynamic_update_slice_in_dim(
+                dk, jax.lax.dynamic_slice_in_dim(
+                    dk, ik * kv_chunk, kv_chunk, axis=2) + dk_blk,
+                ik * kv_chunk, axis=2)
+            dv = jax.lax.dynamic_update_slice_in_dim(
+                dv, jax.lax.dynamic_slice_in_dim(
+                    dv, ik * kv_chunk, kv_chunk, axis=2) + dv_blk,
+                ik * kv_chunk, axis=2)
+            return (dq_c, dk, dv), None
+
+        dq0 = jnp.zeros((b, hkv, g, q_chunk, d), jnp.float32)
+        (dq_c, dk, dv), _ = jax.lax.scan(kv_step, (dq0, dk, dv),
+                                         jnp.arange(nk))
+        return (dk, dv), dq_c
+
+    dk0 = jnp.zeros((b, hkv, tk, d), jnp.float32)
+    dv0 = jnp.zeros((b, hkv, tk, d), jnp.float32)
+    (dk, dv), dqs = jax.lax.scan(q_step, (dk0, dv0), jnp.arange(nq))
+    dq = dqs.transpose(1, 2, 3, 0, 4, 5).reshape(b, hkv, g, tq, d)
+    return dq, dk, dv
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7))
+def _flash_grouped(qg, kg, vg, qpos, causal, q_chunk, kv_chunk, scale):
+    out, _ = _flash_fwd(qg, kg, vg, qpos, causal, q_chunk, kv_chunk, scale)
+    return out
+
+
+def _flash_grouped_fwd(qg, kg, vg, qpos, causal, q_chunk, kv_chunk, scale):
+    out, lse = _flash_fwd(qg, kg, vg, qpos, causal, q_chunk, kv_chunk,
+                          scale)
+    return out, (qg, kg, vg, qpos, out, lse)
+
+
+def _flash_grouped_bwd(causal, q_chunk, kv_chunk, scale, res, dout):
+    import numpy as np
+    qg, kg, vg, qpos, out, lse = res
+    dq, dk, dv = _flash_bwd(qg, kg, vg, qpos, out.astype(jnp.float32), lse,
+                            dout.astype(jnp.float32), causal, q_chunk,
+                            kv_chunk, scale)
+    dqpos = np.zeros(qpos.shape, jax.dtypes.float0)
+    return (dq.astype(qg.dtype), dk.astype(kg.dtype), dv.astype(vg.dtype),
+            dqpos)
+
+
+_flash_grouped.defvjp(_flash_grouped_fwd, _flash_grouped_bwd)
+
+
+def flash_chunked(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, q_chunk: int = 512,
+                  kv_chunk: int = 1024, scale: float | None = None,
+                  custom_vjp: bool = True,
+                  qpos: jax.Array | None = None) -> jax.Array:
+    """q (B, Tq, Hq, d), k/v (B, Tk, Hkv, d) -> (B, Tq, Hq, d).
+
+    Causal alignment: by default queries sit at the END of the kv
+    sequence; ``qpos`` (B, Tq) int32 overrides with explicit global
+    positions (sequence-parallel callers).
+    ``custom_vjp=True`` uses the flash backward (scores recomputed per
+    chunk, O(S*d) residuals); False differentiates through the fwd scans
+    (stores the full S^2 probability tensor — the recorded baseline).
+    """
+    b, tq, hq, d = q.shape
+    _, tk, hkv, _ = k.shape
+    assert hq % hkv == 0
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    nq, q_chunk = _chunk_count(tq, q_chunk)
+    nk, kv_chunk = _chunk_count(tk, kv_chunk)
+    if qpos is None:
+        qpos = jnp.broadcast_to(jnp.arange(tq, dtype=jnp.int32) + (tk - tq),
+                                (b, tq))
+    qg, kg, vg = _grouped(q, k, v)
+    if custom_vjp:
+        out = _flash_grouped(qg, kg, vg, qpos, causal, q_chunk, kv_chunk,
+                             scale)
+    else:
+        out, _ = _flash_fwd(qg, kg, vg, qpos, causal, q_chunk, kv_chunk,
+                            scale)
+    return _ungroup(out, b, tq, hq, d)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     cache_len: jax.Array, scale: float | None = None
+                     ) -> jax.Array:
+    """One-token attention: q (B, 1, Hq, d), caches (B, S, Hkv, d).
+
+    ``cache_len`` (scalar or (B,)) masks the valid prefix.  With the cache
+    sequence dim sharded over "model", XLA partitions the reductions into the
+    flash-decode pattern (partial max/sum + all-reduce).
+    """
+    b, s, hkv, d = k_cache.shape
+    hq = q.shape[2]
+    g = hq // hkv
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    qg = q.reshape(b, hkv, g, d).astype(jnp.float32)
+    kf = k_cache.astype(jnp.float32)
+    vf = v_cache.astype(jnp.float32)
+    sc = jnp.einsum("bhgd,bshd->bhgs", qg, kf) * scale
+    pos = jnp.arange(s)
+    valid = pos[None, :] < jnp.reshape(cache_len, (-1, 1))  # (B, S) or (1, S)
+    sc = jnp.where(valid[:, None, None, :], sc, NEG_INF)
+    m = sc.max(axis=-1, keepdims=True)
+    p = jnp.exp(sc - m)
+    l = p.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bhgs,bshd->bhgd", p / l, vf)
+    return out.reshape(b, 1, hq, d).astype(q.dtype)

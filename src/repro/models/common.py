@@ -1,0 +1,89 @@
+"""Shared model building blocks: norms, RoPE, sharding helpers."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def normalize_pspec(spec: P, mesh_axis_names) -> P:
+    """Drop mesh axes that don't exist in the active mesh (e.g. "pod" on the
+    single-pod mesh) so one spec works for every mesh."""
+    parts = []
+    for entry in spec:
+        if entry is None:
+            parts.append(None)
+        elif isinstance(entry, str):
+            parts.append(entry if entry in mesh_axis_names else None)
+        else:  # tuple of axis names
+            kept = tuple(a for a in entry if a in mesh_axis_names)
+            parts.append(kept if kept else None)
+    return P(*parts)
+
+
+def prune_pspec_for_shape(spec: P, shape, mesh) -> P:
+    """Drop sharded axes whose product doesn't divide the dim size (e.g.
+    batch=1 decode can't shard its batch dim)."""
+    sizes = dict(zip(mesh.axis_names, mesh.axis_sizes))
+    parts = []
+    for i, entry in enumerate(spec):
+        if entry is None or i >= len(shape):
+            parts.append(None)
+            continue
+        names = (entry,) if isinstance(entry, str) else tuple(entry)
+        total = 1
+        for n in names:
+            total *= sizes.get(n, 1)
+        parts.append(entry if total and shape[i] % total == 0 else None)
+    return P(*parts)
+
+
+def maybe_shard(x: jax.Array, spec: P) -> jax.Array:
+    """with_sharding_constraint that no-ops outside a mesh context, prunes
+    axes the active mesh doesn't have, and drops non-dividing axes."""
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or mesh.empty:
+        return x
+    spec = normalize_pspec(spec, mesh.axis_names)
+    spec = prune_pspec_for_shape(spec, x.shape, mesh)
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+BATCH_AXES = ("pod", "data")  # the data-parallel super-axis
+
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (y * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def rope_freqs(d_head: int, theta: float) -> jax.Array:
+    half = d_head // 2
+    return 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, T, H, Dh); positions: (B, T) int32. NeoX-style half rotation."""
+    *_, dh = x.shape
+    freqs = rope_freqs(dh, theta)                      # (half,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, T, half)
+    cos = jnp.cos(ang)[:, :, None, :]                  # (B, T, 1, half)
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+           w_down: jax.Array) -> jax.Array:
+    g = jnp.einsum("...d,df->...f", x, w_gate.astype(x.dtype))
+    u = jnp.einsum("...d,df->...f", x, w_up.astype(x.dtype))
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return jnp.einsum("...f,fd->...d", h, w_down.astype(x.dtype))
+
+
+def dense_init(rng, shape, in_axis: int = 0, dtype=jnp.bfloat16):
+    fan_in = shape[in_axis]
+    scale = (1.0 / max(1, fan_in)) ** 0.5
+    return (jax.random.normal(rng, shape, jnp.float32) * scale).astype(dtype)

@@ -1,0 +1,276 @@
+"""EquiformerV2 (Liao et al., arXiv:2306.12059): equivariant graph attention
+with eSCN-style SO(2) convolutions, l_max=6, m_max=2.
+
+The eSCN trick (Passaro & Zitnick): rotate each edge's source irreps so the
+edge aligns with +z; in that frame the tensor-product convolution becomes a
+block-diagonal per-m SO(2) linear map, and truncating to |m| <= m_max cuts
+the O(L^6) contraction to O(L^3)-ish per-m matmuls.  Messages are rotated
+back with D^T and aggregated with per-head attention weights.
+
+Simplifications vs the released model (documented in DESIGN.md):
+LayerNorm per l (RMS over m x C), attention logits from invariant (l=0)
+features + RBF (instead of the full alpha path), gate activation instead of
+the S2 grid activation.  The kernel regimes (Wigner rotation, per-m SO(2)
+matmuls, segment softmax, scatter) match the paper.
+
+Edges are processed in fixed-size chunks via lax.scan so peak memory stays
+bounded on 10^8-edge graphs.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.gnn import graphs as G
+from repro.models.gnn import so3
+from repro.models.gnn.nequip import bessel_rbf
+
+
+@dataclass(frozen=True)
+class EquiformerV2Config:
+    name: str
+    n_layers: int = 12
+    d_hidden: int = 128
+    l_max: int = 6
+    m_max: int = 2
+    n_heads: int = 8
+    n_rbf: int = 8
+    cutoff: float = 5.0
+    d_feat: int = 100
+    n_classes: int = 47
+    edge_chunk: int = 65536
+    remat: bool = True
+    # shard edges over ("pod","data","model") instead of the batch axes
+    # only — removes the model-axis replication of all per-edge compute
+    shard_edges_model: bool = False
+    dtype: object = jnp.float32
+
+
+def _n_l(cfg):
+    return cfg.l_max + 1
+
+
+def init_params(cfg: EquiformerV2Config, rng):
+    c = cfg.d_hidden
+    nl = _n_l(cfg)
+    s = (1.0 / c) ** 0.5
+
+    def lin(k, shape):
+        return jax.random.normal(k, shape, jnp.float32) * s
+
+    layers = []
+    for _ in range(cfg.n_layers):
+        rng, *ks = jax.random.split(rng, 12)
+        lp = {
+            # SO(2) conv weights: m=0 one matrix per (lo, li); m>0 a pair
+            "w_m0": lin(ks[0], (nl, nl, c, c)),
+            "w_re": lin(ks[1], (cfg.m_max, nl, nl, c, c)),
+            "w_im": lin(ks[2], (cfg.m_max, nl, nl, c, c)),
+            "radial": G.mlp_init(ks[3], [cfg.n_rbf, c, nl * c]),
+            "alpha": G.mlp_init(ks[4], [2 * c + cfg.n_rbf, c, cfg.n_heads]),
+            "w_out": lin(ks[5], (nl, c, c)),
+            "ln_a": jnp.ones((nl, c)),
+            "ln_f": jnp.ones((nl, c)),
+            # FFN: per-l linear + gates from scalars
+            "ffn_w1": lin(ks[6], (nl, c, c)),
+            "ffn_w2": lin(ks[7], (nl, c, c)),
+            "ffn_gate": lin(ks[8], (c, (nl - 1) * c)),
+        }
+        layers.append(lp)
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *layers)
+    rng, k1, k2 = jax.random.split(rng, 3)
+    return {
+        "embed": G.mlp_init(k1, [cfg.d_feat, c]),
+        "head": G.mlp_init(k2, [c, c, max(cfg.n_classes, 1)]),
+        "layers": stacked,
+    }
+
+
+def _irrep_norm(h, scale, eps=1e-6):
+    """Per-l RMS norm over (m, C). h: list of (N, 2l+1, C)."""
+    out = []
+    for l, hl in enumerate(h):
+        ms = jnp.mean(hl.astype(jnp.float32) ** 2, axis=(1, 2), keepdims=True)
+        out.append((hl * jax.lax.rsqrt(ms + eps) * scale[l]).astype(hl.dtype))
+    return out
+
+
+def _flat(h):
+    """list{l} (N, 2l+1, C) -> (N, sum(2l+1), C)."""
+    return jnp.concatenate(h, axis=1)
+
+
+def _unflat(x, l_max):
+    out, off = [], 0
+    for l in range(l_max + 1):
+        out.append(x[:, off:off + 2 * l + 1])
+        off += 2 * l + 1
+    return out
+
+
+def forward(cfg: EquiformerV2Config, params, batch: G.GraphBatch):
+    batch = G.shard_graph(batch, edges_over_model=cfg.shard_edges_model)
+    n = batch.n_nodes
+    c = cfg.d_hidden
+    nl = _n_l(cfg)
+    nh = cfg.n_heads
+    hd = c // nh
+    e_total = batch.src.shape[0]
+    chunk = min(cfg.edge_chunk, e_total)
+    while e_total % chunk != 0:
+        chunk //= 2
+    n_chunks = e_total // chunk
+
+    # ---------------- edge geometry, chunk-reshaped
+    from jax.sharding import PartitionSpec as _P
+    from repro.models.common import BATCH_AXES as _BA
+
+    def chunked(a):
+        out = a.reshape((n_chunks, chunk) + a.shape[1:])
+        if cfg.shard_edges_model:
+            # keep per-chunk work sharded over every axis (the flat-dim
+            # sharding doesn't survive the reshape on its own)
+            out = G.maybe_shard(
+                out, _P(None, _BA + ("model",)) if out.ndim == 2
+                else _P(None, _BA + ("model",), None))
+        return out
+
+    src_c, dst_c = chunked(batch.src), chunked(batch.dst)
+    emask_c = chunked(batch.edge_mask)
+
+    h = [G.mlp(batch.x.astype(cfg.dtype), params["embed"])[:, None, :]]
+    for l in range(1, nl):
+        h.append(jnp.zeros((n, 2 * l + 1, c), cfg.dtype))
+
+    pos = batch.pos.astype(jnp.float32)
+
+    def edge_geom(src, dst):
+        diff = jnp.take(pos, dst, axis=0) - jnp.take(pos, src, axis=0)
+        r = jnp.linalg.norm(diff + 1e-12, axis=-1)
+        rot = so3.rotation_to_align_z(diff)
+        ds = so3.wigner_d_stack(cfg.l_max, rot)       # [(chunk, 2l+1, 2l+1)]
+        rbf = bessel_rbf(r, cfg.n_rbf, cfg.cutoff)
+        # degenerate edges (r ~ 0) have no covariant frame: mask them
+        geo = r > 1e-6
+        return ds, rbf, geo
+
+    def so2_conv(lp, h_rot, rbf):
+        """h_rot: list{l} (E, 2l+1, C) rotated; returns messages same shape
+        with only |m| <= m_max populated."""
+        radial = G.mlp(rbf, lp["radial"]).reshape(-1, nl, c)  # (E, nl, C)
+        # m = 0 rows (index l in dim 1 of h_rot[l])
+        out = []
+        m0_in = jnp.stack([h_rot[l][:, l, :] for l in range(nl)], 1)
+        # w_m0[o, i, c_in, c_out]
+        m0_out = jnp.einsum("eic,oicd->eod", m0_in.astype(jnp.float32),
+                            lp["w_m0"])
+        for l in range(nl):
+            msg = jnp.zeros((m0_in.shape[0], 2 * l + 1, c), jnp.float32)
+            msg = msg.at[:, l, :].set(m0_out[:, l, :])
+            out.append(msg)
+        # m > 0 pairs
+        for m in range(1, cfg.m_max + 1):
+            ls = [l for l in range(nl) if l >= m]
+            hp = jnp.stack([h_rot[l][:, l + m, :] for l in ls], 1)  # +m
+            hn = jnp.stack([h_rot[l][:, l - m, :] for l in ls], 1)  # -m
+            import numpy as _np
+            wre = lp["w_re"][m - 1][_np.ix_(ls, ls)]
+            wim = lp["w_im"][m - 1][_np.ix_(ls, ls)]
+            op = jnp.einsum("eic,iocd->eod", hp.astype(jnp.float32), wre) \
+                - jnp.einsum("eic,iocd->eod", hn.astype(jnp.float32), wim)
+            on = jnp.einsum("eic,iocd->eod", hp.astype(jnp.float32), wim) \
+                + jnp.einsum("eic,iocd->eod", hn.astype(jnp.float32), wre)
+            for oi, l in enumerate(ls):
+                out[l] = out[l].at[:, l + m, :].set(op[:, oi])
+                out[l] = out[l].at[:, l - m, :].set(on[:, oi])
+        # radial modulation per (l, C)
+        out = [o * radial[:, l, None, :] for l, o in enumerate(out)]
+        return out
+
+    def attn_block(h, lp):
+        hn = _irrep_norm(h, lp["ln_a"])
+        inv = hn[0][:, 0, :]                           # (N, C)
+
+        # ---- pass A: attention logits per edge (chunked)
+        def logits_chunk(_, xs):
+            src, dst, _em = xs
+            _, rbf, _geo = edge_geom(src, dst)
+            zin = jnp.concatenate([jnp.take(inv, src, 0),
+                                   jnp.take(inv, dst, 0), rbf], -1)
+            return None, G.mlp(zin, lp["alpha"])       # (chunk, H)
+
+        _, logits = jax.lax.scan(logits_chunk, None, (src_c, dst_c, emask_c))
+        logits = logits.reshape(e_total, nh)
+        alpha = G.edge_softmax(logits, batch.dst, n, batch.edge_mask)
+        alpha_c = chunked(alpha)
+
+        # ---- pass B: eSCN messages, weighted, aggregated
+        def msg_chunk(acc, xs):
+            src, dst, em, al = xs
+            ds, rbf, geo = edge_geom(src, dst)
+            em = em & geo
+            hj = [jnp.take(hn[l], src, axis=0) for l in range(nl)]
+            h_rot = [jnp.einsum("emk,ekc->emc", ds[l], hj[l].astype(
+                jnp.float32)) for l in range(nl)]
+            msg = so2_conv(lp, h_rot, rbf)
+            # attention weighting per head (channels split into heads)
+            w = al  # (chunk, H)
+            msg = [
+                (m.reshape(m.shape[0], m.shape[1], nh, hd)
+                 * w[:, None, :, None]).reshape(m.shape)
+                for m in msg]
+            # rotate back
+            msg = [jnp.einsum("ekm,ekc->emc", ds[l], msg[l])
+                   for l in range(nl)]
+            msg = [m * em[:, None, None] for m in msg]
+            from jax.sharding import PartitionSpec as P
+            acc = [G.maybe_shard(
+                acc[l] + jax.ops.segment_sum(msg[l], dst, num_segments=n),
+                P("model", None, None)) for l in range(nl)]
+            return acc, None
+
+        acc0 = [jnp.zeros((n, 2 * l + 1, c), jnp.float32) for l in range(nl)]
+        chunk_body = jax.checkpoint(msg_chunk) if cfg.remat else msg_chunk
+        agg, _ = jax.lax.scan(chunk_body, acc0,
+                              (src_c, dst_c, emask_c, alpha_c))
+        out = [jnp.einsum("emc,cd->emd", agg[l], lp["w_out"][l]).astype(
+            cfg.dtype) for l in range(nl)]
+        return [h[l] + out[l] for l in range(nl)]
+
+    def ffn_block(h, lp):
+        hn = _irrep_norm(h, lp["ln_f"])
+        mid = [jnp.einsum("emc,cd->emd", hn[l].astype(jnp.float32),
+                          lp["ffn_w1"][l]) for l in range(nl)]
+        gates = jax.nn.sigmoid(mid[0][:, 0, :] @ lp["ffn_gate"])
+        gates = gates.reshape(n, nl - 1, c)
+        mid[0] = jax.nn.silu(mid[0])
+        for l in range(1, nl):
+            mid[l] = mid[l] * gates[:, None, l - 1, :]
+        out = [jnp.einsum("emc,cd->emd", mid[l], lp["ffn_w2"][l]).astype(
+            cfg.dtype) for l in range(nl)]
+        return [h[l] + out[l] for l in range(nl)]
+
+    def layer(h, lp):
+        h = list(h)
+        h = attn_block(h, lp)
+        h = ffn_block(h, lp)
+        return tuple(h), None
+
+    if cfg.remat:
+        layer = jax.checkpoint(layer)
+    h, _ = jax.lax.scan(layer, tuple(h), params["layers"])
+    return list(h)
+
+
+def loss(cfg: EquiformerV2Config, params, batch: G.GraphBatch):
+    h = forward(cfg, params, batch)
+    inv = h[0][:, 0, :]
+    if cfg.n_classes > 0:
+        logits = G.mlp(inv, params["head"])
+        return G.node_class_loss(logits, batch.labels, batch.node_mask)
+    n_graphs = int(batch.labels.shape[0])
+    pooled = G.graph_pool(inv, batch.graph_id, n_graphs, batch.node_mask)
+    energy = G.mlp(pooled, params["head"])[:, 0]
+    return jnp.mean((energy - batch.labels.astype(energy.dtype)) ** 2)

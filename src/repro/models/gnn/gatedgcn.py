@@ -1,0 +1,101 @@
+"""GatedGCN (Bresson & Laurent, arXiv:1711.07553; benchmarking-gnns form).
+
+    e_ij' = e_ij + ReLU(Norm(A h_i + B h_j + C e_ij))
+    h_i'  = h_i + ReLU(Norm(U h_i + sum_j eta_ij * (V h_j)))
+    eta_ij = sigma(e_ij') / (sum_j' sigma(e_ij') + eps)
+
+LayerNorm replaces BatchNorm (static-shape friendly; noted in DESIGN.md).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.gnn import graphs as G
+
+
+@dataclass(frozen=True)
+class GatedGCNConfig:
+    name: str
+    n_layers: int = 16
+    d_hidden: int = 70
+    d_feat: int = 1433
+    n_classes: int = 7      # 0 => graph-level energy regression
+    remat: bool = True
+    dtype: object = jnp.float32
+
+
+def _layer_norm(x, w, b, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(-1, keepdims=True)
+    var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps) * w + b).astype(x.dtype)
+
+
+def init_params(cfg: GatedGCNConfig, rng):
+    d = cfg.d_hidden
+    rngs = jax.random.split(rng, cfg.n_layers * 6 + 3)
+    it = iter(range(len(rngs)))
+
+    def lin(k, din, dout):
+        s = (1.0 / din) ** 0.5
+        return (jax.random.normal(rngs[k], (din, dout), jnp.float32) * s)
+
+    layers = []
+    for _ in range(cfg.n_layers):
+        layers.append({
+            "A": lin(next(it), d, d), "B": lin(next(it), d, d),
+            "C": lin(next(it), d, d), "U": lin(next(it), d, d),
+            "V": lin(next(it), d, d),
+            "ln_h_w": jnp.ones((d,)), "ln_h_b": jnp.zeros((d,)),
+            "ln_e_w": jnp.ones((d,)), "ln_e_b": jnp.zeros((d,)),
+        })
+    # stack for scan
+    stacked = {k: jnp.stack([l[k] for l in layers]) for k in layers[0]}
+    return {
+        "embed": lin(next(it), cfg.d_feat, d),
+        "edge_embed": jnp.zeros((1, d)),
+        "head": lin(next(it), d, max(cfg.n_classes, 1)),
+        "layers": stacked,
+    }
+
+
+def forward(cfg: GatedGCNConfig, params, batch: G.GraphBatch):
+    batch = G.shard_graph(batch)
+    n = batch.n_nodes
+    h = (batch.x.astype(cfg.dtype) @ params["embed"].astype(cfg.dtype))
+    e = jnp.broadcast_to(params["edge_embed"].astype(cfg.dtype),
+                         (batch.src.shape[0], cfg.d_hidden))
+
+    def layer(carry, lp):
+        h, e = carry
+        hi = G.gather_src(batch, h)
+        hj = G.gather_dst(batch, h)
+        e_new = e + jax.nn.relu(_layer_norm(
+            hi @ lp["A"].astype(h.dtype) + hj @ lp["B"].astype(h.dtype)
+            + e @ lp["C"].astype(h.dtype), lp["ln_e_w"], lp["ln_e_b"]))
+        sig = jax.nn.sigmoid(e_new.astype(jnp.float32)).astype(h.dtype)
+        num = G.scatter_sum(sig * (hj @ lp["V"].astype(h.dtype)), batch.dst,
+                            n, batch.edge_mask)
+        den = G.scatter_sum(sig, batch.dst, n, batch.edge_mask) + 1e-6
+        agg = num / den
+        h_new = h + jax.nn.relu(_layer_norm(
+            h @ lp["U"].astype(h.dtype) + agg, lp["ln_h_w"], lp["ln_h_b"]))
+        return (h_new, e_new), None
+
+    if cfg.remat:
+        layer = jax.checkpoint(layer)
+    (h, e), _ = jax.lax.scan(layer, (h, e), params["layers"])
+    return h @ params["head"].astype(h.dtype)
+
+
+def loss(cfg: GatedGCNConfig, params, batch: G.GraphBatch):
+    logits = forward(cfg, params, batch)
+    if cfg.n_classes > 0:
+        return G.node_class_loss(logits, batch.labels, batch.node_mask)
+    n_graphs = int(batch.labels.shape[0])
+    energy = G.graph_pool(logits, batch.graph_id, n_graphs,
+                          batch.node_mask)[:, 0]
+    return jnp.mean((energy - batch.labels.astype(energy.dtype)) ** 2)

@@ -1,0 +1,137 @@
+"""Graph substrate: batch container + segment-op message passing.
+
+JAX sparse is BCOO-only, so message passing is built on explicit edge lists
+and ``jax.ops.segment_sum`` / ``segment_max`` — this IS part of the system
+(kernel regime 1 of the GNN taxonomy).  Batched small graphs (the
+``molecule`` shape) are disjoint unions with offset node ids (PyG-style), so
+every model operates on one flat (N, ...) graph.
+
+Sharding: edges shard over the batch axes ("pod","data"); node features
+shard over "model" for the large-graph shapes; segment reductions over
+sharded edges become partial sums + XLA-inserted reduce-scatter.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import BATCH_AXES, maybe_shard  # noqa: F401
+# re-exported for models that add constraints inside scan bodies
+
+EDGE_SPEC = P(BATCH_AXES)          # (E,) arrays
+EDGE_SPEC_ALL = P(BATCH_AXES + ("model",))  # 256-way edge sharding
+NODE_SPEC = P("model")             # (N, ...) arrays, dim 0
+
+
+class GraphBatch(NamedTuple):
+    x: jax.Array            # (N, F) node features
+    pos: Optional[jax.Array]  # (N, 3) coordinates (equivariant models)
+    src: jax.Array          # (E,) int32
+    dst: jax.Array          # (E,) int32
+    edge_mask: jax.Array    # (E,) bool (padding)
+    node_mask: jax.Array    # (N,) bool
+    labels: Optional[jax.Array] = None   # (N,) int32 or (G,) targets
+    graph_id: Optional[jax.Array] = None  # (N,) int32 for graph pooling
+
+    @property
+    def n_nodes(self) -> int:
+        return self.x.shape[0]
+
+
+def shard_graph(batch: GraphBatch, edges_over_model: bool = False
+                ) -> GraphBatch:
+    spec = EDGE_SPEC_ALL if edges_over_model else EDGE_SPEC
+
+    def ed(a):
+        return maybe_shard(a, spec) if a is not None else None
+
+    def nd(a, spec=NODE_SPEC):
+        return maybe_shard(a, spec) if a is not None else None
+
+    return batch._replace(
+        x=nd(batch.x, P("model", None)),
+        pos=nd(batch.pos, P("model", None)),
+        src=ed(batch.src), dst=ed(batch.dst), edge_mask=ed(batch.edge_mask),
+        node_mask=nd(batch.node_mask, P("model")),
+    )
+
+
+def gather_src(batch: GraphBatch, h: jax.Array) -> jax.Array:
+    return jnp.take(h, batch.src, axis=0)
+
+
+def gather_dst(batch: GraphBatch, h: jax.Array) -> jax.Array:
+    return jnp.take(h, batch.dst, axis=0)
+
+
+def scatter_sum(messages: jax.Array, dst: jax.Array, n_nodes: int,
+                edge_mask: Optional[jax.Array] = None) -> jax.Array:
+    if edge_mask is not None:
+        mshape = (-1,) + (1,) * (messages.ndim - 1)
+        messages = messages * edge_mask.reshape(mshape).astype(messages.dtype)
+    return jax.ops.segment_sum(messages, dst, num_segments=n_nodes)
+
+
+def scatter_mean(messages: jax.Array, dst: jax.Array, n_nodes: int,
+                 edge_mask: Optional[jax.Array] = None) -> jax.Array:
+    s = scatter_sum(messages, dst, n_nodes, edge_mask)
+    ones = (edge_mask.astype(messages.dtype) if edge_mask is not None
+            else jnp.ones(dst.shape[0], messages.dtype))
+    deg = jax.ops.segment_sum(ones, dst, num_segments=n_nodes)
+    deg = jnp.maximum(deg, 1.0)
+    return s / deg.reshape((-1,) + (1,) * (messages.ndim - 1))
+
+
+def edge_softmax(scores: jax.Array, dst: jax.Array, n_nodes: int,
+                 edge_mask: Optional[jax.Array] = None) -> jax.Array:
+    """Per-destination softmax over incoming edges. scores (E, ...)."""
+    if edge_mask is not None:
+        mshape = (-1,) + (1,) * (scores.ndim - 1)
+        scores = jnp.where(edge_mask.reshape(mshape), scores, -1e30)
+    mx = jax.ops.segment_max(scores, dst, num_segments=n_nodes)
+    ex = jnp.exp(scores - jnp.take(mx, dst, axis=0))
+    if edge_mask is not None:
+        ex = ex * edge_mask.reshape(mshape).astype(ex.dtype)
+    den = jax.ops.segment_sum(ex, dst, num_segments=n_nodes)
+    den = jnp.maximum(jnp.take(den, dst, axis=0), 1e-20)
+    return ex / den
+
+
+def graph_pool(h: jax.Array, graph_id: jax.Array, n_graphs: int,
+               node_mask: Optional[jax.Array] = None) -> jax.Array:
+    if node_mask is not None:
+        h = h * node_mask[:, None].astype(h.dtype)
+    return jax.ops.segment_sum(h, graph_id, num_segments=n_graphs)
+
+
+def mlp(x, ws, act=jax.nn.silu):
+    """ws: list of (w, b); activation between layers, none after last."""
+    for i, (w, b) in enumerate(ws):
+        x = x @ w.astype(x.dtype) + b.astype(x.dtype)
+        if i < len(ws) - 1:
+            x = act(x.astype(jnp.float32)).astype(x.dtype)
+    return x
+
+
+def mlp_init(rng, dims, dtype=jnp.float32):
+    ws = []
+    for i in range(len(dims) - 1):
+        rng, k = jax.random.split(rng)
+        scale = (1.0 / dims[i]) ** 0.5
+        ws.append((
+            (jax.random.normal(k, (dims[i], dims[i + 1]), jnp.float32)
+             * scale).astype(dtype),
+            jnp.zeros((dims[i + 1],), dtype)))
+    return ws
+
+
+def node_class_loss(logits: jax.Array, labels: jax.Array,
+                    node_mask: jax.Array):
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    ce = (logz - ll) * node_mask.astype(jnp.float32)
+    return jnp.sum(ce) / jnp.maximum(1.0, jnp.sum(node_mask))

@@ -1,0 +1,198 @@
+"""SO(3) numerics for the equivariant GNNs (NequIP, EquiformerV2).
+
+- ``real_sph_harm``: real spherical harmonics up to l_max via the
+  associated-Legendre recurrence, expressed in Cartesian form (no trig),
+  plain (no Condon-Shortley) convention, ordering m = -l..l with
+  Y_1 ∝ (y, z, x).
+- ``wigner_d_stack``: real-basis Wigner rotation matrices D^l(R) via the
+  Ivanic–Ruedenberg recursion (J. Phys. Chem. 1996 + 1998 errata) —
+  real arithmetic only, batched over edges, jit-safe.
+- ``real_clebsch_gordan``: real-basis coupling tensors computed numerically
+  as the invariant subspace of D^{l1} ⊗ D^{l2} ⊗ D^{l3} (SVD projection at
+  module-build time) — convention-free by construction.
+
+Validated in tests/test_so3.py by the defining property
+Y_l(R r) = D^l(R) Y_l(r) and TP equivariance.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ------------------------------------------------------- spherical harmonics
+
+def real_sph_harm(l_max: int, vec: jax.Array) -> list[jax.Array]:
+    """vec (..., 3) unit vectors -> [Y_0 (...,1), Y_1 (...,3), ...].
+
+    Y_{l,m} with K_l^m = sqrt((2l+1)/(4pi) (l-|m|)!/(l+|m|)!) and the
+    Cartesian azimuth recurrence A_m, B_m (no trig calls).
+    """
+    x, y, z = vec[..., 0], vec[..., 1], vec[..., 2]
+    # Q_l^m = P_l^m / sin^m(theta), polynomial in z, NO Condon-Shortley.
+    q = {}
+    q[(0, 0)] = jnp.ones_like(z)
+    for m in range(1, l_max + 1):
+        q[(m, m)] = q[(m - 1, m - 1)] * (2 * m - 1)
+    for m in range(0, l_max):
+        q[(m + 1, m)] = z * (2 * m + 1) * q[(m, m)]
+    for m in range(0, l_max + 1):
+        for l in range(m + 2, l_max + 1):
+            q[(l, m)] = ((2 * l - 1) * z * q[(l - 1, m)]
+                         - (l + m - 1) * q[(l - 2, m)]) / (l - m)
+    # azimuth recurrence: A_m = Re[(x+iy)^m], B_m = Im[(x+iy)^m]
+    a = [jnp.ones_like(x)]
+    b = [jnp.zeros_like(x)]
+    for m in range(1, l_max + 1):
+        a.append(x * a[m - 1] - y * b[m - 1])
+        b.append(x * b[m - 1] + y * a[m - 1])
+
+    out = []
+    for l in range(l_max + 1):
+        cols = []
+        for m in range(-l, l + 1):
+            am = abs(m)
+            k = math.sqrt((2 * l + 1) / (4 * math.pi)
+                          * math.factorial(l - am) / math.factorial(l + am))
+            if m == 0:
+                cols.append(k * q[(l, 0)])
+            elif m > 0:
+                cols.append(math.sqrt(2.0) * k * a[am] * q[(l, am)])
+            else:
+                cols.append(math.sqrt(2.0) * k * b[am] * q[(l, am)])
+        out.append(jnp.stack(cols, axis=-1))
+    return out
+
+
+# ------------------------------------------------------------- Wigner D
+
+def _d1_from_rotation(r: jax.Array) -> jax.Array:
+    """D^1 in the real-SH basis ordered (m=-1,0,1) == (y,z,x).
+
+    r (..., 3, 3) Cartesian rotation acting as v' = r @ v.
+    """
+    perm = [1, 2, 0]  # (y, z, x)
+    rows = [[r[..., perm[i], perm[j]] for j in range(3)] for i in range(3)]
+    return jnp.stack([jnp.stack(row, axis=-1) for row in rows], axis=-2)
+
+
+def wigner_d_stack(l_max: int, r: jax.Array) -> list[jax.Array]:
+    """[D^0 (...,1,1), D^1 (...,3,3), ... D^{l_max}] via Ivanic–Ruedenberg."""
+    batch = r.shape[:-2]
+    ds = [jnp.ones(batch + (1, 1), r.dtype)]
+    if l_max == 0:
+        return ds
+    d1 = _d1_from_rotation(r)
+    ds.append(d1)
+
+    def r1(i, j):          # i, j in {-1, 0, 1}
+        return d1[..., i + 1, j + 1]
+
+    for l in range(2, l_max + 1):
+        dp = ds[l - 1]     # (..., 2l-1, 2l-1)
+
+        def rp(mu, mp, _dp=dp, _l=l):
+            return _dp[..., mu + _l - 1, mp + _l - 1]
+
+        def P(i, mu, mp, _l=l):
+            if abs(mp) < _l:
+                return r1(i, 0) * rp(mu, mp)
+            if mp == _l:
+                return r1(i, 1) * rp(mu, _l - 1) - r1(i, -1) * rp(mu, -_l + 1)
+            return r1(i, 1) * rp(mu, -_l + 1) + r1(i, -1) * rp(mu, _l - 1)
+
+        rows = []
+        for m in range(-l, l + 1):
+            row = []
+            for mp in range(-l, l + 1):
+                denom = ((l + mp) * (l - mp) if abs(mp) < l
+                         else (2 * l) * (2 * l - 1))
+                am = abs(m)
+                u_c = math.sqrt((l + m) * (l - m) / denom)
+                v_c = 0.5 * math.sqrt((1 + (m == 0)) * (l + am - 1)
+                                      * (l + am) / denom) * (1 - 2 * (m == 0))
+                w_c = -0.5 * math.sqrt((l - am - 1) * (l - am) / denom) \
+                    * (1 - (m == 0))
+                entry = 0.0
+                if u_c != 0.0:
+                    entry = entry + u_c * P(0, m, mp)
+                if v_c != 0.0:
+                    if m == 0:
+                        V = P(1, 1, mp) + P(-1, -1, mp)
+                    elif m > 0:
+                        V = (P(1, m - 1, mp) * math.sqrt(1 + (m == 1))
+                             - P(-1, -m + 1, mp) * (1 - (m == 1)))
+                    else:
+                        V = (P(1, m + 1, mp) * (1 - (m == -1))
+                             + P(-1, -m - 1, mp) * math.sqrt(1 + (m == -1)))
+                    entry = entry + v_c * V
+                if w_c != 0.0:
+                    if m > 0:
+                        W = P(1, m + 1, mp) + P(-1, -m - 1, mp)
+                    else:
+                        W = P(1, m - 1, mp) - P(-1, -m + 1, mp)
+                    entry = entry + w_c * W
+                row.append(entry)
+            rows.append(jnp.stack(row, axis=-1))
+        ds.append(jnp.stack(rows, axis=-2))
+    return ds
+
+
+def rotation_to_align_z(vec: jax.Array, eps: float = 1e-12) -> jax.Array:
+    """Rotation R (..., 3, 3) with R @ v_hat == z_hat (eSCN edge alignment)."""
+    v = vec / jnp.maximum(jnp.linalg.norm(vec, axis=-1, keepdims=True), eps)
+    # pick a reference not parallel to v
+    ref_x = jnp.broadcast_to(jnp.array([1.0, 0.0, 0.0], vec.dtype), v.shape)
+    ref_y = jnp.broadcast_to(jnp.array([0.0, 1.0, 0.0], vec.dtype), v.shape)
+    parallel = jnp.abs(v[..., 0:1]) > 0.9
+    ref = jnp.where(parallel, ref_y, ref_x)
+    b1 = ref - v * jnp.sum(ref * v, axis=-1, keepdims=True)
+    b1 = b1 / jnp.maximum(jnp.linalg.norm(b1, axis=-1, keepdims=True), eps)
+    b2 = jnp.cross(v, b1)
+    # rows of R are the new basis: R @ v == z_hat
+    return jnp.stack([b1, b2, v], axis=-2)
+
+
+# --------------------------------------------------------- real CG tensors
+
+@functools.lru_cache(maxsize=None)
+def real_clebsch_gordan(l1: int, l2: int, l3: int) -> np.ndarray:
+    """Real-basis coupling tensor C (2l1+1, 2l2+1, 2l3+1), unit Frobenius
+    norm, satisfying C ∘ (D1 ⊗ D2) = D3 ∘ C.
+
+    Computed as the invariant subspace of D1 ⊗ D2 ⊗ D3 over random
+    rotations (multiplicity 1 for valid triangles).
+    """
+    if not (abs(l1 - l2) <= l3 <= l1 + l2):
+        return np.zeros((2 * l1 + 1, 2 * l2 + 1, 2 * l3 + 1))
+    rng = np.random.default_rng(1234 + 100 * l1 + 10 * l2 + l3)
+    d1, d2, d3 = 2 * l1 + 1, 2 * l2 + 1, 2 * l3 + 1
+    dim = d1 * d2 * d3
+    acc = np.zeros((dim, dim))
+    lmax = max(l1, l2, l3)
+    for _ in range(4):
+        # random rotation via QR
+        q, r = np.linalg.qr(rng.standard_normal((3, 3)))
+        q = q * np.sign(np.diag(r))
+        if np.linalg.det(q) < 0:
+            q[:, 0] = -q[:, 0]
+        # eager even if first called during a jit trace (omnistaging)
+        with jax.ensure_compile_time_eval():
+            ds = wigner_d_stack(lmax, jnp.asarray(q))
+        D1 = np.asarray(ds[l1], np.float64)
+        D2 = np.asarray(ds[l2], np.float64)
+        D3 = np.asarray(ds[l3], np.float64)
+        big = np.einsum("ac,bd,ef->abecdf", D1, D2, D3).reshape(dim, dim)
+        acc += (np.eye(dim) - big).T @ (np.eye(dim) - big)
+    w, v = np.linalg.eigh(acc)
+    assert w[0] < 1e-8, f"no invariant vector for ({l1},{l2},{l3}): {w[0]}"
+    assert dim == 1 or w[1] > 1e-6, f"multiplicity > 1 for ({l1},{l2},{l3})"
+    c = v[:, 0].reshape(d1, d2, d3)
+    # fix sign deterministically
+    flat = c.reshape(-1)
+    c = c * np.sign(flat[np.argmax(np.abs(flat))])
+    return c.astype(np.float32)

@@ -1,0 +1,176 @@
+"""Mixture-of-Experts FFN with sort-based capacity dispatch (no one-hot
+dispatch einsum: FLOPs stay ~ active-expert FLOPs).
+
+Dispatch: top-k routing -> rank of each (token, slot) within its expert via
+argsort -> scatter into an (E, capacity, d) buffer -> expert SwiGLU -> gather
+back and combine with renormalized router weights.
+
+Sharding: experts over "model" (EP), capacity over the batch axes; the
+scatter/gather across those shardings is XLA's all-to-all equivalent.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import BATCH_AXES, maybe_shard
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff: int                      # per-expert hidden size
+    capacity_factor: float = 1.25
+    aux_coef: float = 0.01
+
+
+def moe_ffn(x: jax.Array, router_w: jax.Array, e_gate: jax.Array,
+            e_up: jax.Array, e_down: jax.Array, mcfg: MoEConfig):
+    """x (T, d) -> (out (T, d), aux_loss scalar f32).
+
+    router_w (d, E); e_gate/e_up (E, d, f); e_down (E, f, d).
+    """
+    t, d = x.shape
+    e, k = mcfg.n_experts, mcfg.top_k
+    cap = int((t * k / e) * mcfg.capacity_factor) + 1
+    cap = min(cap, t)
+    # round up to 256 so the capacity dim shards on any mesh axis (a
+    # non-divisible cap silently loses its sharding -> 16x replicated
+    # expert matmuls; found by the §Perf profile)
+    cap = ((cap + 255) // 256) * 256
+
+    logits = (x.astype(jnp.float32) @ router_w.astype(jnp.float32))  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topv, topi = jax.lax.top_k(probs, k)                 # (T, k)
+    topv = topv / jnp.sum(topv, axis=-1, keepdims=True)  # renormalize
+
+    # ---- load-balance aux loss (Switch): E * sum_e f_e * P_e
+    counts = jnp.zeros((e,), jnp.float32).at[topi.reshape(-1)].add(1.0)
+    f_e = counts / (t * k)
+    p_e = probs.mean(axis=0)
+    aux = mcfg.aux_coef * e * jnp.sum(f_e * p_e)
+
+    # ---- sort-based position-in-expert ranks
+    flat_e = topi.reshape(-1)                            # (T*k,)
+    order = jnp.argsort(flat_e)
+    sorted_e = flat_e[order]
+    seg_start = jnp.searchsorted(sorted_e, jnp.arange(e))
+    pos_sorted = jnp.arange(t * k) - seg_start[sorted_e]
+    pos = jnp.zeros((t * k,), jnp.int32).at[order].set(
+        pos_sorted.astype(jnp.int32))
+    keep = pos < cap
+
+    # ---- scatter tokens into (E * cap, d), dropping over-capacity slots
+    token_of_slot = jnp.repeat(jnp.arange(t), k)         # (T*k,)
+    x_slots = x[token_of_slot]                           # (T*k, d)
+    tgt = jnp.where(keep, flat_e * cap + pos, e * cap)
+    buf = jnp.zeros((e * cap, d), x.dtype).at[tgt].add(x_slots, mode="drop")
+    buf = buf.reshape(e, cap, d)
+    buf = maybe_shard(buf, P("model", BATCH_AXES, None))
+
+    # ---- expert SwiGLU (grouped matmuls; experts sharded over "model")
+    g = jnp.einsum("ecd,edf->ecf", buf, e_gate.astype(buf.dtype))
+    u = jnp.einsum("ecd,edf->ecf", buf, e_up.astype(buf.dtype))
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(buf.dtype) * u
+    y = jnp.einsum("ecf,efd->ecd", h, e_down.astype(buf.dtype))
+    y = maybe_shard(y, P("model", BATCH_AXES, None))
+
+    # ---- gather back and combine
+    y_flat = y.reshape(e * cap, d)
+    safe_tgt = jnp.where(keep, tgt, 0)
+    y_slots = jnp.where(keep[:, None], y_flat[safe_tgt], 0)
+    w_slots = topv.reshape(-1).astype(y_slots.dtype)
+    out = jnp.zeros((t, d), x.dtype).at[token_of_slot].add(
+        y_slots * w_slots[:, None])
+    return out, aux
+
+
+def moe_ffn_local_dispatch(x: jax.Array, router_w: jax.Array,
+                           e_gate: jax.Array, e_up: jax.Array,
+                           e_down: jax.Array, mcfg: MoEConfig):
+    """shard_map MoE with the explicit collective schedule:
+
+      dispatch  : tokens scatter into THIS data-shard's capacity slice of
+                  THIS model-shard's experts — zero wire
+      expert FFN: (E/ep_ranks, cap/dp_ranks, d) fully sharded — zero wire
+      combine   : partial token outputs psum over "model" — the only
+                  collective (plus a pmean for the aux loss)
+
+    Replaces the einsum-dispatch path whose sharded scatter lowers to
+    whole-buffer all-reduces (see EXPERIMENTS.md §Perf / granite).
+    Falls back to `moe_ffn` when no mesh is active (CPU smoke tests).
+    """
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or mesh.empty or "model" not in mesh.axis_names:
+        return moe_ffn(x, router_w, e_gate, e_up, e_down, mcfg)
+
+    t, d = x.shape
+    e, k = mcfg.n_experts, mcfg.top_k
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    sizes = dict(zip(mesh.axis_names, mesh.axis_sizes))
+    dp = 1
+    for a in batch_axes:
+        dp *= sizes[a]
+    mp = sizes["model"]
+    if t % dp != 0 or e % mp != 0:
+        return moe_ffn(x, router_w, e_gate, e_up, e_down, mcfg)
+    ep = e // mp                      # experts per model rank
+    tl = t // dp                      # tokens per data rank
+    cap_l = int((tl * k / e) * mcfg.capacity_factor) + 1
+    cap_l = ((min(cap_l, tl) + 127) // 128) * 128
+
+    def body(x_l, rw, eg, eu, edn):
+        # x_l (tl, d); eg/eu (ep, d, fe); edn (ep, fe, d); rw (d, e)
+        my_lo = jax.lax.axis_index("model") * ep
+        logits = x_l.astype(jnp.float32) @ rw.astype(jnp.float32)
+        probs = jax.nn.softmax(logits, axis=-1)
+        topv, topi = jax.lax.top_k(probs, k)
+        topv = topv / jnp.sum(topv, axis=-1, keepdims=True)
+
+        counts = jnp.zeros((e,), jnp.float32).at[topi.reshape(-1)].add(1.0)
+        f_e = counts / (tl * k)
+        p_e = probs.mean(axis=0)
+        aux = mcfg.aux_coef * e * jnp.sum(f_e * p_e)
+        aux = jax.lax.pmean(aux, batch_axes + ("model",))
+
+        flat_e = topi.reshape(-1)                    # (tl*k,)
+        order = jnp.argsort(flat_e)
+        sorted_e = flat_e[order]
+        seg_start = jnp.searchsorted(sorted_e, jnp.arange(e))
+        pos_sorted = jnp.arange(tl * k) - seg_start[sorted_e]
+        pos = jnp.zeros((tl * k,), jnp.int32).at[order].set(
+            pos_sorted.astype(jnp.int32))
+        e_loc = flat_e - my_lo
+        mine = (e_loc >= 0) & (e_loc < ep) & (pos < cap_l)
+
+        token_of_slot = jnp.repeat(jnp.arange(tl), k)
+        x_slots = x_l[token_of_slot]                 # (tl*k, d)
+        tgt = jnp.where(mine, e_loc * cap_l + pos, ep * cap_l)
+        buf = jnp.zeros((ep * cap_l, d), x_l.dtype).at[tgt].add(
+            x_slots, mode="drop").reshape(ep, cap_l, d)
+
+        g = jnp.einsum("ecd,edf->ecf", buf, eg.astype(buf.dtype))
+        u = jnp.einsum("ecd,edf->ecf", buf, eu.astype(buf.dtype))
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(buf.dtype) * u
+        y = jnp.einsum("ecf,efd->ecd", h, edn.astype(buf.dtype))
+
+        y_flat = y.reshape(ep * cap_l, d)
+        safe = jnp.where(mine, tgt, 0)
+        y_slots = jnp.where(mine[:, None], y_flat[safe], 0)
+        w_slots = topv.reshape(-1).astype(y_slots.dtype)
+        part = jnp.zeros((tl, d), x_l.dtype).at[token_of_slot].add(
+            y_slots * w_slots[:, None])
+        out = jax.lax.psum(part, "model")            # the only collective
+        return out, aux
+
+    in_specs = (P(batch_axes, None), P(None, None),
+                P("model", None, None), P("model", None, None),
+                P("model", None, None))
+    out_specs = (P(batch_axes, None), P())
+    return jax.shard_map(body, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_vma=False)(
+        x, router_w, e_gate, e_up, e_down)

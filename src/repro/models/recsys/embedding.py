@@ -1,0 +1,57 @@
+"""Sharded EmbeddingBag — built, not stubbed.
+
+JAX has no native EmbeddingBag or CSR sparse; the lookup is
+``jnp.take`` + ``jax.ops.segment_sum`` over a single concatenated table
+row-sharded over "model".  On TPU the Pallas `embbag` kernel
+(`repro.kernels.ops.embedding_bag`) replaces the take+reduce composition
+for the bag (multi-hot) path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import maybe_shard
+
+TABLE_SPEC = P("model", None)
+
+
+def field_offsets(vocab_sizes) -> np.ndarray:
+    """Per-field row offsets into the concatenated table."""
+    return np.concatenate([[0], np.cumsum(vocab_sizes)[:-1]]).astype(np.int32)
+
+
+def total_rows(vocab_sizes) -> int:
+    return int(np.sum(vocab_sizes))
+
+
+def init_table(rng, vocab_sizes, dim: int, dtype=jnp.float32,
+               scale: float = 0.01) -> jax.Array:
+    rows = total_rows(vocab_sizes)
+    return (jax.random.normal(rng, (rows, dim), jnp.float32) * scale).astype(
+        dtype)
+
+
+def lookup(table: jax.Array, ids: jax.Array, offsets: jax.Array) -> jax.Array:
+    """Single-hot per-field lookup: ids (B, F) local indices -> (B, F, D)."""
+    table = maybe_shard(table, TABLE_SPEC)
+    flat = (ids + offsets[None, :]).reshape(-1)
+    out = jnp.take(table, flat, axis=0)
+    return out.reshape(*ids.shape, table.shape[-1])
+
+
+def embedding_bag(table: jax.Array, idx: jax.Array, weights: jax.Array,
+                  impl: str = "auto") -> jax.Array:
+    """Weighted multi-hot bag: idx/weights (B, K) -> (B, D).
+
+    ``impl="auto"`` uses the Pallas kernel on TPU, take+reduce elsewhere.
+    """
+    table = maybe_shard(table, TABLE_SPEC)
+    if impl == "auto" and jax.default_backend() != "tpu":
+        rows = jnp.take(table, idx.reshape(-1), axis=0)
+        rows = rows.reshape(*idx.shape, table.shape[-1])
+        return jnp.sum(rows * weights[..., None].astype(rows.dtype), axis=1)
+    from repro.kernels import ops as kops
+    return kops.embedding_bag(table, idx, weights, impl=impl)

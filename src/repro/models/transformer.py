@@ -1,0 +1,389 @@
+"""Decoder-only LM: GQA + RoPE + RMSNorm + SwiGLU, dense or MoE, with
+scan-over-layers, per-layer remat, KV-cache prefill/decode, and mesh-aware
+sharding (TP over "model", FSDP over "data", DP over ("pod","data")).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import attention
+from repro.models.common import (BATCH_AXES, apply_rope, dense_init,
+                                 maybe_shard, rms_norm, swiglu)
+from repro.models.moe import MoEConfig, moe_ffn
+
+
+@dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv: int
+    d_ff: int
+    vocab: int
+    qkv_bias: bool = False
+    moe: Optional[MoEConfig] = None
+    rope_theta: float = 1_000_000.0
+    norm_eps: float = 1e-6
+    dtype: Any = jnp.bfloat16
+    remat: bool = True
+    q_chunk: int = 512
+    kv_chunk: int = 1024
+    use_pallas: bool = False       # Pallas flash-attention on TPU
+    flash_custom_vjp: bool = True  # False = naive autodiff (baseline)
+    train_microbatch: int = 1      # gradient-accumulation factor
+    # sequence-parallel attention: shard query rows over "model" when heads
+    # don't TP-shard (kv is small under GQA and is replicated per shard) —
+    # removes the model-axis replication of attention compute
+    attn_seq_parallel: bool = False
+    sp_degree: int = 16            # query groups == model-axis size
+    # FSDP-shard expert weights over "data" (baseline). False keeps experts
+    # EP-sharded over "model" only: d_model stays contraction-local, so the
+    # expert matmuls shard capacity over "data" instead of re-gathering the
+    # dispatch buffer (8x compute replication observed in the baseline).
+    moe_fsdp: bool = True
+    # "einsum" (baseline) or "local" (shard_map local dispatch: zero-wire
+    # scatter + experts fully sharded + single psum combine)
+    moe_dispatch: str = "einsum"
+    # full sequence parallelism: the residual stream stays sharded over
+    # "model" on the sequence dim end-to-end; FFN/vocab weights drop their
+    # TP axis (replicated over "model", FSDP over "data"); attention uses
+    # the SP path with kv gathered per layer. Zero per-layer output
+    # gathers — the model axis carries only the sequence.
+    full_sp: bool = False
+    # sharding plan (set per arch; heads/kv shard over "model" only when
+    # divisible by the mesh's model axis)
+    shard_heads: bool = False
+    shard_kv: bool = False
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.n_heads
+
+    @property
+    def padded_vocab(self) -> int:
+        """Vocab padded to 256 so the unembed TP-shards evenly (Megatron
+        convention); padded logit columns are masked to -inf."""
+        return ((self.vocab + 255) // 256) * 256
+
+    def param_count(self) -> int:
+        d, dh = self.d_model, self.d_head
+        attn = d * (self.n_heads + 2 * self.n_kv) * dh + self.n_heads * dh * d
+        if self.qkv_bias:
+            attn += (self.n_heads + 2 * self.n_kv) * dh
+        if self.moe is not None:
+            ffn = d * self.moe.n_experts + 3 * self.moe.n_experts * d * self.moe.d_ff
+        else:
+            ffn = 3 * d * self.d_ff
+        per_layer = attn + ffn + 2 * d
+        return self.n_layers * per_layer + 2 * self.vocab * d + d
+
+    def active_param_count(self) -> int:
+        if self.moe is None:
+            return self.param_count()
+        d = self.d_model
+        dh = self.d_head
+        attn = d * (self.n_heads + 2 * self.n_kv) * dh + self.n_heads * dh * d
+        ffn = d * self.moe.n_experts + 3 * self.moe.top_k * d * self.moe.d_ff
+        per_layer = attn + ffn + 2 * d
+        return self.n_layers * per_layer + 2 * self.vocab * d + d
+
+
+# ------------------------------------------------------------------ params
+
+def _layer_defs(cfg: LMConfig):
+    """(name, shape-without-L, pspec, fan_in_axis) for stacked layer params."""
+    d, dh = cfg.d_model, cfg.d_head
+    h_ax = "model" if cfg.shard_heads and not cfg.full_sp else None
+    kv_ax = "model" if cfg.shard_kv and not cfg.full_sp else None
+    ffn_ax = None if cfg.full_sp else "model"
+    defs = [
+        ("ln1", (d,), P(None, None), None),
+        ("ln2", (d,), P(None, None), None),
+        ("wq", (d, cfg.n_heads * dh), P(None, "data", h_ax), 0),
+        ("wk", (d, cfg.n_kv * dh), P(None, "data", kv_ax), 0),
+        ("wv", (d, cfg.n_kv * dh), P(None, "data", kv_ax), 0),
+        ("wo", (cfg.n_heads * dh, d), P(None, h_ax, "data"), 0),
+    ]
+    if cfg.qkv_bias:
+        defs += [
+            ("bq", (cfg.n_heads * dh,), P(None, h_ax), None),
+            ("bk", (cfg.n_kv * dh,), P(None, kv_ax), None),
+            ("bv", (cfg.n_kv * dh,), P(None, kv_ax), None),
+        ]
+    if cfg.moe is None:
+        defs += [
+            ("w_gate", (d, cfg.d_ff), P(None, "data", ffn_ax), 0),
+            ("w_up", (d, cfg.d_ff), P(None, "data", ffn_ax), 0),
+            ("w_down", (cfg.d_ff, d), P(None, ffn_ax, "data"), 0),
+        ]
+    else:
+        e, fe = cfg.moe.n_experts, cfg.moe.d_ff
+        ed_ax = "data" if cfg.moe_fsdp else None
+        defs += [
+            ("router", (d, e), P(None, "data", None), 0),
+            ("e_gate", (e, d, fe), P(None, "model", ed_ax, None), 1),
+            ("e_up", (e, d, fe), P(None, "model", ed_ax, None), 1),
+            ("e_down", (e, fe, d), P(None, "model", None, ed_ax), 1),
+        ]
+    return defs
+
+
+def init_params(cfg: LMConfig, rng: jax.Array) -> Dict:
+    n_defs = len(_layer_defs(cfg))
+    rngs = jax.random.split(rng, n_defs + 2)
+    layers = {}
+    for i, (name, shape, _, fan_axis) in enumerate(_layer_defs(cfg)):
+        full = (cfg.n_layers, *shape)
+        if name.startswith("ln"):
+            layers[name] = jnp.ones(full, jnp.float32)
+        elif fan_axis is None:  # bias
+            layers[name] = jnp.zeros(full, cfg.dtype)
+        else:
+            layers[name] = dense_init(rngs[i], full, in_axis=fan_axis + 1,
+                                      dtype=cfg.dtype)
+    return {
+        "embed": dense_init(rngs[-2], (cfg.padded_vocab, cfg.d_model),
+                            in_axis=1, dtype=cfg.dtype),
+        "unembed": dense_init(rngs[-1], (cfg.d_model, cfg.padded_vocab),
+                              in_axis=0, dtype=cfg.dtype),
+        "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+        "layers": layers,
+    }
+
+
+def param_specs(cfg: LMConfig) -> Dict:
+    """ShapeDtypeStructs matching init_params, without allocating."""
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.key(0)))
+
+
+def param_pspecs(cfg: LMConfig) -> Dict:
+    layers = {name: spec for name, _, spec, _ in _layer_defs(cfg)}
+    return {
+        "embed": P(None, "data"),
+        "unembed": P("data", None if cfg.full_sp else "model"),
+        "final_norm": P(None),
+        "layers": layers,
+    }
+
+
+def _mask_padded_vocab(cfg: LMConfig, logits: jax.Array) -> jax.Array:
+    if cfg.padded_vocab == cfg.vocab:
+        return logits
+    col = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    return jnp.where(col < cfg.vocab, logits, -1e30)
+
+
+# ----------------------------------------------------------------- forward
+
+def _attn_block(cfg: LMConfig, x: jax.Array, lp: Dict, positions: jax.Array,
+                kv_override=None, cache_len=None):
+    """Returns (attn_out (B,T,d), (k, v) of this layer)."""
+    b, t, _ = x.shape
+    h_ax = "model" if cfg.shard_heads else None
+    kv_ax = "model" if cfg.shard_kv else None
+    h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    q = jnp.einsum("btd,dh->bth", h, lp["wq"].astype(h.dtype))
+    k = jnp.einsum("btd,dh->bth", h, lp["wk"].astype(h.dtype))
+    v = jnp.einsum("btd,dh->bth", h, lp["wv"].astype(h.dtype))
+    if cfg.qkv_bias:
+        q = q + lp["bq"].astype(q.dtype)
+        k = k + lp["bk"].astype(k.dtype)
+        v = v + lp["bv"].astype(v.dtype)
+    q = q.reshape(b, t, cfg.n_heads, cfg.d_head)
+    k = k.reshape(b, t, cfg.n_kv, cfg.d_head)
+    v = v.reshape(b, t, cfg.n_kv, cfg.d_head)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    q = maybe_shard(q, P(BATCH_AXES, None, h_ax, None))
+    k = maybe_shard(k, P(BATCH_AXES, None, kv_ax, None))
+    v = maybe_shard(v, P(BATCH_AXES, None, kv_ax, None))
+
+    if kv_override is not None:
+        # decode path: attend against the provided cache
+        k_cache, v_cache = kv_override
+        o = attention.decode_attention(q, k_cache, v_cache, cache_len)
+    elif (cfg.attn_seq_parallel or cfg.full_sp) \
+            and t % cfg.sp_degree == 0 and t > 1:
+        # sequence-parallel: query rows shard over "model"; kv replicated
+        ng = cfg.sp_degree
+        tl = t // ng
+        sp_spec = P(BATCH_AXES + ("model",), None, None, None)
+        q2 = q.reshape(b, ng, tl, cfg.n_heads, cfg.d_head)
+        q2 = maybe_shard(q2.reshape(b * ng, tl, cfg.n_heads, cfg.d_head),
+                         sp_spec)
+        k2 = jnp.broadcast_to(k[:, None], (b, ng, t, cfg.n_kv, cfg.d_head))
+        v2 = jnp.broadcast_to(v[:, None], (b, ng, t, cfg.n_kv, cfg.d_head))
+        k2 = maybe_shard(k2.reshape(b * ng, t, cfg.n_kv, cfg.d_head),
+                         sp_spec)
+        v2 = maybe_shard(v2.reshape(b * ng, t, cfg.n_kv, cfg.d_head),
+                         sp_spec)
+        qpos2 = positions.reshape(b * ng, tl)
+        o2 = attention.flash_chunked(q2, k2, v2, causal=True,
+                                     q_chunk=cfg.q_chunk,
+                                     kv_chunk=cfg.kv_chunk,
+                                     custom_vjp=cfg.flash_custom_vjp,
+                                     qpos=qpos2)
+        o2 = maybe_shard(o2, sp_spec)
+        # staged reshard: unmerge the group dim first so the propagator
+        # sees (batch, model, ...) -> (batch, seq-over-model, ...) cleanly
+        # instead of an involuntary replicate-then-repartition
+        o2 = o2.reshape(b, ng, tl, cfg.n_heads, cfg.d_head)
+        o2 = maybe_shard(o2, P(BATCH_AXES, "model", None, None, None))
+        o = o2.reshape(b, t, cfg.n_heads, cfg.d_head)
+        o = maybe_shard(o, P(BATCH_AXES, "model", None, None))
+        # under full_sp the residual stream is seq-sharded: no gather
+    elif cfg.use_pallas and jax.default_backend() == "tpu":
+        from repro.kernels import ops as kops
+        o = kops.flash_attention(
+            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3), causal=True).transpose(0, 2, 1, 3)
+    else:
+        o = attention.flash_chunked(q, k, v, causal=True,
+                                    q_chunk=cfg.q_chunk,
+                                    kv_chunk=cfg.kv_chunk,
+                                    custom_vjp=cfg.flash_custom_vjp)
+    o = maybe_shard(o, P(BATCH_AXES, None, h_ax, None))
+    o = o.reshape(b, t, cfg.n_heads * cfg.d_head)
+    out = jnp.einsum("bth,hd->btd", o, lp["wo"].astype(o.dtype))
+    return out, (k, v)
+
+
+def _ffn_block(cfg: LMConfig, x: jax.Array, lp: Dict):
+    """Returns (ffn_out (B,T,d), aux f32)."""
+    b, t, d = x.shape
+    h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+    if cfg.moe is None:
+        out = swiglu(h, lp["w_gate"], lp["w_up"], lp["w_down"])
+        return out, jnp.zeros((), jnp.float32)
+    flat = h.reshape(b * t, d)
+    if cfg.moe_dispatch == "local":
+        from repro.models.moe import moe_ffn_local_dispatch
+        out, aux = moe_ffn_local_dispatch(
+            flat, lp["router"], lp["e_gate"], lp["e_up"], lp["e_down"],
+            cfg.moe)
+    else:
+        out, aux = moe_ffn(flat, lp["router"], lp["e_gate"], lp["e_up"],
+                           lp["e_down"], cfg.moe)
+    return out.reshape(b, t, d), aux
+
+
+def _x_spec(cfg: LMConfig) -> P:
+    return P(BATCH_AXES, "model" if cfg.full_sp else None, None)
+
+
+def _layer(cfg: LMConfig, x: jax.Array, lp: Dict, positions: jax.Array):
+    attn, kv = _attn_block(cfg, x, lp, positions)
+    x = x + attn
+    x = maybe_shard(x, _x_spec(cfg))
+    ffn, aux = _ffn_block(cfg, x, lp)
+    x = x + ffn
+    x = maybe_shard(x, _x_spec(cfg))
+    return x, kv, aux
+
+
+def forward(cfg: LMConfig, params: Dict, tokens: jax.Array,
+            positions: Optional[jax.Array] = None,
+            return_cache: bool = False):
+    """tokens (B, T) -> logits (B, T, vocab) [, cache dict]."""
+    b, t = tokens.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32), (b, t))
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.dtype)
+    x = maybe_shard(x, _x_spec(cfg))
+
+    def layer_fn(carry, lp):
+        x, aux_sum = carry
+        x, kv, aux = _layer(cfg, x, lp, positions)
+        ys = kv if return_cache else None
+        return (x, aux_sum + aux), ys
+
+    if cfg.remat:
+        layer_fn = jax.checkpoint(layer_fn)
+    (x, aux_sum), kvs = jax.lax.scan(layer_fn, (x, jnp.zeros((), jnp.float32)),
+                                     params["layers"])
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("btd,dv->btv", x, params["unembed"].astype(x.dtype))
+    logits = _mask_padded_vocab(cfg, logits)
+    logits = maybe_shard(
+        logits, P(BATCH_AXES, "model", None) if cfg.full_sp
+        else P(BATCH_AXES, None, "model"))
+    if return_cache:
+        cache = {"k": kvs[0], "v": kvs[1]}  # (L, B, T, Hkv, dh)
+        return logits, cache, aux_sum
+    return logits, aux_sum
+
+
+def prefill(cfg: LMConfig, params: Dict, tokens: jax.Array, max_len: int):
+    """Run the prompt, returning last-token logits and a cache padded to
+    ``max_len`` along the sequence dim."""
+    logits, cache, _ = forward(cfg, params, tokens, return_cache=True)
+    b, t = tokens.shape
+    pad = max_len - t
+    if pad > 0:
+        pad_cfg = [(0, 0), (0, 0), (0, pad), (0, 0), (0, 0)]
+        cache = {k: jnp.pad(v, pad_cfg) for k, v in cache.items()}
+    cache = {k: maybe_shard(v, P(None, BATCH_AXES, "model", None, None))
+             for k, v in cache.items()}
+    return logits[:, -1], cache
+
+
+def decode_step(cfg: LMConfig, params: Dict, cache: Dict, tokens: jax.Array,
+                pos: jax.Array, seq_axes=("model",)):
+    """One decode step. tokens (B,) int32; pos scalar int32 (aligned batch).
+
+    cache: {"k","v"}: (L, B, S, Hkv, dh); ``seq_axes`` shards the sequence
+    dim (flash-decode): ("model",) for batched decode, all mesh axes for
+    batch-1 long-context decode.  Returns (logits (B, vocab), new cache).
+    """
+    b = tokens.shape[0]
+    x = jnp.take(params["embed"], tokens, axis=0)[:, None, :].astype(cfg.dtype)
+    positions = jnp.broadcast_to(pos[None, None], (b, 1)).astype(jnp.int32)
+
+    cache_spec = P(None, BATCH_AXES, seq_axes, None, None)
+
+    # scan body written explicitly (cache update must happen before attend)
+    def body(x, xs):
+        lp, kc, vc = xs
+        bsz, t, _ = x.shape
+        h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+        q = jnp.einsum("btd,dh->bth", h, lp["wq"].astype(h.dtype))
+        k = jnp.einsum("btd,dh->bth", h, lp["wk"].astype(h.dtype))
+        v = jnp.einsum("btd,dh->bth", h, lp["wv"].astype(h.dtype))
+        if cfg.qkv_bias:
+            q = q + lp["bq"].astype(q.dtype)
+            k = k + lp["bk"].astype(k.dtype)
+            v = v + lp["bv"].astype(v.dtype)
+        q = q.reshape(bsz, t, cfg.n_heads, cfg.d_head)
+        k = k.reshape(bsz, t, cfg.n_kv, cfg.d_head)
+        v = v.reshape(bsz, t, cfg.n_kv, cfg.d_head)
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        kc = jax.lax.dynamic_update_slice_in_dim(kc, k.astype(kc.dtype), pos,
+                                                 axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(vc, v.astype(vc.dtype), pos,
+                                                 axis=1)
+        kc = maybe_shard(kc, P(BATCH_AXES, seq_axes, None, None))
+        vc = maybe_shard(vc, P(BATCH_AXES, seq_axes, None, None))
+        o = attention.decode_attention(q, kc, vc, cache_len=pos + 1)
+        o = o.reshape(bsz, t, cfg.n_heads * cfg.d_head)
+        attn = jnp.einsum("bth,hd->btd", o, lp["wo"].astype(o.dtype))
+        x = x + attn
+        ffn, _ = _ffn_block(cfg, x, lp)
+        x = x + ffn
+        return x, (kc, vc)
+
+    x, (kcs, vcs) = jax.lax.scan(body, x, (params["layers"], cache["k"],
+                                           cache["v"]))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("btd,dv->btv", x, params["unembed"].astype(x.dtype))
+    logits = _mask_padded_vocab(cfg, logits)
+    logits = maybe_shard(logits, P(BATCH_AXES, None, "model"))
+    new_cache = {"k": maybe_shard(kcs, cache_spec),
+                 "v": maybe_shard(vcs, cache_spec)}
+    return logits[:, 0], new_cache

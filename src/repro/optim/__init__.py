@@ -1,0 +1,5 @@
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update  # noqa: F401
+from repro.optim.compression import (  # noqa: F401
+    CompressionConfig, compress_init, compress_gradients,
+)
+from repro.optim.schedule import cosine_schedule  # noqa: F401

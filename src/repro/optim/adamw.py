@@ -1,0 +1,86 @@
+"""AdamW with fp32 moments + fp32 master weights over bf16 params.
+
+Optimizer state carries the same sharding as the params (FSDP over "data"
+via the param pspecs == ZeRO-style sharded optimizer), so no extra pspec
+table is needed.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    use_master: bool = True
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: dict
+    v: dict
+    master: dict | None
+
+
+def adamw_init(params, cfg: AdamWConfig) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    # copy=True: an f32 param would otherwise alias its master (breaks
+    # buffer donation)
+    master = (jax.tree.map(
+        lambda p: jnp.array(p, dtype=jnp.float32, copy=True), params)
+        if cfg.use_master else None)
+    return AdamWState(jnp.zeros((), jnp.int32), zeros,
+                      jax.tree.map(jnp.copy, zeros), master)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def adamw_update(grads, state: AdamWState, params, cfg: AdamWConfig,
+                 lr_scale: jax.Array | float = 1.0):
+    """Returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    step = state.step + 1
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+    lr = cfg.lr * lr_scale
+
+    def upd(g, m, v, p, master):
+        g = g.astype(jnp.float32) * clip
+        m_new = cfg.b1 * m + (1 - cfg.b1) * g
+        v_new = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mh = m_new / b1c
+        vh = v_new / b2c
+        base = master if master is not None else p.astype(jnp.float32)
+        new_master = base - lr * (mh / (jnp.sqrt(vh) + cfg.eps)
+                                  + cfg.weight_decay * base)
+        return new_master.astype(p.dtype), m_new, v_new, new_master
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    flat_p = treedef.flatten_up_to(params)
+    flat_ma = (treedef.flatten_up_to(state.master)
+               if state.master is not None else [None] * len(flat_p))
+    outs = [upd(g, m, v, p, ma) for g, m, v, p, ma in
+            zip(flat_g, flat_m, flat_v, flat_p, flat_ma)]
+    new_params = treedef.unflatten([o[0] for o in outs])
+    new_m = treedef.unflatten([o[1] for o in outs])
+    new_v = treedef.unflatten([o[2] for o in outs])
+    new_master = (treedef.unflatten([o[3] for o in outs])
+                  if cfg.use_master else None)
+    return new_params, AdamWState(step, new_m, new_v, new_master), {
+        "grad_norm": gnorm}

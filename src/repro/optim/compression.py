@@ -1,0 +1,52 @@
+"""Gradient compression with error feedback (distributed-optimization trick).
+
+Top-k magnitude sparsification per tensor with an error-feedback residual
+(Stich et al.; 1-bit Adam lineage).  Applied to gradients *before* the
+optimizer; on a real pod this shrinks the reduce-scatter payload — the
+compressed gradient is what crosses the ICI, the residual stays local.
+
+Usage:
+    comp_state = compress_init(params)
+    grads, comp_state = compress_gradients(grads, comp_state, cfg)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class CompressionConfig:
+    ratio: float = 0.05      # keep top 5% of entries per tensor
+    min_size: int = 4096     # don't compress tiny tensors (norm weights etc.)
+
+
+def compress_init(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def _topk_mask(x: jax.Array, k: int) -> jax.Array:
+    flat = jnp.abs(x.reshape(-1))
+    thresh = jax.lax.top_k(flat, k)[0][-1]
+    return (jnp.abs(x) >= thresh).astype(x.dtype)
+
+
+def compress_gradients(grads, residual, cfg: CompressionConfig):
+    """Returns (compressed_grads, new_residual)."""
+
+    def comp(g, r):
+        gf = g.astype(jnp.float32) + r
+        if gf.size < cfg.min_size:
+            return gf.astype(g.dtype), jnp.zeros_like(gf)
+        k = max(1, int(gf.size * cfg.ratio))
+        mask = _topk_mask(gf, k)
+        sent = gf * mask
+        return sent.astype(g.dtype), gf - sent
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_r = treedef.flatten_up_to(residual)
+    outs = [comp(g, r) for g, r in zip(flat_g, flat_r)]
+    return (treedef.unflatten([o[0] for o in outs]),
+            treedef.unflatten([o[1] for o in outs]))

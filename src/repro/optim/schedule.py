@@ -1,0 +1,13 @@
+"""LR schedules."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(step, warmup: int, total: int, floor: float = 0.1):
+    """Scale factor in [floor, 1]: linear warmup then cosine decay."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(1.0, step / max(1, warmup))
+    frac = jnp.clip((step - warmup) / max(1, total - warmup), 0.0, 1.0)
+    cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    return warm * cos

@@ -1,0 +1,167 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), all in seconds-per-step per chip:
+
+  compute    = HLO_FLOPs_per_device / peak_FLOPs          (197 TF/s bf16)
+  memory     = HLO_bytes_per_device / HBM_bw              (819 GB/s)
+  collective = wire_bytes_per_device / link_bw            (~50 GB/s/link)
+
+FLOPs/bytes come from ``compiled.cost_analysis()`` (the partitioned,
+per-device module).  Collective bytes are NOT in cost_analysis: we parse
+``compiled.as_text()`` and sum result sizes of every collective op, scaled
+by the standard ring-model wire factors:
+
+  all-gather       (n-1)/n * out_bytes
+  all-reduce       2 (n-1)/n * bytes
+  reduce-scatter   (n-1) * out_bytes       (out is the scattered shard)
+  all-to-all       (n-1)/n * bytes
+  collective-permute   bytes
+
+The model assumes collectives serialize on one link (no compute overlap) —
+a deliberately conservative upper bound; §Perf notes where overlap would
+shrink the real number.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+from typing import Dict
+
+
+@dataclass(frozen=True)
+class HW:
+    peak_flops: float = 197e12     # bf16 per chip (TPU v5e)
+    hbm_bw: float = 819e9          # bytes/s per chip
+    link_bw: float = 50e9          # bytes/s per ICI link
+
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*(\([^=]*?\)|[\w\[\],{}\s]+?)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(", )
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> Dict:
+    """Sum wire bytes of every collective in (post-SPMD, per-device) HLO."""
+    per_type: Dict[str, float] = {}
+    counts: Dict[str, int] = {}
+    total = 0.0
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        if "-done" in line.split("=")[0]:
+            continue
+        type_str, op = m.group(1), m.group(2)
+        size = _shape_bytes(type_str)
+        g = _GROUPS_BRACE_RE.search(line)
+        if g:
+            n = len(g.group(1).split(","))
+        else:
+            g2 = _GROUPS_IOTA_RE.search(line)
+            n = int(g2.group(2)) if g2 else 2
+        n = max(n, 2)
+        if op == "all-gather":
+            wire = size * (n - 1) / n
+        elif op == "all-reduce":
+            wire = 2.0 * size * (n - 1) / n
+        elif op == "reduce-scatter":
+            wire = size * (n - 1)
+        elif op == "all-to-all":
+            wire = size * (n - 1) / n
+        else:  # collective-permute
+            wire = float(size)
+        per_type[op] = per_type.get(op, 0.0) + wire
+        counts[op] = counts.get(op, 0) + 1
+        total += wire
+    return {"total_wire_bytes": total, "per_type": per_type,
+            "counts": counts}
+
+
+def roofline_terms(flops: float, bytes_accessed: float, wire_bytes: float,
+                   hw: HW = HW()) -> Dict[str, float]:
+    compute = flops / hw.peak_flops
+    memory = bytes_accessed / hw.hbm_bw
+    collective = wire_bytes / hw.link_bw
+    dominant = max(("compute", compute), ("memory", memory),
+                   ("collective", collective), key=lambda kv: kv[1])[0]
+    bound = max(compute, memory, collective)
+    return {
+        "compute_s": compute, "memory_s": memory, "collective_s": collective,
+        "dominant": dominant, "step_lower_bound_s": bound,
+    }
+
+
+def analyze_compiled(compiled, model_flops: float, n_devices: int,
+                     hw: HW = HW()) -> Dict:
+    """Full per-cell analysis from a compiled executable.
+
+    Primary cost source is the scan-aware HLO walker (hlo_cost.py); XLA's
+    built-in cost_analysis is recorded as a secondary column (it counts
+    while bodies once, so it under-reports scanned models by ~n_layers x).
+    """
+    from repro.roofline.hlo_cost import analyze_hlo_text
+
+    hlo = compiled.as_text()
+    scan_cost = analyze_hlo_text(hlo)
+    flops = scan_cost.flops
+    bytes_accessed = scan_cost.bytes
+    coll = {
+        "total_wire_bytes": scan_cost.wire,
+        "per_type": scan_cost.coll_per_type,
+        "counts": scan_cost.coll_counts,
+    }
+    xla_cost = compiled.cost_analysis()
+    if isinstance(xla_cost, (list, tuple)):
+        xla_cost = xla_cost[0]
+    terms = roofline_terms(flops, bytes_accessed, coll["total_wire_bytes"],
+                           hw)
+    global_flops = flops * n_devices
+    mem = {}
+    try:
+        ma = compiled.memory_analysis()
+        for attr in ("generated_code_size_in_bytes",
+                     "argument_size_in_bytes", "output_size_in_bytes",
+                     "temp_size_in_bytes", "alias_size_in_bytes"):
+            if hasattr(ma, attr):
+                mem[attr] = int(getattr(ma, attr))
+    except Exception as e:  # CPU backend may not support it
+        mem["error"] = str(e)
+    useful = model_flops / global_flops if global_flops else 0.0
+    return {
+        "per_device_flops": flops,
+        "per_device_bytes": bytes_accessed,
+        "collectives": coll,
+        "model_flops": model_flops,
+        "useful_flops_ratio": useful,
+        "xla_cost_flops_scan_once": float(xla_cost.get("flops", 0.0)),
+        "xla_cost_bytes_scan_once": float(
+            xla_cost.get("bytes accessed", 0.0)),
+        "roofline": terms,
+        "compute_fraction_of_bound": (
+            terms["compute_s"] / terms["step_lower_bound_s"]
+            if terms["step_lower_bound_s"] > 0 else 0.0),
+        "memory_analysis": mem,
+    }

@@ -1,0 +1,351 @@
+"""Scan-aware HLO cost analysis.
+
+XLA's ``compiled.cost_analysis()`` counts every computation ONCE — a
+``jax.lax.scan`` over 64 layers reports 1/64th of the real FLOPs.  This
+parser walks the compiled (post-SPMD, per-device) HLO text, extracts while
+trip counts from the loop-condition constants, and accumulates:
+
+  flops       dot/custom-call matmuls (2*M*N*K from shapes + contracting
+              dims) + 1 flop/element for other value-producing ops
+  bytes       operand + result sizes per top-level instruction; fusion
+              internals are free (models fused execution); dynamic-slice /
+              dynamic-update-slice count slice-sized traffic (in-place)
+  wire bytes  collective payloads x ring-model factors (see analysis.py)
+
+each multiplied by the product of enclosing while trip counts.  Dynamic
+``while_loop``s without a constant bound multiply by the largest integer
+constant in their condition (an upper bound for jax's fori/scan pattern)
+or 1 if none exists.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_SHAPE_TOKEN = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_HEADER = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->")
+_TRIP_ATTR = re.compile(r"\"known_trip_count\":\{\"n\":\"(\d+)\"\}")
+_INSTR = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)$")
+_ATTR_COMP = re.compile(r"(?:body|to_apply|calls)=%?([\w\.\-]+)")
+_COND_ATTR = re.compile(r"condition=%?([\w\.\-]+)")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_CONST_INT = re.compile(r"constant\((\d+)\)")
+_REPL_BRACE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_REPL_IOTA = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+}
+
+FREE_OPS = {"parameter", "get-tuple-element", "tuple", "bitcast", "constant",
+            "after-all", "partition-id", "replica-id", "iota", "opt-barrier"}
+COLLECTIVES = {"all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute", "all-reduce-start", "all-gather-start",
+               "collective-permute-start"}
+
+
+def _type_sizes(type_str: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for dtype, dims in _SHAPE_TOKEN.findall(type_str):
+        if dtype in DTYPE_BYTES:
+            out.append((dtype, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+def _bytes_of(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _type_sizes(type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * DTYPE_BYTES[dtype]
+    return total
+
+
+def _elems_of(type_str: str) -> int:
+    total = 0
+    for _, dims in _type_sizes(type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n
+    return total
+
+
+_OPERAND_NAME = re.compile(r"%([\w\.\-]+)")
+
+
+@dataclass
+class Instr:
+    name: str
+    result_type: str
+    op: str
+    rest: str   # everything after the opening '('
+
+    def operand_names(self) -> List[str]:
+        paren = self.rest.split(")")[0]
+        return _OPERAND_NAME.findall(paren)
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: List[Instr] = field(default_factory=list)
+    types: Dict[str, str] = field(default_factory=dict)  # name -> type str
+
+    def operand_types(self, instr: Instr) -> List[str]:
+        return [self.types.get(n, "") for n in instr.operand_names()]
+
+
+def parse_hlo(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_HEADER.match(line.strip())
+            if m and line.rstrip().endswith("{"):
+                cur = Computation(m.group(1))
+            continue
+        if line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _INSTR.match(line)
+        if m:
+            ins = Instr(m.group(1), m.group(2), m.group(3), m.group(4))
+            cur.instrs.append(ins)
+            cur.types[ins.name] = ins.result_type
+    return comps
+
+
+def _dot_flops(instr: Instr, comp: Computation) -> float:
+    result_elems = _elems_of(instr.result_type)
+    ops = comp.operand_types(instr)
+    m = _CONTRACT.search(instr.rest)
+    if not ops or not ops[0]:
+        return 0.0
+    lhs_sizes = _type_sizes(ops[0])
+    if not lhs_sizes:
+        return 0.0
+    lhs_dims = lhs_sizes[0][1]
+    k = 1
+    if m:
+        for idx in [int(x) for x in m.group(1).split(",") if x]:
+            if idx < len(lhs_dims):
+                k *= lhs_dims[idx]
+    else:  # custom-call matmul: assume last lhs dim contracts
+        k = lhs_dims[-1] if lhs_dims else 1
+    return 2.0 * result_elems * k
+
+
+def _wire_bytes(instr: Instr) -> float:
+    size = _bytes_of(instr.result_type)
+    g = _REPL_BRACE.search(instr.rest)
+    if g:
+        n = len(g.group(1).split(","))
+    else:
+        g2 = _REPL_IOTA.search(instr.rest)
+        n = int(g2.group(2)) if g2 else 2
+    n = max(n, 2)
+    op = instr.op.replace("-start", "")
+    if op == "all-gather":
+        return size * (n - 1) / n
+    if op == "all-reduce":
+        return 2.0 * size * (n - 1) / n
+    if op == "reduce-scatter":
+        return size * (n - 1)
+    if op == "all-to-all":
+        return size * (n - 1) / n
+    return float(size)  # collective-permute
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    wire: float = 0.0
+    coll_per_type: Dict[str, float] = field(default_factory=dict)
+    coll_counts: Dict[str, float] = field(default_factory=dict)
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        self.wire += other.wire * mult
+        for k, v in other.coll_per_type.items():
+            self.coll_per_type[k] = self.coll_per_type.get(k, 0) + v * mult
+        for k, v in other.coll_counts.items():
+            self.coll_counts[k] = self.coll_counts.get(k, 0) + v * mult
+
+
+def _trip_count(cond: Computation) -> float:
+    best = 1
+    for ins in cond.instrs:
+        for c in _CONST_INT.finditer(ins.rest):
+            best = max(best, int(c.group(1)))
+        for c in _CONST_INT.finditer(ins.result_type):
+            best = max(best, int(c.group(1)))
+    return float(best)
+
+
+def _comp_cost(comp: Computation, comps: Dict[str, Computation],
+               cache: Dict[str, Cost], flops_only: bool = False) -> Cost:
+    key = comp.name + ("/f" if flops_only else "")
+    if key in cache:
+        return cache[key]
+    total = Cost()
+    cache[key] = total  # break cycles defensively
+    for ins in comp.instrs:
+        op = ins.op
+        if op in FREE_OPS:
+            continue
+        if op == "while":
+            body_m = _ATTR_COMP.search(ins.rest)
+            cond_m = _COND_ATTR.search(ins.rest)
+            if body_m and body_m.group(1) in comps:
+                tm = _TRIP_ATTR.search(ins.rest)
+                if tm:
+                    trip = float(tm.group(1))
+                elif cond_m and cond_m.group(1) in comps:
+                    trip = _trip_count(comps[cond_m.group(1)])
+                else:
+                    trip = 1.0
+                total.add(_comp_cost(comps[body_m.group(1)], comps, cache,
+                                     flops_only), trip)
+            continue
+        if op in COLLECTIVES:
+            if not flops_only:
+                w = _wire_bytes(ins)
+                total.wire += w
+                base = op.replace("-start", "")
+                total.coll_per_type[base] = \
+                    total.coll_per_type.get(base, 0) + w
+                total.coll_counts[base] = total.coll_counts.get(base, 0) + 1
+                total.bytes += _bytes_of(ins.result_type)
+            continue
+        if op in ("fusion", "call", "conditional", "map"):
+            sub = _ATTR_COMP.search(ins.rest)
+            if sub and sub.group(1) in comps:
+                # fusion internals: flops recurse, bytes don't (fused)
+                total.add(_comp_cost(comps[sub.group(1)], comps, cache,
+                                     flops_only=True))
+            if not flops_only:
+                total.bytes += _bytes_of(ins.result_type)
+                for t in comp.operand_types(ins):
+                    total.bytes += _bytes_of(t)
+            continue
+        if op in ("dot", "custom-call") and (
+                op == "dot" or "matmul" in ins.rest or "dot" in ins.rest):
+            total.flops += _dot_flops(ins, comp)
+            if not flops_only:
+                total.bytes += _bytes_of(ins.result_type)
+                for t in comp.operand_types(ins):
+                    total.bytes += _bytes_of(t)
+            continue
+        if op == "convolution":
+            # approx: 2 * result_elems * prod(kernel spatial+channel)
+            ops_t = comp.operand_types(ins)
+            k_elems = _elems_of(ops_t[1]) if len(ops_t) > 1 else 1
+            res = _elems_of(ins.result_type)
+            res_ch = 1
+            total.flops += 2.0 * res * max(1, k_elems // max(1, res_ch))
+            if not flops_only:
+                total.bytes += _bytes_of(ins.result_type)
+                for t in ops_t:
+                    total.bytes += _bytes_of(t)
+            continue
+        # default: elementwise-ish
+        total.flops += _elems_of(ins.result_type)
+        if flops_only:
+            continue
+        if op == "dynamic-update-slice":
+            ops_t = comp.operand_types(ins)
+            upd = _bytes_of(ops_t[1]) if len(ops_t) > 1 else 0
+            total.bytes += 2.0 * upd      # read update + write slice
+        elif op in ("dynamic-slice", "gather"):
+            total.bytes += 2.0 * _bytes_of(ins.result_type)
+        elif op == "scatter":
+            ops_t = comp.operand_types(ins)
+            upd = _bytes_of(ops_t[-1]) if ops_t else 0
+            total.bytes += 3.0 * upd
+        elif op == "copy":
+            total.bytes += 2.0 * _bytes_of(ins.result_type)
+        else:
+            total.bytes += _bytes_of(ins.result_type)
+            for t in comp.operand_types(ins):
+                total.bytes += _bytes_of(t)
+    cache[key] = total
+    return total
+
+
+def analyze_hlo_text(text: str) -> Cost:
+    comps = parse_hlo(text)
+    entry = None
+    # entry is the computation containing the module's ROOT... heuristic:
+    # the one never referenced by others.
+    referenced = set()
+    for c in comps.values():
+        for ins in c.instrs:
+            for m in _ATTR_COMP.finditer(ins.rest):
+                referenced.add(m.group(1))
+            m = _COND_ATTR.search(ins.rest)
+            if m:
+                referenced.add(m.group(1))
+    candidates = [c for name, c in comps.items() if name not in referenced]
+    if not candidates:
+        candidates = list(comps.values())
+    # pick the largest unreferenced computation
+    entry = max(candidates, key=lambda c: len(c.instrs))
+    return _comp_cost(entry, comps, {})
+
+
+def top_contributors(text: str, k: int = 25, metric: str = "flops"):
+    """Per-instruction cost attribution (multiplied by enclosing trip
+    counts) — the dry-run 'profiler' used by the §Perf hillclimb."""
+    comps = parse_hlo(text)
+    referenced = set()
+    for c in comps.values():
+        for ins in c.instrs:
+            for m in _ATTR_COMP.finditer(ins.rest):
+                referenced.add(m.group(1))
+            m = _COND_ATTR.search(ins.rest)
+            if m:
+                referenced.add(m.group(1))
+    candidates = [c for name, c in comps.items() if name not in referenced]
+    entry = max(candidates or list(comps.values()),
+                key=lambda c: len(c.instrs))
+
+    rows = []
+
+    def walk(comp: Computation, mult: float, seen):
+        if comp.name in seen:
+            return
+        for ins in comp.instrs:
+            op = ins.op
+            if op in FREE_OPS:
+                continue
+            if op == "while":
+                body_m = _ATTR_COMP.search(ins.rest)
+                tm = _TRIP_ATTR.search(ins.rest)
+                cond_m = _COND_ATTR.search(ins.rest)
+                trip = 1.0
+                if tm:
+                    trip = float(tm.group(1))
+                elif cond_m and cond_m.group(1) in comps:
+                    trip = _trip_count(comps[cond_m.group(1)])
+                if body_m and body_m.group(1) in comps:
+                    walk(comps[body_m.group(1)], mult * trip,
+                         seen | {comp.name})
+                continue
+            sub_cost = Cost()
+            single = Computation(comp.name + "/x", [ins], comp.types)
+            c = _comp_cost(single, comps, {})
+            rows.append((getattr(c, metric) * mult, ins.op, ins.name,
+                         ins.result_type[:60], mult))
+
+    walk(entry, 1.0, set())
+    rows.sort(reverse=True)
+    return rows[:k]

@@ -1,0 +1,2 @@
+from repro.train.state import TrainState, make_train_state  # noqa: F401
+from repro.train.step import make_lm_train_step, lm_loss  # noqa: F401

@@ -1,0 +1,42 @@
+"""GPipe-style pipeline parallelism as a config-selectable feature.
+
+Stages are mapped over the leading axis of a stacked-parameter pytree; one
+``lax.scan`` over S + M - 1 clock ticks runs every stage in parallel per
+tick (vmap over the stage axis — sharded P("stage"|"model") on a mesh, the
+per-tick buffer shift becomes a neighbor collective-permute).  Bubble
+fraction is the usual (S-1)/(S+M-1).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gpipe_apply(stage_fn, stacked_params, microbatches: jax.Array):
+    """stage_fn(params_s, x) -> y, same shape as x.
+
+    stacked_params: pytree with leading stage axis S.
+    microbatches:   (M, ...) inputs.
+    Returns (M, ...) outputs of the full S-stage pipeline.
+    """
+    s = jax.tree.leaves(stacked_params)[0].shape[0]
+    m = microbatches.shape[0]
+    ticks = s + m - 1
+
+    def tick(buf, t):
+        outs = jax.vmap(stage_fn)(stacked_params, buf)   # (S, ...)
+        nxt_idx = jnp.minimum(t + 1, m - 1)
+        nxt_in = microbatches[nxt_idx]
+        buf_next = jnp.concatenate([nxt_in[None], outs[:-1]], axis=0)
+        return buf_next, outs[-1]
+
+    buf0 = jnp.concatenate(
+        [microbatches[0][None],
+         jnp.zeros((s - 1,) + microbatches.shape[1:], microbatches.dtype)],
+        axis=0)
+    _, ys = jax.lax.scan(tick, buf0, jnp.arange(ticks))
+    return ys[s - 1:]
+
+
+def bubble_fraction(n_stages: int, n_microbatches: int) -> float:
+    return (n_stages - 1) / (n_stages + n_microbatches - 1)

@@ -1,0 +1,27 @@
+"""Training state container."""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.adamw import AdamWConfig, AdamWState, adamw_init
+
+
+class TrainState(NamedTuple):
+    step: jax.Array
+    params: dict
+    opt: AdamWState
+    comp_residual: Optional[dict]  # gradient-compression error feedback
+
+
+def make_train_state(params, opt_cfg: AdamWConfig,
+                     compression: bool = False) -> TrainState:
+    from repro.optim.compression import compress_init
+    return TrainState(
+        step=jnp.zeros((), jnp.int32),
+        params=params,
+        opt=adamw_init(params, opt_cfg),
+        comp_residual=compress_init(params) if compression else None,
+    )

@@ -1,0 +1,103 @@
+"""LM train-step builder: loss -> grad -> (optional compression) -> AdamW."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import transformer
+from repro.models.common import BATCH_AXES, maybe_shard
+from repro.optim.adamw import AdamWConfig, adamw_update
+from repro.optim.compression import CompressionConfig, compress_gradients
+from repro.optim.schedule import cosine_schedule
+from repro.train.state import TrainState
+
+
+def lm_loss(cfg: transformer.LMConfig, params, batch):
+    """Next-token cross entropy (+ MoE aux).  batch: tokens/labels (B, S)."""
+    logits, aux = transformer.forward(cfg, params, batch["tokens"])
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, batch["labels"][..., None],
+                             axis=-1)[..., 0]
+    mask = batch.get("mask")
+    ce = logz - ll
+    if mask is not None:
+        ce = jnp.sum(ce * mask) / jnp.maximum(1.0, jnp.sum(mask))
+    else:
+        ce = jnp.mean(ce)
+    return ce + aux, {"ce": ce, "aux": aux}
+
+
+def make_train_step(loss_fn, opt_cfg: AdamWConfig,
+                    compression: Optional[CompressionConfig] = None,
+                    warmup: int = 100, total_steps: int = 10_000,
+                    microbatch: int = 1):
+    """Generic builder: loss_fn(params, batch) -> (loss, aux_dict).
+
+    ``microbatch > 1`` splits the global batch along dim 0 and accumulates
+    gradients over a scan — live activations shrink by the microbatch
+    factor at the cost of re-running the fwd/bwd M times (the standard
+    memory/step-time trade at large global batch).
+
+    Returns train_step(state, batch) -> (state, metrics)."""
+
+    def grad_fn(params, batch):
+        if microbatch <= 1:
+            return jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+
+        def split(x):
+            return x.reshape((microbatch, x.shape[0] // microbatch)
+                             + x.shape[1:])
+
+        mb = jax.tree.map(split, batch)
+
+        def body(carry, sub):
+            loss_acc, parts_acc, g_acc = carry
+            (loss, parts), g = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, sub)
+            g_acc = jax.tree.map(
+                lambda a, b: a + b.astype(jnp.float32) / microbatch,
+                g_acc, g)
+            parts_acc = jax.tree.map(lambda a, b: a + b / microbatch,
+                                     parts_acc, parts)
+            return (loss_acc + loss / microbatch, parts_acc, g_acc), None
+
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        parts0 = jax.eval_shape(
+            lambda: loss_fn(params, jax.tree.map(lambda x: x[0], mb))[1])
+        parts0 = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), parts0)
+        (loss, parts, grads), _ = jax.lax.scan(
+            body, (jnp.zeros((), jnp.float32), parts0, g0), mb)
+        return (loss, parts), grads
+
+    def train_step(state: TrainState, batch):
+        (loss, parts), grads = grad_fn(state.params, batch)
+        residual = state.comp_residual
+        if compression is not None and residual is not None:
+            grads, residual = compress_gradients(grads, residual, compression)
+        lr_scale = cosine_schedule(state.step, warmup, total_steps)
+        new_params, new_opt, om = adamw_update(grads, state.opt, state.params,
+                                               opt_cfg, lr_scale)
+        metrics = {"loss": loss, **parts, **om, "lr_scale": lr_scale}
+        return TrainState(state.step + 1, new_params, new_opt, residual), \
+            metrics
+
+    return train_step
+
+
+def make_lm_train_step(cfg: transformer.LMConfig, opt_cfg: AdamWConfig,
+                       compression: Optional[CompressionConfig] = None,
+                       warmup: int = 100, total_steps: int = 10_000,
+                       microbatch: int = 1):
+    """Returns train_step(state, batch) -> (state, metrics)."""
+
+    def loss_fn(params, batch):
+        batch = {k: maybe_shard(v, P(BATCH_AXES, None))
+                 for k, v in batch.items()}
+        return lm_loss(cfg, params, batch)
+
+    return make_train_step(loss_fn, opt_cfg, compression, warmup,
+                           total_steps, microbatch=microbatch)

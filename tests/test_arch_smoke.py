@@ -1,0 +1,13 @@
+"""Per-architecture smoke tests: reduced same-family config, one
+forward/train step on CPU, finite outputs (assigned-architecture
+deliverable f)."""
+import pytest
+
+from repro.configs import list_archs, run_smoke
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_arch_smoke(arch):
+    metrics = run_smoke(arch)
+    assert "loss" in metrics
+    assert metrics["loss"] == metrics["loss"]  # not NaN

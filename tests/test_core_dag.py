@@ -1,0 +1,193 @@
+"""Unit tests for the batched concurrent DAG engine."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import bitset, dag, reachability, acyclic
+from repro.core.oracle import SeqGraph
+
+CAP = 64
+
+
+def arr(xs, dtype=jnp.int32):
+    return jnp.asarray(xs, dtype)
+
+
+def test_pack_unpack_roundtrip():
+    rng = np.random.default_rng(0)
+    bits = rng.random((5, 96)) < 0.3
+    packed = bitset.pack_bits(jnp.asarray(bits))
+    assert packed.dtype == jnp.uint32
+    out = np.asarray(bitset.unpack_bits(packed))
+    np.testing.assert_array_equal(out, bits)
+
+
+def test_popcount():
+    rng = np.random.default_rng(1)
+    bits = rng.random((7, 128)) < 0.5
+    packed = bitset.pack_bits(jnp.asarray(bits))
+    np.testing.assert_array_equal(
+        np.asarray(bitset.popcount(packed)), bits.sum(-1))
+
+
+def test_scatter_set_clear_bits_duplicates():
+    packed = jnp.zeros((CAP, CAP // 32), jnp.uint32)
+    rows = arr([3, 3, 3, 5, 5])
+    cols = arr([7, 7, 8, 9, 9])   # duplicates (3,7) and (5,9)
+    en = jnp.ones(5, bool)
+    packed = bitset.scatter_set_bits(packed, rows, cols, en)
+    got = np.asarray(bitset.unpack_bits(packed))
+    want = np.zeros((CAP, CAP), bool)
+    want[3, 7] = want[3, 8] = want[5, 9] = True
+    np.testing.assert_array_equal(got, want)
+    # clearing with duplicates
+    packed = bitset.scatter_clear_bits(packed, rows, cols, en)
+    assert not np.asarray(bitset.unpack_bits(packed)).any()
+
+
+def test_add_remove_vertices():
+    st = dag.new_state(CAP)
+    st, ok = dag.add_vertices(st, arr([10, 20, 10, 30]))
+    np.testing.assert_array_equal(np.asarray(ok), [True] * 4)
+    assert int(dag.live_vertex_count(st)) == 3
+    # re-add existing -> True, no new slot
+    st, ok = dag.add_vertices(st, arr([20]))
+    assert bool(ok[0]) and int(dag.live_vertex_count(st)) == 3
+    # remove: duplicate remove in one batch -> second False
+    st, ok = dag.remove_vertices(st, arr([20, 20, 99]))
+    np.testing.assert_array_equal(np.asarray(ok), [True, False, False])
+    assert int(dag.live_vertex_count(st)) == 2
+
+
+def test_vertex_capacity_overflow():
+    st = dag.new_state(32)
+    st, ok = dag.add_vertices(st, arr(list(range(40))))
+    assert int(jnp.sum(ok)) == 32
+    assert int(st.n_overflow) == 8
+    # freeing slots allows recycling
+    st, _ = dag.remove_vertices(st, arr(list(range(16))))
+    st, ok = dag.add_vertices(st, arr(list(range(100, 116))))
+    assert bool(jnp.all(ok))
+
+
+def test_edges_and_contains():
+    st = dag.new_state(CAP)
+    st, _ = dag.add_vertices(st, arr([1, 2, 3]))
+    st, ok = dag.add_edges(st, arr([1, 2, 9]), arr([2, 3, 1]))
+    np.testing.assert_array_equal(np.asarray(ok), [True, True, False])
+    np.testing.assert_array_equal(
+        np.asarray(dag.contains_edges(st, arr([1, 2, 3]), arr([2, 3, 1]))),
+        [True, True, False])
+    st, ok = dag.remove_edges(st, arr([1]), arr([2]))
+    assert bool(ok[0])
+    assert not bool(dag.contains_edges(st, arr([1]), arr([2]))[0])
+    # removing an absent edge with live endpoints still returns True (spec)
+    st, ok = dag.remove_edges(st, arr([1]), arr([2]))
+    assert bool(ok[0])
+
+
+def test_remove_vertex_clears_incident_edges():
+    st = dag.new_state(CAP)
+    st, _ = dag.add_vertices(st, arr([1, 2, 3]))
+    st, _ = dag.add_edges(st, arr([1, 2, 3]), arr([2, 3, 1]))
+    st, _ = dag.remove_vertices(st, arr([2]))
+    assert int(dag.edge_count(st)) == 1  # only 3->1 remains
+    # slot recycling must not resurrect edges
+    st, _ = dag.add_vertices(st, arr([4]))
+    np.testing.assert_array_equal(
+        np.asarray(dag.contains_edges(st, arr([1, 4]), arr([4, 3]))),
+        [False, False])
+
+
+def test_path_exists_and_closure():
+    st = dag.new_state(CAP)
+    st, _ = dag.add_vertices(st, arr([1, 2, 3, 4, 5]))
+    st, _ = dag.add_edges(st, arr([1, 2, 3]), arr([2, 3, 4]))
+    got = reachability.path_exists(
+        st, arr([1, 1, 4, 5, 2]), arr([4, 5, 1, 1, 2]))
+    np.testing.assert_array_equal(np.asarray(got),
+                                  [True, False, False, False, False])
+    assert bool(reachability.is_acyclic(st.adj))
+    st, _ = dag.add_edges(st, arr([4]), arr([1]))
+    assert not bool(reachability.is_acyclic(st.adj))
+
+
+def test_acyclic_add_edges_basic():
+    st = dag.new_state(CAP)
+    st, _ = dag.add_vertices(st, arr([1, 2, 3]))
+    st, ok = acyclic.acyclic_add_edges(st, arr([1, 2]), arr([2, 3]))
+    assert bool(jnp.all(ok))
+    # closing edge 3->1 must be rejected and backed out
+    st, ok = acyclic.acyclic_add_edges(st, arr([3]), arr([1]))
+    assert not bool(ok[0])
+    assert not bool(dag.contains_edges(st, arr([3]), arr([1]))[0])
+    assert bool(reachability.is_acyclic(st.adj))
+    # re-adding an existing edge -> True
+    st, ok = acyclic.acyclic_add_edges(st, arr([1]), arr([2]))
+    assert bool(ok[0])
+    # self loop -> False
+    st, ok = acyclic.acyclic_add_edges(st, arr([2]), arr([2]))
+    assert not bool(ok[0])
+
+
+def test_acyclic_joint_false_positive_semantics():
+    """Two batch edges on one cycle must BOTH abort (paper's relaxed spec)."""
+    st = dag.new_state(CAP)
+    st, _ = dag.add_vertices(st, arr([1, 2, 3, 4]))
+    st, _ = dag.add_edges(st, arr([1, 3]), arr([2, 4]))  # 1->2, 3->4
+    # batch {2->3, 4->1} jointly closes the 4-cycle: both rejected
+    st, ok = acyclic.acyclic_add_edges(st, arr([2, 4]), arr([3, 1]))
+    np.testing.assert_array_equal(np.asarray(ok), [False, False])
+    assert bool(reachability.is_acyclic(st.adj))
+    # with subbatches=2 (sequentialized), the first succeeds
+    st, ok = acyclic.acyclic_add_edges(st, arr([2, 4]), arr([3, 1]),
+                                       subbatches=2)
+    np.testing.assert_array_equal(np.asarray(ok), [True, False])
+    assert bool(reachability.is_acyclic(st.adj))
+
+
+def test_mixed_batch_matches_oracle():
+    st = dag.new_state(CAP)
+    st, _ = dag.add_vertices(st, arr([1, 2, 3, 4, 5]))
+    st, _ = dag.add_edges(st, arr([1, 2]), arr([2, 3]))
+    g = SeqGraph()
+    for v in [1, 2, 3, 4, 5]:
+        g.add_vertex(v)
+    g.add_edge(1, 2)
+    g.add_edge(2, 3)
+
+    ops = arr([dag.REMOVE_VERTEX, dag.ADD_VERTEX, dag.ADD_EDGE,
+               dag.CONTAINS_EDGE, dag.CONTAINS_VERTEX, dag.REMOVE_EDGE])
+    a = arr([3, 6, 4, 1, 3, 2])
+    b = arr([0, 0, 5, 2, 0, 3])
+    st2, res = dag.apply_op_batch(st, ops, a, b)
+    from repro.core.oracle import apply_op_batch_oracle
+    want = apply_op_batch_oracle(g, np.asarray(ops), np.asarray(a),
+                                 np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(res), want)
+    assert set(np.asarray(st2.keys)[np.asarray(st2.alive)]) == g.vertices
+
+
+def test_sequential_baseline_matches_batch_for_reads():
+    st = dag.new_state(CAP)
+    st, _ = dag.add_vertices(st, arr([1, 2, 3]))
+    ops = arr([dag.ADD_EDGE, dag.CONTAINS_EDGE])
+    a, b = arr([1, 1]), arr([2, 2])
+    _, res = dag.apply_op_sequential(st, ops, a, b)
+    np.testing.assert_array_equal(np.asarray(res), [True, True])
+
+
+def test_sgt_scheduler_tick():
+    from repro.core import sgt
+    st = sgt.new_scheduler(CAP)
+    st, ok = sgt.begin(st, arr([1, 2, 3, 4]))
+    assert bool(jnp.all(ok))
+    # conflicts 1->2, 2->3 fine; 3->1 closes a cycle -> txn 3 aborts
+    st, acc = sgt.conflicts(st, arr([1, 2, 3]), arr([2, 3, 1]), subbatches=3)
+    np.testing.assert_array_equal(np.asarray(acc), [True, True, False])
+    assert int(st.n_aborted) == 1
+    assert not bool(dag.contains_vertices(st.graph, arr([3]))[0])
+    st, ok = sgt.finish(st, arr([1, 2]))
+    assert int(st.n_committed) == 2
+    assert int(dag.live_vertex_count(st.graph)) == 1  # txn 4

@@ -1,0 +1,138 @@
+"""Hypothesis property tests: linearizability-by-construction + invariants.
+
+The batched engine's outcome on random mixed workloads must equal the
+sequential oracle replayed in the documented linearization order, and the
+acyclic engine must keep the graph acyclic in every reachable state.
+"""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import acyclic, dag, reachability
+from repro.core.oracle import SeqGraph, apply_op_batch_oracle
+
+CAP = 64
+KEYS = st.integers(min_value=0, max_value=15)
+
+op_strategy = st.tuples(
+    st.sampled_from([dag.REMOVE_VERTEX, dag.ADD_VERTEX, dag.REMOVE_EDGE,
+                     dag.ADD_EDGE, dag.CONTAINS_VERTEX, dag.CONTAINS_EDGE]),
+    KEYS, KEYS)
+
+
+def _drain(state):
+    alive = np.asarray(state.alive)
+    keys = np.asarray(state.keys)
+    adj = np.asarray(jnp.asarray(
+        __import__("repro.core.bitset", fromlist=["unpack_bits"])
+        .unpack_bits(state.adj)))
+    verts = set(keys[alive].tolist())
+    edges = set()
+    slot_key = {i: int(keys[i]) for i in range(len(keys)) if alive[i]}
+    for i in slot_key:
+        for j in slot_key:
+            if adj[i, j]:
+                edges.add((slot_key[i], slot_key[j]))
+    return verts, edges
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(op_strategy, min_size=1, max_size=24))
+def test_mixed_batches_match_oracle(ops):
+    """Sequence of random mixed batches == oracle replay (plain AddEdge)."""
+    state = dag.new_state(CAP)
+    g = SeqGraph(capacity=CAP)
+    # split into batches of up to 6 ops
+    for i in range(0, len(ops), 6):
+        chunk = ops[i:i + 6]
+        o = jnp.asarray([c[0] for c in chunk], jnp.int32)
+        a = jnp.asarray([c[1] for c in chunk], jnp.int32)
+        b = jnp.asarray([c[2] for c in chunk], jnp.int32)
+        state, res = dag.apply_op_batch(state, o, a, b)
+        want = apply_op_batch_oracle(g, np.asarray(o), np.asarray(a),
+                                     np.asarray(b))
+        np.testing.assert_array_equal(np.asarray(res), want)
+    verts, edges = _drain(state)
+    assert verts == g.vertices
+    assert edges == g.edges
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.tuples(KEYS, KEYS), min_size=1, max_size=20),
+       st.sampled_from([1, 2, 4]))
+def test_acyclic_engine_invariant_and_oracle(pairs, subbatches):
+    """Acyclicity holds in every reachable state; joint-abort semantics match
+    the relaxed oracle when sub-batch layouts align."""
+    state = dag.new_state(CAP)
+    keys = sorted({k for p in pairs for k in p})
+    state, _ = dag.add_vertices(state, jnp.asarray(keys, jnp.int32))
+    g = SeqGraph()
+    for k in keys:
+        g.add_vertex(k)
+
+    # pad batch to a multiple of subbatches with invalid ops
+    n = len(pairs)
+    pad = (-n) % subbatches
+    us = jnp.asarray([p[0] for p in pairs] + [0] * pad, jnp.int32)
+    vs = jnp.asarray([p[1] for p in pairs] + [0] * pad, jnp.int32)
+    valid = jnp.asarray([True] * n + [False] * pad)
+
+    state, ok = acyclic.acyclic_add_edges(state, us, vs, valid=valid,
+                                          subbatches=subbatches)
+    assert bool(reachability.is_acyclic(state.adj))
+
+    # oracle replay with matching sub-batch layout
+    per = (n + pad) // subbatches
+    flat_ok = []
+    for s in range(subbatches):
+        chunk = [(int(us[i]), int(vs[i])) for i in range(s * per, (s + 1) * per)
+                 if bool(valid[i])]
+        flat_ok.extend(g.acyclic_add_edges_joint(chunk))
+    np.testing.assert_array_equal(np.asarray(ok)[:n], flat_ok)
+    assert g.is_acyclic()
+    _, edges = _drain(state)
+    assert edges == g.edges
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.tuples(KEYS, KEYS), min_size=1, max_size=30))
+def test_path_exists_matches_oracle(pairs):
+    state = dag.new_state(CAP)
+    keys = list(range(16))
+    state, _ = dag.add_vertices(state, jnp.asarray(keys, jnp.int32))
+    g = SeqGraph()
+    for k in keys:
+        g.add_vertex(k)
+    us = jnp.asarray([p[0] for p in pairs], jnp.int32)
+    vs = jnp.asarray([p[1] for p in pairs], jnp.int32)
+    state, _ = dag.add_edges(state, us, vs)
+    for u, v in pairs:
+        g.add_edge(u, v)
+    q_from = jnp.asarray(keys, jnp.int32)
+    q_to = jnp.asarray(keys[::-1], jnp.int32)
+    got = np.asarray(reachability.path_exists(state, q_from, q_to))
+    want = [g.path_exists(int(u), int(v)) for u, v in zip(q_from, q_to)]
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.data())
+def test_closure_matches_numpy(data):
+    rng_bits = data.draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(rng_bits)
+    c = 64
+    a = rng.random((c, c)) < 0.05
+    np.fill_diagonal(a, False)
+    packed = __import__("repro.core.bitset", fromlist=["pack_bits"]).pack_bits(
+        jnp.asarray(a))
+    t = np.asarray(
+        __import__("repro.core.bitset", fromlist=["unpack_bits"]).unpack_bits(
+            reachability.transitive_closure(packed)))
+    # numpy reference closure
+    want = a.copy()
+    for _ in range(c):
+        nxt = want | ((want.astype(int) @ a.astype(int)) > 0)
+        if (nxt == want).all():
+            break
+        want = nxt
+    np.testing.assert_array_equal(t, want)

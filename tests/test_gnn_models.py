@@ -1,0 +1,109 @@
+"""GNN model smoke + equivariance tests (reduced configs on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.gnn import (egnn, equiformer_v2, gatedgcn, graphs as G,
+                              nequip, so3)
+
+
+def random_graph(rng, n=24, e=64, d_feat=8, n_classes=4, coords=True,
+                 graphs=1):
+    x = jnp.asarray(rng.standard_normal((n, d_feat)), jnp.float32)
+    pos = jnp.asarray(rng.standard_normal((n, 3)), jnp.float32) if coords \
+        else None
+    src = jnp.asarray(rng.integers(0, n, e), jnp.int32)
+    dst = jnp.asarray(rng.integers(0, n, e), jnp.int32)
+    edge_mask = jnp.asarray(rng.random(e) < 0.9)
+    node_mask = jnp.ones(n, bool)
+    if graphs > 1:
+        graph_id = jnp.asarray(rng.integers(0, graphs, n), jnp.int32)
+        labels = jnp.asarray(rng.standard_normal(graphs), jnp.float32)
+    else:
+        graph_id = jnp.zeros(n, jnp.int32)
+        labels = jnp.asarray(rng.integers(0, n_classes, n), jnp.int32)
+    return G.GraphBatch(x=x, pos=pos, src=src, dst=dst, edge_mask=edge_mask,
+                        node_mask=node_mask, labels=labels,
+                        graph_id=graph_id)
+
+
+def rotate_batch(batch, r):
+    return batch._replace(pos=batch.pos @ jnp.asarray(r).T)
+
+
+def random_rotation(rng):
+    q, r = np.linalg.qr(rng.standard_normal((3, 3)))
+    q = q * np.sign(np.diag(r))
+    if np.linalg.det(q) < 0:
+        q[:, 0] = -q[:, 0]
+    return q
+
+
+def test_gatedgcn_smoke():
+    rng = np.random.default_rng(0)
+    cfg = gatedgcn.GatedGCNConfig(name="t", n_layers=3, d_hidden=16,
+                                  d_feat=8, n_classes=4)
+    b = random_graph(rng, coords=False)
+    params = gatedgcn.init_params(cfg, jax.random.key(0))
+    logits = gatedgcn.forward(cfg, params, b)
+    assert logits.shape == (24, 4)
+    l = gatedgcn.loss(cfg, params, b)
+    assert jnp.isfinite(l)
+    g = jax.grad(lambda p: gatedgcn.loss(cfg, p, b))(params)
+    assert all(jnp.isfinite(x).all() for x in jax.tree.leaves(g))
+
+
+def test_egnn_smoke_and_equivariance():
+    rng = np.random.default_rng(1)
+    cfg = egnn.EGNNConfig(name="t", n_layers=2, d_hidden=16, d_feat=8)
+    b = random_graph(rng, graphs=4)
+    params = egnn.init_params(cfg, jax.random.key(0))
+    h, x = egnn.forward(cfg, params, b)
+    assert h.shape == (24, 16) and x.shape == (24, 3)
+    assert jnp.isfinite(egnn.loss(cfg, params, b))
+    # E(3) equivariance: h invariant, x equivariant
+    r = random_rotation(rng)
+    h2, x2 = egnn.forward(cfg, params, rotate_batch(b, r))
+    np.testing.assert_allclose(np.asarray(h2), np.asarray(h), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(x2), np.asarray(x) @ r.T,
+                               atol=1e-4)
+
+
+def test_nequip_smoke_and_invariance():
+    rng = np.random.default_rng(2)
+    cfg = nequip.NequIPConfig(name="t", n_layers=2, d_hidden=8, d_feat=8)
+    b = random_graph(rng, graphs=4)
+    params = nequip.init_params(cfg, jax.random.key(0))
+    h = nequip.forward(cfg, params, b)
+    assert h[0].shape == (24, 1, 8) and h[1].shape == (24, 3, 8)
+    e1 = nequip.loss(cfg, params, b)
+    assert jnp.isfinite(e1)
+    # rotation invariance of scalars / equivariance of l=1 features
+    r = random_rotation(rng)
+    h2 = nequip.forward(cfg, params, rotate_batch(b, r))
+    np.testing.assert_allclose(np.asarray(h2[0]), np.asarray(h[0]),
+                               atol=1e-4)
+    d1 = np.asarray(so3.wigner_d_stack(1, jnp.asarray(r))[1])
+    want = np.einsum("mk,nkc->nmc", d1, np.asarray(h[1]))
+    np.testing.assert_allclose(np.asarray(h2[1]), want, atol=1e-4)
+
+
+def test_equiformer_v2_smoke_and_invariance():
+    rng = np.random.default_rng(3)
+    cfg = equiformer_v2.EquiformerV2Config(
+        name="t", n_layers=2, d_hidden=16, l_max=3, m_max=2, n_heads=4,
+        d_feat=8, n_classes=4, edge_chunk=32)
+    b = random_graph(rng)
+    params = equiformer_v2.init_params(cfg, jax.random.key(0))
+    h = equiformer_v2.forward(cfg, params, b)
+    assert h[0].shape == (24, 1, 16) and h[3].shape == (24, 7, 16)
+    assert jnp.isfinite(equiformer_v2.loss(cfg, params, b))
+    r = random_rotation(rng)
+    h2 = equiformer_v2.forward(cfg, params, rotate_batch(b, r))
+    np.testing.assert_allclose(np.asarray(h2[0]), np.asarray(h[0]),
+                               rtol=2e-3, atol=2e-4)
+    d1 = np.asarray(so3.wigner_d_stack(1, jnp.asarray(r))[1])
+    want = np.einsum("mk,nkc->nmc", d1, np.asarray(h[1]))
+    np.testing.assert_allclose(np.asarray(h2[1]), want, rtol=2e-3,
+                               atol=2e-4)

@@ -1,0 +1,84 @@
+"""Scan-aware HLO cost analyzer: known-workload validation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.roofline.analysis import collective_bytes_from_hlo, roofline_terms
+from repro.roofline.hlo_cost import analyze_hlo_text
+
+
+def _compile(f, *args):
+    return jax.jit(f).lower(*args).compile()
+
+
+def test_scan_matmul_flops():
+    def step(c, _):
+        return c @ c, None
+
+    def f(x):
+        y, _ = jax.lax.scan(step, x, None, length=7)
+        return y.sum()
+
+    c = analyze_hlo_text(
+        _compile(f, jax.ShapeDtypeStruct((128, 128), jnp.float32)).as_text())
+    want = 7 * 2 * 128 ** 3
+    assert 0.9 < c.flops / want < 1.15
+
+
+def test_nested_scan_flops():
+    def inner(c, _):
+        return c @ c, None
+
+    def outer(c, _):
+        c, _ = jax.lax.scan(inner, c, None, length=5)
+        return c, None
+
+    def g(x):
+        y, _ = jax.lax.scan(outer, x, None, length=3)
+        return y.sum()
+
+    c = analyze_hlo_text(
+        _compile(g, jax.ShapeDtypeStruct((64, 64), jnp.float32)).as_text())
+    want = 15 * 2 * 64 ** 3
+    assert 0.9 < c.flops / want < 1.2
+
+
+def test_dot_general_batch_dims():
+    def f(a, b):
+        return jnp.einsum("bik,bkj->bij", a, b)
+
+    c = analyze_hlo_text(_compile(
+        f, jax.ShapeDtypeStruct((4, 32, 64), jnp.float32),
+        jax.ShapeDtypeStruct((4, 64, 16), jnp.float32)).as_text())
+    want = 2 * 4 * 32 * 16 * 64
+    assert 0.9 < c.flops / want < 1.3
+
+
+def test_bytes_reflect_io():
+    def f(a):
+        return a * 2.0
+
+    c = analyze_hlo_text(_compile(
+        f, jax.ShapeDtypeStruct((1024, 1024), jnp.float32)).as_text())
+    # read + write of 4MB each
+    assert 0.5 < c.bytes / (2 * 4 * 1024 * 1024) < 2.5
+
+
+def test_roofline_terms_dominance():
+    t = roofline_terms(flops=197e12, bytes_accessed=0.0, wire_bytes=0.0)
+    assert t["dominant"] == "compute" and abs(t["compute_s"] - 1.0) < 1e-9
+    t = roofline_terms(flops=0.0, bytes_accessed=819e9, wire_bytes=1.0)
+    assert t["dominant"] == "memory"
+
+
+def test_collective_regex_formats():
+    hlo = """
+  %ag = f32[64,128]{1,0} all-gather(%x), replica_groups={{0,1,2,3}}, dimensions={0}
+  %ar = f32[32]{0} all-reduce(%y), replica_groups=[8,2]<=[16], to_apply=%add
+"""
+    out = collective_bytes_from_hlo(hlo)
+    ag = 64 * 128 * 4 * 3 / 4
+    ar = 2 * 32 * 4 * 1 / 2
+    assert abs(out["per_type"]["all-gather"] - ag) < 1
+    assert abs(out["per_type"]["all-reduce"] - ar) < 1

@@ -1,0 +1,97 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs jnp oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import bitset
+from repro.kernels import ops, ref
+
+
+# ----------------------------------------------------------------- bitmm
+
+@pytest.mark.parametrize("m,k,n", [
+    (128, 128, 128),
+    (64, 256, 512),
+    (256, 512, 256),
+    (8, 1024, 1024),
+])
+@pytest.mark.parametrize("density", [0.0, 0.02, 0.5])
+def test_bitmm_matches_ref(m, k, n, density):
+    rng = np.random.default_rng(m * 7 + n)
+    lhs = bitset.pack_bits(jnp.asarray(rng.random((m, k)) < density))
+    rhs = bitset.pack_bits(jnp.asarray(rng.random((k, n)) < 0.05))
+    want = ref.bitmm_ref(lhs, rhs)
+    got = ops.bitmm_packed(lhs, rhs, impl="pallas_interpret")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_bitmm_agrees_with_core_reachability():
+    """The kernel is a drop-in matmul_impl for the DAG closure."""
+    from repro.core import dag, reachability
+    rng = np.random.default_rng(3)
+    a = rng.random((128, 128)) < 0.03
+    np.fill_diagonal(a, False)
+    adj = bitset.pack_bits(jnp.asarray(a))
+    want = reachability.transitive_closure(adj)
+    got = reachability.transitive_closure(
+        adj, matmul_impl=lambda l, r: ops.bitmm_packed(
+            l, r, impl="pallas_interpret"))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------- embbag
+
+@pytest.mark.parametrize("rows,d,b,k", [
+    (64, 16, 8, 4),
+    (256, 128, 16, 8),
+    (1024, 32, 32, 2),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_embbag_matches_ref(rows, d, b, k, dtype):
+    rng = np.random.default_rng(rows + b)
+    table = jnp.asarray(rng.standard_normal((rows, d)), dtype)
+    idx = jnp.asarray(rng.integers(0, rows, (b, k)), jnp.int32)
+    w = jnp.asarray(rng.random((b, k)) < 0.8, jnp.float32)  # 0-weight pads
+    want = ref.embbag_ref(table, idx, w)
+    got = ops.embedding_bag(table, idx, w, impl="pallas_interpret")
+    tol = 1e-6 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+# -------------------------------------------------------------- flashattn
+
+@pytest.mark.parametrize("b,hq,hkv,tq,tk,d", [
+    (1, 4, 4, 128, 128, 64),    # MHA square
+    (2, 8, 2, 128, 128, 64),    # GQA
+    (1, 4, 1, 64, 256, 32),     # MQA, decode-ish (q shorter than kv)
+    (1, 2, 2, 256, 256, 128),
+])
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_matches_ref(b, hq, hkv, tq, tk, d, causal, dtype):
+    rng = np.random.default_rng(hq * tq + tk)
+    q = jnp.asarray(rng.standard_normal((b, hq, tq, d)), dtype)
+    k = jnp.asarray(rng.standard_normal((b, hkv, tk, d)), dtype)
+    v = jnp.asarray(rng.standard_normal((b, hkv, tk, d)), dtype)
+    want = ref.flash_attention_ref(q, k, v, causal=causal)
+    got = ops.flash_attention(q, k, v, causal=causal,
+                              impl="pallas_interpret")
+    tol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_attention_blocks_smaller_than_seq():
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.standard_normal((1, 2, 256, 64)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 2, 256, 64)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, 2, 256, 64)), jnp.float32)
+    from repro.kernels.flashattn import flash_attention
+    got = flash_attention(q, k, v, causal=True, bq=64, bk=64, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)

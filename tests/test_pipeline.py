@@ -1,0 +1,27 @@
+"""GPipe pipeline == sequential stage application."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.train.pipeline import bubble_fraction, gpipe_apply
+
+
+def test_gpipe_matches_sequential():
+    rng = np.random.default_rng(0)
+    s, m, d = 4, 6, 8
+    ws = jnp.asarray(rng.standard_normal((s, d, d)) * 0.3, jnp.float32)
+    xs = jnp.asarray(rng.standard_normal((m, 2, d)), jnp.float32)
+
+    def stage(w, x):
+        return jnp.tanh(x @ w)
+
+    got = gpipe_apply(stage, ws, xs)
+    want = xs
+    for i in range(s):
+        want = jax.vmap(lambda x, w=ws[i]: stage(w, x))(want)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_bubble_fraction():
+    assert abs(bubble_fraction(4, 12) - 3 / 15) < 1e-9

@@ -1,0 +1,89 @@
+"""SO(3) numerics validation: the defining representation properties."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.gnn import so3
+
+L_MAX = 6
+
+
+def random_rotation(rng):
+    q, r = np.linalg.qr(rng.standard_normal((3, 3)))
+    q = q * np.sign(np.diag(r))
+    if np.linalg.det(q) < 0:
+        q[:, 0] = -q[:, 0]
+    return q
+
+
+def test_sph_harm_l1_is_yzx():
+    v = np.array([[0.3, -0.5, 0.81]])
+    v = v / np.linalg.norm(v)
+    ys = so3.real_sph_harm(1, jnp.asarray(v))
+    c = np.sqrt(3 / (4 * np.pi))
+    np.testing.assert_allclose(np.asarray(ys[1])[0],
+                               c * np.array([v[0, 1], v[0, 2], v[0, 0]]),
+                               rtol=1e-6)
+
+
+def test_wigner_d_orthogonal_and_composes():
+    rng = np.random.default_rng(0)
+    r1, r2 = random_rotation(rng), random_rotation(rng)
+    d_a = so3.wigner_d_stack(L_MAX, jnp.asarray(r1))
+    d_b = so3.wigner_d_stack(L_MAX, jnp.asarray(r2))
+    d_ab = so3.wigner_d_stack(L_MAX, jnp.asarray(r1 @ r2))
+    for l in range(L_MAX + 1):
+        da = np.asarray(d_a[l], np.float64)
+        np.testing.assert_allclose(da @ da.T, np.eye(2 * l + 1), atol=1e-5)
+        np.testing.assert_allclose(
+            np.asarray(d_ab[l]), np.asarray(d_a[l]) @ np.asarray(d_b[l]),
+            atol=1e-5)
+
+
+def test_wigner_d_rotates_sph_harm():
+    """Y_l(R v) == D^l(R) Y_l(v) — the defining property, all l <= 6."""
+    rng = np.random.default_rng(1)
+    v = rng.standard_normal((32, 3))
+    v /= np.linalg.norm(v, axis=-1, keepdims=True)
+    r = random_rotation(rng)
+    ys = so3.real_sph_harm(L_MAX, jnp.asarray(v))
+    ys_rot = so3.real_sph_harm(L_MAX, jnp.asarray(v @ r.T))
+    ds = so3.wigner_d_stack(L_MAX, jnp.asarray(r))
+    for l in range(L_MAX + 1):
+        want = np.einsum("mk,nk->nm", np.asarray(ds[l]), np.asarray(ys[l]))
+        np.testing.assert_allclose(np.asarray(ys_rot[l]), want, atol=1e-4)
+
+
+def test_rotation_to_align_z():
+    rng = np.random.default_rng(2)
+    v = rng.standard_normal((64, 3))
+    r = so3.rotation_to_align_z(jnp.asarray(v))
+    z = np.einsum("eij,ej->ei", np.asarray(r),
+                  v / np.linalg.norm(v, axis=-1, keepdims=True))
+    np.testing.assert_allclose(z, np.tile([0, 0, 1.0], (64, 1)), atol=1e-5)
+    # proper rotations
+    det = np.linalg.det(np.asarray(r))
+    np.testing.assert_allclose(det, np.ones(64), atol=1e-5)
+
+
+@pytest.mark.parametrize("l1,l2,l3", [
+    (0, 0, 0), (1, 1, 0), (1, 1, 1), (1, 1, 2), (2, 1, 1), (2, 2, 2),
+    (2, 2, 0), (0, 2, 2),
+])
+def test_real_cg_equivariance(l1, l2, l3):
+    """C(D1 x, D2 y) == D3 C(x, y)."""
+    rng = np.random.default_rng(l1 * 9 + l2 * 3 + l3)
+    c = so3.real_clebsch_gordan(l1, l2, l3)
+    assert np.abs(c).max() > 1e-3
+    x = rng.standard_normal(2 * l1 + 1)
+    y = rng.standard_normal(2 * l2 + 1)
+    r = random_rotation(rng)
+    ds = so3.wigner_d_stack(max(l1, l2, l3), jnp.asarray(r))
+    d1, d2, d3 = (np.asarray(ds[l], np.float64) for l in (l1, l2, l3))
+    lhs = np.einsum("abe,a,b->e", c, d1 @ x, d2 @ y)
+    rhs = d3 @ np.einsum("abe,a,b->e", c, x, y)
+    np.testing.assert_allclose(lhs, rhs, atol=1e-5)
+
+
+def test_cg_invalid_triangle_is_zero():
+    assert not so3.real_clebsch_gordan(0, 0, 1).any()

@@ -1,0 +1,67 @@
+"""End-to-end behaviour tests for the paper's system: the concurrent
+acyclic DAG serving an SGT scheduler workload."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dag, reachability, sgt
+
+
+def arr(xs):
+    return jnp.asarray(xs, jnp.int32)
+
+
+def test_sgt_end_to_end_schedule():
+    """A realistic multi-tick schedule: begins, conflicts, aborts, commits,
+    with the conflict graph provably acyclic at every tick."""
+    st = sgt.new_scheduler(256)
+    rng = np.random.default_rng(0)
+    live = []
+    next_id = 0
+    for tick in range(10):
+        begins = jnp.arange(next_id, next_id + 16, dtype=jnp.int32)
+        next_id += 16
+        live.extend(int(x) for x in begins)
+        st, ok = sgt.begin(st, begins)
+        assert bool(jnp.all(ok))
+        pool = np.asarray(live, np.int32)
+        src = jnp.asarray(rng.choice(pool, 24), jnp.int32)
+        dst = jnp.asarray(rng.choice(pool, 24), jnp.int32)
+        st, _ = sgt.conflicts(st, src, dst)
+        assert bool(reachability.is_acyclic(st.graph.adj)), f"tick {tick}"
+        # retire some live txns (those aborted are already gone: re-remove
+        # returns False which is fine)
+        n_fin = 8
+        fins = jnp.asarray(pool[:n_fin], jnp.int32)
+        live = live[n_fin:]
+        st, _ = sgt.finish(st, fins)
+    stats = (int(st.n_begun), int(st.n_committed), int(st.n_aborted))
+    assert stats[0] == 160
+    assert stats[1] + stats[2] <= stats[0]
+    assert int(dag.live_vertex_count(st.graph)) <= 160
+
+
+def test_serving_driver_throughput_counters():
+    from repro.launch.serve import serve_sgt
+    out = serve_sgt(capacity=256, batch=64, ticks=5)
+    assert out["ops_per_s"] > 0
+    assert 0.0 <= out["abort_rate"] <= 1.0
+
+
+def test_wait_free_reads_under_update_storm():
+    """Reads return consistent results against the snapshot regardless of
+    interleaved update batches (the wait-free contains guarantee)."""
+    st = dag.new_state(128)
+    st, _ = dag.add_vertices(st, arr(list(range(32))))
+    rng = np.random.default_rng(1)
+    for _ in range(5):
+        us = jnp.asarray(rng.integers(0, 32, 16), jnp.int32)
+        vs = jnp.asarray(rng.integers(0, 32, 16), jnp.int32)
+        st, _ = dag.add_edges(st, us, vs)
+        snapshot = st
+        got1 = dag.contains_edges(snapshot, us, vs)
+        # further updates must not affect reads of the old snapshot
+        st, _ = dag.remove_edges(st, us, vs)
+        got2 = dag.contains_edges(snapshot, us, vs)
+        np.testing.assert_array_equal(np.asarray(got1), np.asarray(got2))
+        assert bool(jnp.all(got1))
