@@ -8,6 +8,10 @@ the TPU analogue of thread count).
 Fig 16 (acyclic workload, 25% AcyclicAddEdge): same comparison with the
 reachability-checked edge inserts.
 
+Algo 1 vs algo 2 (paper §4): AcyclicAddEdge batches decided by the full
+transitive closure vs the partial-snapshot scoped scan, timed and compared
+by boolean-matmul row-products (the hardware work unit both share).
+
 Beyond paper: false-abort rate vs sub-batch count K (K=1 is the
 paper-faithful relaxed spec; K=B is sequential/zero-false-positive).
 """
@@ -99,11 +103,63 @@ def false_abort_rows(capacity: int = 256, key_space: int = 96,
     return rows
 
 
-def all_rows():
+def _sparse_dag_state(capacity: int, n_vertices: int, n_edges: int, seed=2):
+    """A random sparse DAG: forward-ordered edges can never close a cycle."""
+    rng = np.random.default_rng(seed)
+    st = dag.new_state(capacity)
+    st, _ = dag.add_vertices(st, jnp.arange(n_vertices, dtype=jnp.int32))
+    pairs = rng.integers(0, n_vertices, (n_edges, 2))
+    pairs = pairs[pairs[:, 0] != pairs[:, 1]]
+    us = np.minimum(pairs[:, 0], pairs[:, 1]).astype(np.int32)
+    vs = np.maximum(pairs[:, 0], pairs[:, 1]).astype(np.int32)
+    st, _ = dag.add_edges(st, jnp.asarray(us), jnp.asarray(vs))
+    return st, rng
+
+
+def algo_compare_rows(capacity: int = 512, n_vertices: int = 384,
+                      n_edges: int = 600, batches=(8, 32, 128),
+                      matmul_impl=None):
+    """Paper algorithm 1 (full closure) vs algorithm 2 (partial snapshot):
+    time per AcyclicAddEdge batch plus the exact boolean-matmul work each
+    cycle check executed — n_products matmuls of rows_per_product rows;
+    row_products is their product, the comparable unit.  ``matmul_impl``
+    (e.g. `repro.kernels.ops.bitmm_packed`) drives both paths on TPU.
+    """
+    from repro.core import acyclic as AC
     rows = []
-    rows += workload_rows("fig14_update_dom", PD.UPDATE_DOMINATED)
-    rows += workload_rows("fig15_contains_dom", PD.CONTAINS_DOMINATED)
+    for n_cand in batches:
+        st0, rng = _sparse_dag_state(capacity, n_vertices, n_edges)
+        us = jnp.asarray(rng.integers(0, n_vertices, n_cand), jnp.int32)
+        vs = jnp.asarray(rng.integers(0, n_vertices, n_cand), jnp.int32)
+        stats = {}
+        for method in ("closure", "partial"):
+            fn = jax.jit(lambda s, u, v, m=method: AC.acyclic_add_edges(
+                s, u, v, method=m, matmul_impl=matmul_impl, with_stats=True))
+            t = _time(fn, st0, us, vs, iters=3)
+            _, ok, s = fn(st0, us, vs)
+            stats[method] = (t, int(s["n_products"]),
+                             int(s["rows_per_product"]),
+                             int(s["row_products"]), np.asarray(ok))
+        (t1, np1, rp1, rwp1, ok1) = stats["closure"]
+        (t2, np2, rp2, rwp2, ok2) = stats["partial"]
+        assert (ok1 == ok2).all(), "algo1/algo2 must decide identically"
+        rows.append((f"algo1_closure_B{n_cand}", t1 * 1e6,
+                     f"products={np1}x{rp1}rows_row_products={rwp1}"))
+        rows.append((f"algo2_partial_B{n_cand}", t2 * 1e6,
+                     f"products={np2}x{rp2}rows_row_products={rwp2}"
+                     f"_work_ratio={rwp1 / max(rwp2, 1):.1f}x"))
+    return rows
+
+
+def all_rows(quick: bool = False):
+    rows = []
+    rows += workload_rows("fig14_update_dom", PD.UPDATE_DOMINATED,
+                          batches=(64,) if quick else (64, 256, 1024))
+    rows += workload_rows("fig15_contains_dom", PD.CONTAINS_DOMINATED,
+                          batches=(64,) if quick else (64, 256, 1024))
     rows += workload_rows("fig16_acyclic", PD.ACYCLIC_MIX, acyclic=True,
-                          capacity=256, key_space=128, batches=(64, 256))
+                          capacity=256, key_space=128,
+                          batches=(64,) if quick else (64, 256))
+    rows += algo_compare_rows(batches=(8, 32) if quick else (8, 32, 128))
     rows += false_abort_rows()
     return rows

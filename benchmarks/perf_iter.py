@@ -52,7 +52,8 @@ def main() -> int:
         sharding_tree(mesh, ps, a)
         for ps, a in zip(bundle.in_pspecs, bundle.args))
     t0 = time.time()
-    with jax.set_mesh(mesh):
+    from repro import compat
+    with compat.set_mesh(mesh):
         compiled = jax.jit(bundle.fn, in_shardings=shardings,
                            donate_argnums=bundle.donate
                            ).lower(*bundle.args).compile()

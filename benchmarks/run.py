@@ -13,7 +13,7 @@ def main() -> None:
     rows = []
 
     from benchmarks import paper_workloads, kernel_bench
-    rows += paper_workloads.all_rows()
+    rows += paper_workloads.all_rows(quick=quick)
     if not quick:
         rows += kernel_bench.all_rows()
 

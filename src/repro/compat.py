@@ -1,0 +1,84 @@
+"""jax version compatibility shims (tested floor: jax 0.4.37).
+
+The codebase targets the post-0.5 public names; this module maps each one
+back to its 0.4.x home so a pinned-CPU CI and newer-TPU images run the same
+source:
+
+  shard_map          jax.shard_map             <- jax.experimental.shard_map
+                     (``check_vma=`` kw        <- ``check_rep=``)
+  get_abstract_mesh  jax.sharding.get_abstract_mesh
+                                               <- thread-resources physical
+                                                  mesh (set by ``with mesh:``)
+  set_mesh           jax.set_mesh              <- the Mesh context manager
+  pallas ANY space   pltpu.MemorySpace.ANY     <- pltpu.TPUMemorySpace.ANY
+
+Every shim prefers the new API when it exists, so this module is a no-op
+overhead on current jax and the single choke point to delete once the floor
+moves past 0.5.
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None):
+    """``jax.shard_map`` with the 0.4.x experimental fallback.
+
+    ``check_vma`` (new name) maps onto ``check_rep`` (old name); ``None``
+    leaves the library default on either version.
+    """
+    if hasattr(jax, "shard_map"):
+        kwargs = {} if check_vma is None else {"check_vma": check_vma}
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kwargs)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    kwargs = {} if check_vma is None else {"check_rep": check_vma}
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **kwargs)
+
+
+def get_abstract_mesh():
+    """The ambient mesh, or an empty mesh outside any mesh context.
+
+    On 0.4.x the ``with mesh:`` context manager stores the physical mesh in
+    thread resources; callers only use ``.empty`` / ``.axis_names`` /
+    ``.axis_sizes``, which both mesh types provide.
+    """
+    get = getattr(jax.sharding, "get_abstract_mesh", None)
+    if get is not None:
+        return get()
+    from jax.interpreters import pxla
+    return pxla.thread_resources.env.physical_mesh
+
+
+@contextlib.contextmanager
+def set_mesh(mesh):
+    """Context manager form of ``jax.set_mesh`` (0.4.x: ``with mesh:``)."""
+    if hasattr(jax, "set_mesh"):
+        with jax.set_mesh(mesh):
+            yield mesh
+    else:
+        with mesh:
+            yield mesh
+
+
+def make_mesh(shape, axis_names, devices=None):
+    """``jax.make_mesh`` (pre-0.4.35: mesh_utils + Mesh)."""
+    if hasattr(jax, "make_mesh"):
+        if devices is not None:
+            return jax.make_mesh(shape, axis_names, devices=devices)
+        return jax.make_mesh(shape, axis_names)
+    import numpy as np
+    devices = devices if devices is not None else jax.devices()
+    return jax.sharding.Mesh(np.asarray(devices).reshape(shape), axis_names)
+
+
+def pallas_any_memory_space():
+    """``pltpu.MemorySpace.ANY`` (0.4.x: ``pltpu.TPUMemorySpace.ANY``)."""
+    from jax.experimental.pallas import tpu as pltpu
+    space = getattr(pltpu, "MemorySpace", None)
+    if space is None:
+        space = pltpu.TPUMemorySpace
+    return space.ANY

@@ -3,8 +3,11 @@
 Public API:
   DagState / new_state / add_vertices / remove_vertices / add_edges /
   remove_edges / contains_vertices / contains_edges / apply_op_batch
-  acyclic_add_edges (relaxed acyclic insert, the paper's AcyclicAddEdge)
-  path_exists / reach_sets / transitive_closure / is_acyclic
+  acyclic_add_edges (relaxed acyclic insert, the paper's AcyclicAddEdge;
+                     method="closure"|"partial" picks algorithm 1 or 2)
+  path_exists / reach_sets / transitive_closure / is_acyclic (algorithm 1)
+  reach_until_decided / partial_cycle_check / path_exists_partial
+                     (algorithm 2: partial-snapshot scoped scans)
   SgtState / new_scheduler / begin / conflicts / finish (SGT application)
 """
 from repro.core.dag import (  # noqa: F401
@@ -18,6 +21,9 @@ from repro.core.acyclic import acyclic_add_edges  # noqa: F401
 from repro.core.reachability import (  # noqa: F401
     path_exists, reach_sets, transitive_closure, is_acyclic,
     bool_matmul_packed, expand_frontier,
+)
+from repro.core.snapshot import (  # noqa: F401
+    reach_until_decided, partial_cycle_check, path_exists_partial,
 )
 from repro.core.sgt import (  # noqa: F401
     SgtState, new_scheduler, begin, conflicts, finish, schedule_tick,

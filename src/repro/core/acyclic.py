@@ -7,11 +7,21 @@ paper explicitly allows (for SGT it is only an unnecessary transaction abort,
 never a correctness violation).
 
 Batched realization: all candidate edges of a (sub-)batch are inserted in
-transit, ONE transitive closure of ``G ∪ transit`` is computed, and every
-candidate lying on a cycle is rejected.  Because each batch edge on a cycle
-is rejected, the committed graph stays acyclic (any residual cycle would need
-all of its batch edges accepted — impossible).  This reproduces the paper's
-joint-abort false positives exactly.
+transit, the cycle check runs over ``G ∪ transit``, and every candidate lying
+on a cycle is rejected.  Because each batch edge on a cycle is rejected, the
+committed graph stays acyclic (any residual cycle would need all of its batch
+edges accepted — impossible).  This reproduces the paper's joint-abort false
+positives exactly.
+
+``method`` selects which of the paper's two reachability algorithms decides
+the batch (both return identical ok bits — only the work differs):
+
+  "closure"  Algorithm 1: ONE full transitive closure of ``G ∪ transit``
+             (ceil(log2 C) products over C rows), then bit lookups.
+  "partial"  Algorithm 2 (`core/snapshot.py`): partial-snapshot scans seeded
+             from the candidates' target slots — per hop one product over B
+             rows, early-exiting at the deciding depth.  Asymptotically
+             cheaper for small sparse batches (B << C, shallow cones).
 
 ``subbatches=K`` (beyond paper): splits the batch into K priority classes
 checked sequentially — K=1 is the paper-faithful maximally-concurrent mode,
@@ -25,15 +35,18 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import bitset
+from repro.core import bitset, snapshot
 from repro.core.dag import DagState, lookup_slots, _valid
 from repro.core.reachability import transitive_closure, MatmulImpl
+
+METHODS = ("closure", "partial")
 
 
 def acyclic_add_edges(state: DagState, us: jax.Array, vs: jax.Array,
                       valid=None, subbatches: int = 1,
-                      matmul_impl: Optional[MatmulImpl] = None):
-    """Returns (state, ok[B]).
+                      matmul_impl: Optional[MatmulImpl] = None,
+                      method: str = "closure", with_stats: bool = False):
+    """Returns (state, ok[B]) — or (state, ok[B], stats) with ``with_stats``.
 
     ok semantics (sequential spec, Table 2 + acyclic relaxation):
       - False if either endpoint is not a live vertex.
@@ -41,11 +54,19 @@ def acyclic_add_edges(state: DagState, us: jax.Array, vs: jax.Array,
       - True  if inserted without creating a cycle.
       - False if the insert lies on a cycle of ``G ∪ transit`` (the edge is
         backed out; false positives under concurrency are allowed).
+
+    stats = {"n_products", "rows_per_product", "row_products"} counts the
+    boolean matmuls the cycle checks executed (summed over sub-batches);
+    row_products is the total number of rows fed through the matmul — the
+    comparable work unit between the two methods.
     """
+    if method not in METHODS:
+        raise ValueError(f"method must be one of {METHODS}, got {method!r}")
     valid = _valid(valid, us)
     b = us.shape[0]
     if b % subbatches != 0:
         raise ValueError(f"batch {b} not divisible by subbatches {subbatches}")
+    rows_per_product = state.capacity if method == "closure" else b // subbatches
 
     us_r = us.reshape(subbatches, -1)
     vs_r = vs.reshape(subbatches, -1)
@@ -60,12 +81,26 @@ def acyclic_add_edges(state: DagState, us: jax.Array, vs: jax.Array,
         already = vert_ok & bitset.bit_get(adj, u_slot, v_slot)
         cand = vert_ok & ~already & ~self_loop
         adj_t = bitset.scatter_set_bits(adj, u_slot, v_slot, cand)  # transit
-        closure = transitive_closure(adj_t, matmul_impl)
-        cyc = bitset.bit_get(closure, v_slot, u_slot)  # path v -> u
+        if method == "closure":
+            closure, n_products = transitive_closure(adj_t, matmul_impl,
+                                                     with_stats=True)
+            cyc = bitset.bit_get(closure, v_slot, u_slot)  # path v -> u
+        else:
+            cyc, n_products = snapshot.partial_cycle_check(
+                adj_t, u_slot, v_slot, cand, matmul_impl, with_stats=True)
         reject = cand & cyc
         adj_n = bitset.scatter_clear_bits(adj_t, u_slot, v_slot, reject)
         ok = already | (cand & ~cyc)
-        return adj_n, ok
+        return adj_n, (ok, n_products)
 
-    adj, oks = jax.lax.scan(step, state.adj, (us_r, vs_r, valid_r))
-    return state._replace(adj=adj), oks.reshape(b)
+    adj, (oks, n_products) = jax.lax.scan(
+        step, state.adj, (us_r, vs_r, valid_r))
+    state = state._replace(adj=adj)
+    oks = oks.reshape(b)
+    if not with_stats:
+        return state, oks
+    n_total = jnp.sum(n_products, dtype=jnp.int32)
+    stats = {"n_products": n_total,
+             "rows_per_product": rows_per_product,
+             "row_products": n_total * rows_per_product}
+    return state, oks, stats

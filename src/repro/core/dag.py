@@ -160,11 +160,14 @@ def contains_edges(state: DagState, us: jax.Array, vs: jax.Array) -> jax.Array:
 # ------------------------------------------------- mixed-op workloads
 
 def apply_op_batch(state: DagState, op: jax.Array, a: jax.Array, b: jax.Array,
-                   acyclic: bool = False, subbatches: int = 1):
+                   acyclic: bool = False, subbatches: int = 1,
+                   method: str = "closure"):
     """Apply a mixed batch with the documented linearization:
     RemoveVertex -> AddVertex -> RemoveEdge -> AddEdge -> reads.
 
-    Returns (state, ok[B]).
+    ``method`` picks the acyclic cycle-check algorithm ("closure" = paper
+    algorithm 1 full closure, "partial" = algorithm 2 partial snapshot; see
+    `core/acyclic.py`).  Returns (state, ok[B]).
     """
     from repro.core import acyclic as acyclic_mod
 
@@ -177,7 +180,8 @@ def apply_op_batch(state: DagState, op: jax.Array, a: jax.Array, b: jax.Array,
     res = jnp.where(op == REMOVE_EDGE, r, res)
     if acyclic:
         state, r = acyclic_mod.acyclic_add_edges(
-            state, a, b, valid=op == ADD_EDGE, subbatches=subbatches)
+            state, a, b, valid=op == ADD_EDGE, subbatches=subbatches,
+            method=method)
     else:
         state, r = add_edges(state, a, b, valid=op == ADD_EDGE)
     res = jnp.where(op == ADD_EDGE, r, res)
@@ -189,14 +193,15 @@ def apply_op_batch(state: DagState, op: jax.Array, a: jax.Array, b: jax.Array,
 
 
 def apply_op_sequential(state: DagState, op: jax.Array, a: jax.Array,
-                        b: jax.Array, acyclic: bool = False):
+                        b: jax.Array, acyclic: bool = False,
+                        method: str = "closure"):
     """Coarse-grained baseline: one op at a time (the moral equivalent of the
     paper's single global lock).  Same linearization as a size-1 batch chain.
     """
     def body(st, xs):
         o, aa, bb = xs
         st, r = apply_op_batch(st, o[None], aa[None], bb[None],
-                               acyclic=acyclic, subbatches=1)
+                               acyclic=acyclic, subbatches=1, method=method)
         return st, r[0]
 
     return jax.lax.scan(body, state, (op, a, b))

@@ -77,10 +77,17 @@ class SeqGraph:
         self.edges.add((u, v))
         return True
 
-    def acyclic_add_edges_joint(self, pairs: Sequence[Tuple[int, int]]
-                                ) -> List[bool]:
+    def acyclic_add_edges_joint(self, pairs: Sequence[Tuple[int, int]],
+                                method: str = "closure") -> List[bool]:
         """The batched relaxed spec: insert all candidates in transit, reject
-        every candidate on a cycle of G ∪ transit (joint aborts)."""
+        every candidate on a cycle of G ∪ transit (joint aborts).
+
+        ``method`` mirrors the engine's two cycle-check algorithms:
+        "closure" answers each v -> u query from the full reach set of v
+        (algorithm 1); "partial" runs the scoped early-exit scan of
+        `core/snapshot.py` (algorithm 2).  Both decide identically — the
+        spec-level agreement the property tests pin down.
+        """
         oks: List[bool] = [False] * len(pairs)
         cand: List[int] = []
         for i, (u, v) in enumerate(pairs):
@@ -98,7 +105,14 @@ class SeqGraph:
         # reject candidates on any cycle of transit graph
         for i in cand:
             u, v = pairs[i]
-            oks[i] = not _path_exists_in(transit, v, u)
+            if method == "partial":
+                # algorithm-2 spec: scoped scan from v, stopping at the
+                # deciding depth (u found, or the frontier died)
+                cyc = _path_exists_in(transit, v, u)
+            else:
+                # algorithm-1 spec: the complete reach set of v, no early exit
+                cyc = u in _full_reach_set(transit, v)
+            oks[i] = not cyc
         for i in cand:
             if oks[i]:
                 self.edges.add(pairs[i])
@@ -127,8 +141,19 @@ def _path_exists_in(edges: Set[Tuple[int, int]], u: int, v: int) -> bool:
     return v in seen
 
 
+def _full_reach_set(edges: Set[Tuple[int, int]], u: int) -> Set[int]:
+    """Algorithm-1 spec: the complete strict reach set of u (no early exit)."""
+    frontier = {b for (a, b) in edges if a == u}
+    seen = set(frontier)
+    while frontier:
+        frontier = {b for (a, b) in edges if a in frontier and b not in seen}
+        seen |= frontier
+    return seen
+
+
 def apply_op_batch_oracle(g: SeqGraph, ops, a, b, acyclic: bool = False,
-                          subbatches: int = 1) -> List[bool]:
+                          subbatches: int = 1,
+                          method: str = "closure") -> List[bool]:
     """Replay a mixed batch in the engine's linearization order."""
     n = len(ops)
     res: List[bool] = [False] * n
@@ -149,7 +174,7 @@ def apply_op_batch_oracle(g: SeqGraph, ops, a, b, acyclic: bool = False,
         chunks = [edge_idx[i:i + per] for i in range(0, len(edge_idx), per)]
         for chunk in chunks:
             oks = g.acyclic_add_edges_joint(
-                [(int(a[i]), int(b[i])) for i in chunk])
+                [(int(a[i]), int(b[i])) for i in chunk], method=method)
             for i, ok in zip(chunk, oks):
                 res[i] = ok
     else:

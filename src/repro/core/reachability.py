@@ -79,9 +79,15 @@ def path_exists(state: DagState, from_keys: jax.Array, to_keys: jax.Array,
 
 
 def transitive_closure(adj_packed: jax.Array,
-                       matmul_impl: Optional[MatmulImpl] = None) -> jax.Array:
+                       matmul_impl: Optional[MatmulImpl] = None,
+                       with_stats: bool = False):
     """Strict transitive closure by repeated squaring with union, with early
-    exit once a fixpoint is reached (<= ceil(log2 C) products)."""
+    exit once a fixpoint is reached (<= ceil(log2 C) products).
+
+    With ``with_stats`` also returns the number of boolean matmul products
+    executed (each over all C rows); used by the algo1-vs-algo2 benchmark
+    comparison against `core/snapshot.py`.
+    """
     impl = matmul_impl or bool_matmul_packed
     c = adj_packed.shape[0]
     n_iter = max(1, math.ceil(math.log2(max(c, 2))))
@@ -96,8 +102,10 @@ def transitive_closure(adj_packed: jax.Array,
         rn = r | r2
         return rn, i + 1, jnp.any(rn != r)
 
-    r, _, _ = jax.lax.while_loop(
+    r, n_products, _ = jax.lax.while_loop(
         cond, body, (adj_packed, jnp.int32(0), jnp.bool_(True)))
+    if with_stats:
+        return r, n_products
     return r
 
 

@@ -41,15 +41,19 @@ def begin(state: SgtState, txn_ids: jax.Array, valid=None):
 
 
 def conflicts(state: SgtState, src: jax.Array, dst: jax.Array, valid=None,
-              subbatches: int = 1, matmul_impl=None):
+              subbatches: int = 1, matmul_impl=None,
+              method: str = "closure"):
     """Register conflict edges src -> dst. Returns (state, accepted[B]).
 
     accepted=False with live endpoints means a cycle was (possibly jointly)
     detected: the source transaction is aborted and retired from the graph.
+    ``method="partial"`` decides cycles with the scoped algorithm-2 scan —
+    the right default for SGT ticks, whose conflict batches are small and
+    whose conflict graphs are sparse.
     """
     g, ok = acyclic.acyclic_add_edges(
         state.graph, src, dst, valid=valid, subbatches=subbatches,
-        matmul_impl=matmul_impl)
+        matmul_impl=matmul_impl, method=method)
     live = (dag.contains_vertices(g, src) & dag.contains_vertices(g, dst))
     if valid is not None:
         live = live & valid
@@ -70,10 +74,10 @@ def finish(state: SgtState, txn_ids: jax.Array, valid=None):
 
 
 def schedule_tick(state: SgtState, begin_ids, conf_src, conf_dst, finish_ids,
-                  subbatches: int = 1):
+                  subbatches: int = 1, method: str = "closure"):
     """One bulk-synchronous scheduling tick: begins, conflicts, finishes."""
     state, began = begin(state, begin_ids)
     state, accepted = conflicts(state, conf_src, conf_dst,
-                                subbatches=subbatches)
+                                subbatches=subbatches, method=method)
     state, finished = finish(state, finish_ids)
     return state, {"began": began, "accepted": accepted, "finished": finished}

@@ -12,6 +12,8 @@ mesh (axis "shard").  Two execution paths are provided:
      frontier hop:  local (B, C/D)x(C/D, C) boolean product
                     -> all-gather(partials) -> OR-reduce        (1 collective)
      closure step:  all-gather(R) -> local (C/D, C)x(C, C) prod (1 collective)
+     partial scan:  frontier hops with decided-query early exit
+                    (`reach_until_decided_sharded`, paper algorithm 2)
    The OR-reduction over devices is the TPU analogue of concurrent threads
    publishing updates: order-free, idempotent, no locks.
 
@@ -26,6 +28,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.core import bitset
 from repro.core.dag import DagState
 
@@ -34,7 +37,7 @@ AXIS = "shard"
 
 def make_dag_mesh(devices=None) -> Mesh:
     devices = devices if devices is not None else jax.devices()
-    return jax.make_mesh((len(devices),), (AXIS,), devices=devices)
+    return compat.make_mesh((len(devices),), (AXIS,), devices=devices)
 
 
 def shard_state(state: DagState, mesh: Mesh) -> DagState:
@@ -65,7 +68,7 @@ def expand_frontier_sharded(mesh: Mesh, adj: jax.Array,
         tot = jax.lax.psum(part, AXIS)               # OR == (sum > 0)
         return bitset.pack_bits(tot > 0)             # (B, W), replicated
 
-    return jax.shard_map(
+    return compat.shard_map(
         kernel, mesh=mesh,
         in_specs=(P(AXIS, None), P(None, AXIS)),
         out_specs=P(None, None),
@@ -90,6 +93,21 @@ def reach_sets_sharded(mesh: Mesh, adj: jax.Array,
     return reach
 
 
+def reach_until_decided_sharded(mesh: Mesh, adj: jax.Array,
+                                sources: jax.Array,
+                                target_slots: jax.Array) -> jax.Array:
+    """Partial-snapshot scan (`core/snapshot.reach_until_decided`) with the
+    explicit collective schedule: each hop is one local (B, C/D)x(C/D, C)
+    product + one psum, and decided queries drop out of the frontier — the
+    loop ends at the deciding depth, not the sources' eccentricity."""
+    from repro.core import snapshot
+
+    return snapshot.reach_until_decided(
+        adj, sources, target_slots,
+        matmul_impl=lambda frontier, a: expand_frontier_sharded(
+            mesh, a, frontier))
+
+
 def transitive_closure_sharded(mesh: Mesh, adj: jax.Array) -> jax.Array:
     """Repeated squaring; R stays row-sharded, rhs is all-gathered per step."""
     c = adj.shape[0]
@@ -105,8 +123,8 @@ def transitive_closure_sharded(mesh: Mesh, adj: jax.Array) -> jax.Array:
 
     def body(i, r):
         del i
-        return jax.shard_map(step, mesh=mesh, in_specs=P(AXIS, None),
-                             out_specs=P(AXIS, None))(r)
+        return compat.shard_map(step, mesh=mesh, in_specs=P(AXIS, None),
+                                out_specs=P(AXIS, None))(r)
 
     return jax.lax.fori_loop(0, n_iter, body, adj)
 

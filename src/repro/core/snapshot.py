@@ -1,0 +1,110 @@
+"""Partial-snapshot obstruction-free reachability — the paper's Algorithm 2.
+
+Algorithm 1 (`core/reachability`) decides a batch of B cycle queries by
+computing the FULL transitive closure of ``G ∪ transit``: ~ceil(log2 C)
+boolean products, each over all C adjacency rows.  Algorithm 2 instead
+collects a *partial snapshot*: only the reach sets seeded from the candidate
+edges' target slots, grown by frontier expansion — one boolean product of B
+rows per hop — and early-exited as soon as every ``v -> u`` query is decided
+(its target was hit, or its frontier died).
+
+Obstruction-freedom (paper §4.2): the pointer-based scan restarts while
+concurrent updates interfere and completes once it runs in isolation.  In
+the batched TPU realization every scan reads an immutable state snapshot,
+so interference cannot occur and each scan is one bounded pass; what
+survives the translation is the *scoped collection* — work proportional to
+the BFS cone of the B sources rather than to the whole graph.
+
+Cost model per decided batch (row-products == rows fed through the boolean
+matmul, the unit `benchmarks/paper_workloads.py` reports):
+
+  closure:  n_products ~ ceil(log2 C)   x C rows  -> O(C log C) rows
+  partial:  n_products == deciding depth x B rows -> O(B · depth) rows
+
+For sparse graphs (shallow BFS cones) and small candidate batches B << C
+the partial path does asymptotically less work; for dense deep graphs the
+closure's log-squaring wins.  Both accept ``matmul_impl`` so the fused
+Pallas kernel (`repro.kernels.ops.bitmm_packed`) drives either on TPU.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitset
+from repro.core.dag import DagState, lookup_slots
+from repro.core.reachability import MatmulImpl, bool_matmul_packed
+
+
+def reach_until_decided(adj_packed: jax.Array, sources_packed: jax.Array,
+                        target_slots: jax.Array,
+                        matmul_impl: Optional[MatmulImpl] = None,
+                        with_stats: bool = False):
+    """Batched decided-early-exit reachability.
+
+    hit[b] = True iff a path of >= 1 edge leads from any vertex in
+    ``sources_packed[b]`` (a packed bitset row) to ``target_slots[b]``.
+
+    Unlike `reachability.reach_sets` (which runs until every frontier dies),
+    a query's frontier is killed the moment its target is hit, so the loop
+    ends at the *deciding* depth, not the eccentricity of the sources.
+
+    With ``with_stats`` also returns the number of boolean matmul products
+    executed (each over B = sources rows); used by the algo1-vs-algo2
+    benchmark comparison.
+    """
+    impl = matmul_impl or bool_matmul_packed
+    b = sources_packed.shape[0]
+    rows = jnp.arange(b)
+
+    def cond(carry):
+        _, frontier, _, _ = carry
+        return jnp.any(frontier != 0)
+
+    def body(carry):
+        reach, frontier, hit, n = carry
+        nxt = impl(frontier, adj_packed)
+        new = nxt & ~reach
+        reach = reach | new
+        hit = hit | bitset.bit_get(reach, rows, target_slots)
+        # kill decided frontiers: no further expansion for answered queries
+        frontier = jnp.where(hit[:, None], jnp.uint32(0), new)
+        return reach, frontier, hit, n + 1
+
+    init = (jnp.zeros_like(sources_packed), sources_packed,
+            jnp.zeros((b,), bool), jnp.int32(0))
+    _, _, hit, n_products = jax.lax.while_loop(cond, body, init)
+    if with_stats:
+        return hit, n_products
+    return hit
+
+
+def partial_cycle_check(adj_packed: jax.Array, u_slots: jax.Array,
+                        v_slots: jax.Array, cand: jax.Array,
+                        matmul_impl: Optional[MatmulImpl] = None,
+                        with_stats: bool = False):
+    """cyc[b] = True iff a path v_slots[b] -> u_slots[b] exists in
+    ``adj_packed`` and cand[b] — i.e. candidate edge (u, v) would close a
+    cycle.  Non-candidate rows get zero seed bitsets (dead frontiers), so
+    they cost nothing and report False."""
+    c = adj_packed.shape[0]
+    src = bitset.onehot_rows(v_slots, c)
+    src = jnp.where(cand[:, None], src, jnp.uint32(0))
+    return reach_until_decided(adj_packed, src, u_slots, matmul_impl,
+                               with_stats=with_stats)
+
+
+def path_exists_partial(state: DagState, from_keys: jax.Array,
+                        to_keys: jax.Array,
+                        matmul_impl: Optional[MatmulImpl] = None) -> jax.Array:
+    """Batch PathExists via the partial-snapshot scan: same answers as
+    `reachability.path_exists`, but each query stops at its deciding depth
+    instead of exhausting its reach set."""
+    f_slot, f_found = lookup_slots(state, from_keys)
+    t_slot, t_found = lookup_slots(state, to_keys)
+    src = bitset.onehot_rows(f_slot, state.capacity)
+    src = jnp.where(f_found[:, None], src, jnp.uint32(0))
+    hit = reach_until_decided(state.adj, src, t_slot, matmul_impl)
+    return f_found & t_found & hit

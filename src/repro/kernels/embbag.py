@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro import compat
+
 
 def _embbag_kernel(idx_ref, w_ref, table_ref, out_ref, row_scr, sem, *,
                    bb: int, kk: int):
@@ -56,7 +58,7 @@ def embbag(table: jax.Array, idx: jax.Array, weights: jax.Array, *,
         grid=(b // bb,),
         in_specs=[
             pl.BlockSpec((bb, k), lambda i, idx_ref: (i, 0)),
-            pl.BlockSpec(memory_space=pltpu.MemorySpace.ANY),
+            pl.BlockSpec(memory_space=compat.pallas_any_memory_space()),
         ],
         out_specs=pl.BlockSpec((bb, d), lambda i, idx_ref: (i, 0)),
         scratch_shapes=[

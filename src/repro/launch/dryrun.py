@@ -35,8 +35,10 @@ def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: str) -> dict:
         sharding_tree(mesh, ps, arg)
         for ps, arg in zip(bundle.in_pspecs, bundle.args))
 
+    from repro import compat
+
     t0 = time.time()
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         jitted = jax.jit(bundle.fn, in_shardings=shardings,
                          donate_argnums=bundle.donate)
         lowered = jitted.lower(*bundle.args)

@@ -5,6 +5,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
+
 
 def normalize_pspec(spec: P, mesh_axis_names) -> P:
     """Drop mesh axes that don't exist in the active mesh (e.g. "pod" on the
@@ -41,7 +43,7 @@ def prune_pspec_for_shape(spec: P, shape, mesh) -> P:
 def maybe_shard(x: jax.Array, spec: P) -> jax.Array:
     """with_sharding_constraint that no-ops outside a mesh context, prunes
     axes the active mesh doesn't have, and drops non-dividing axes."""
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = compat.get_abstract_mesh()
     if mesh is None or mesh.empty:
         return x
     spec = normalize_pspec(spec, mesh.axis_names)

@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.models.common import BATCH_AXES, maybe_shard
 
 
@@ -104,7 +105,7 @@ def moe_ffn_local_dispatch(x: jax.Array, router_w: jax.Array,
     whole-buffer all-reduces (see EXPERIMENTS.md §Perf / granite).
     Falls back to `moe_ffn` when no mesh is active (CPU smoke tests).
     """
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = compat.get_abstract_mesh()
     if mesh is None or mesh.empty or "model" not in mesh.axis_names:
         return moe_ffn(x, router_w, e_gate, e_up, e_down, mcfg)
 
@@ -171,6 +172,6 @@ def moe_ffn_local_dispatch(x: jax.Array, router_w: jax.Array,
                 P("model", None, None), P("model", None, None),
                 P("model", None, None))
     out_specs = (P(batch_axes, None), P())
-    return jax.shard_map(body, mesh=mesh, in_specs=in_specs,
-                         out_specs=out_specs, check_vma=False)(
+    return compat.shard_map(body, mesh=mesh, in_specs=in_specs,
+                            out_specs=out_specs, check_vma=False)(
         x, router_w, e_gate, e_up, e_down)

@@ -6,7 +6,11 @@ acyclic engine must keep the graph acyclic in every reachable state.
 """
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need the dev extra (pip install -e .[dev])")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import acyclic, dag, reachability
 from repro.core.oracle import SeqGraph, apply_op_batch_oracle
@@ -59,10 +63,12 @@ def test_mixed_batches_match_oracle(ops):
 
 @settings(max_examples=40, deadline=None)
 @given(st.lists(st.tuples(KEYS, KEYS), min_size=1, max_size=20),
-       st.sampled_from([1, 2, 4]))
-def test_acyclic_engine_invariant_and_oracle(pairs, subbatches):
+       st.sampled_from([1, 2, 4]),
+       st.sampled_from(["closure", "partial"]))
+def test_acyclic_engine_invariant_and_oracle(pairs, subbatches, method):
     """Acyclicity holds in every reachable state; joint-abort semantics match
-    the relaxed oracle when sub-batch layouts align."""
+    the relaxed oracle when sub-batch layouts align — under BOTH cycle-check
+    algorithms (paper algorithm 1 closure, algorithm 2 partial snapshot)."""
     state = dag.new_state(CAP)
     keys = sorted({k for p in pairs for k in p})
     state, _ = dag.add_vertices(state, jnp.asarray(keys, jnp.int32))
@@ -78,7 +84,8 @@ def test_acyclic_engine_invariant_and_oracle(pairs, subbatches):
     valid = jnp.asarray([True] * n + [False] * pad)
 
     state, ok = acyclic.acyclic_add_edges(state, us, vs, valid=valid,
-                                          subbatches=subbatches)
+                                          subbatches=subbatches,
+                                          method=method)
     assert bool(reachability.is_acyclic(state.adj))
 
     # oracle replay with matching sub-batch layout
@@ -87,7 +94,7 @@ def test_acyclic_engine_invariant_and_oracle(pairs, subbatches):
     for s in range(subbatches):
         chunk = [(int(us[i]), int(vs[i])) for i in range(s * per, (s + 1) * per)
                  if bool(valid[i])]
-        flat_ok.extend(g.acyclic_add_edges_joint(chunk))
+        flat_ok.extend(g.acyclic_add_edges_joint(chunk, method=method))
     np.testing.assert_array_equal(np.asarray(ok)[:n], flat_ok)
     assert g.is_acyclic()
     _, edges = _drain(state)

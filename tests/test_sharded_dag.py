@@ -16,7 +16,7 @@ SCRIPT = textwrap.dedent("""
     import jax
     import jax.numpy as jnp
     import numpy as np
-    from repro.core import bitset, dag, reachability, sharded
+    from repro.core import bitset, dag, reachability, sharded, snapshot
 
     assert len(jax.devices()) == 8, jax.devices()
     mesh = sharded.make_dag_mesh()
@@ -36,6 +36,15 @@ SCRIPT = textwrap.dedent("""
     t_want = reachability.transitive_closure(adj)
     t_got = sharded.transitive_closure_sharded(mesh, adj)
     np.testing.assert_array_equal(np.asarray(t_got), np.asarray(t_want))
+
+    # partial-snapshot scan (algorithm 2): sharded == single-device == full
+    tgts = jnp.arange(16, dtype=jnp.int32)[::-1] * 7 % CAP
+    h_ref = snapshot.reach_until_decided(adj, srcs, tgts)
+    h_got = sharded.reach_until_decided_sharded(mesh, adj, srcs, tgts)
+    np.testing.assert_array_equal(np.asarray(h_got), np.asarray(h_ref))
+    np.testing.assert_array_equal(
+        np.asarray(h_got),
+        np.asarray(bitset.bit_get(want, jnp.arange(16), tgts)))
 
     assert bool(sharded.is_acyclic_sharded(mesh, adj)) == bool(
         reachability.is_acyclic(adj))

@@ -1,0 +1,219 @@
+"""Partial-snapshot reachability (paper algorithm 2) tests.
+
+Pins three levels of agreement, all with deterministic numpy randomness (no
+dev-extra dependency):
+  1. the scoped scan answers == the full reach-set answers,
+  2. `acyclic_add_edges(method="partial")` == `method="closure"` (same ok
+     bits, same post-state) on random candidate batches,
+  3. the partial engine == the sequential oracle's partial spec on random
+     mixed-op workloads (linearization + relaxed joint-abort semantics),
+plus the cost claim: fewer boolean-matmul row-products than the closure for
+small candidate batches on sparse graphs.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import acyclic, bitset, dag, reachability, snapshot
+from repro.core.oracle import SeqGraph, apply_op_batch_oracle
+from repro.kernels import ops
+
+CAP = 64
+
+
+def arr(xs, dtype=jnp.int32):
+    return jnp.asarray(xs, dtype)
+
+
+def _sparse_dag(rng, n_vertices: int, n_edges: int, capacity: int = CAP):
+    """Random sparse DAG: forward-ordered edges can never close a cycle."""
+    st = dag.new_state(capacity)
+    st, _ = dag.add_vertices(st, jnp.arange(n_vertices, dtype=jnp.int32))
+    pairs = rng.integers(0, n_vertices, (n_edges, 2))
+    pairs = pairs[pairs[:, 0] != pairs[:, 1]]
+    us = np.minimum(pairs[:, 0], pairs[:, 1]).astype(np.int32)
+    vs = np.maximum(pairs[:, 0], pairs[:, 1]).astype(np.int32)
+    st, _ = dag.add_edges(st, jnp.asarray(us), jnp.asarray(vs))
+    return st
+
+
+def test_reach_until_decided_matches_full_reach_sets():
+    rng = np.random.default_rng(0)
+    for seed in range(5):
+        a = np.random.default_rng(seed).random((CAP, CAP)) < 0.05
+        np.fill_diagonal(a, False)
+        adj = bitset.pack_bits(jnp.asarray(a))
+        srcs_slots = jnp.asarray(rng.integers(0, CAP, 12), jnp.int32)
+        tgts = jnp.asarray(rng.integers(0, CAP, 12), jnp.int32)
+        srcs = bitset.onehot_rows(srcs_slots, CAP)
+        full = reachability.reach_sets(adj, srcs)
+        want = bitset.bit_get(full, jnp.arange(12), tgts)
+        got = snapshot.reach_until_decided(adj, srcs, tgts)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_partial_early_exit_does_not_overcount():
+    """On a long chain, deciding a 1-hop query must stop at depth 1."""
+    st = dag.new_state(CAP)
+    n = 32
+    st, _ = dag.add_vertices(st, jnp.arange(n, dtype=jnp.int32))
+    st, _ = dag.add_edges(st, jnp.arange(n - 1, dtype=jnp.int32),
+                          jnp.arange(1, n, dtype=jnp.int32))  # 0->1->...->31
+    src = bitset.onehot_rows(arr([0]), CAP)
+    hit, n_products = snapshot.reach_until_decided(
+        st.adj, src, arr([1]), with_stats=True)
+    assert bool(hit[0])
+    assert int(n_products) == 1
+    # an undecidable query walks the whole chain before its frontier dies
+    hit, n_products = snapshot.reach_until_decided(
+        st.adj, bitset.onehot_rows(arr([1]), CAP), arr([0]), with_stats=True)
+    assert not bool(hit[0])
+    assert int(n_products) == n - 1
+
+
+@pytest.mark.parametrize("subbatches", [1, 2, 4])
+def test_partial_matches_closure_on_random_batches(subbatches):
+    rng = np.random.default_rng(7)
+    st = _sparse_dag(rng, n_vertices=40, n_edges=60)
+    for trial in range(12):
+        b = 8
+        us = jnp.asarray(rng.integers(0, 44, b), jnp.int32)  # some dead keys
+        vs = jnp.asarray(rng.integers(0, 44, b), jnp.int32)
+        valid = jnp.asarray(rng.random(b) < 0.9)
+        st1, ok1 = acyclic.acyclic_add_edges(
+            st, us, vs, valid=valid, subbatches=subbatches, method="closure")
+        st2, ok2 = acyclic.acyclic_add_edges(
+            st, us, vs, valid=valid, subbatches=subbatches, method="partial")
+        np.testing.assert_array_equal(np.asarray(ok1), np.asarray(ok2))
+        np.testing.assert_array_equal(np.asarray(st1.adj), np.asarray(st2.adj))
+        assert bool(reachability.is_acyclic(st2.adj))
+        st = st2  # keep evolving the same graph
+
+
+def test_partial_joint_false_positive_semantics():
+    """The relaxed joint-abort spec survives the algorithm swap."""
+    st = dag.new_state(CAP)
+    st, _ = dag.add_vertices(st, arr([1, 2, 3, 4]))
+    st, _ = dag.add_edges(st, arr([1, 3]), arr([2, 4]))  # 1->2, 3->4
+    st, ok = acyclic.acyclic_add_edges(st, arr([2, 4]), arr([3, 1]),
+                                       method="partial")
+    np.testing.assert_array_equal(np.asarray(ok), [False, False])
+    assert bool(reachability.is_acyclic(st.adj))
+    # sequentialized: the first succeeds
+    st, ok = acyclic.acyclic_add_edges(st, arr([2, 4]), arr([3, 1]),
+                                       subbatches=2, method="partial")
+    np.testing.assert_array_equal(np.asarray(ok), [True, False])
+    assert bool(reachability.is_acyclic(st.adj))
+
+
+def test_partial_mixed_ops_match_oracle():
+    """Randomized mixed-op workloads: engine(method=partial) == oracle."""
+    op_codes = [dag.REMOVE_VERTEX, dag.ADD_VERTEX, dag.REMOVE_EDGE,
+                dag.ADD_EDGE, dag.CONTAINS_VERTEX, dag.CONTAINS_EDGE]
+    for seed in range(6):
+        rng = np.random.default_rng(100 + seed)
+        state = dag.new_state(CAP)
+        g = SeqGraph(capacity=CAP)
+        for _ in range(8):
+            n = 6
+            o = jnp.asarray(rng.choice(op_codes, n), jnp.int32)
+            a = jnp.asarray(rng.integers(0, 12, n), jnp.int32)
+            b = jnp.asarray(rng.integers(0, 12, n), jnp.int32)
+            state, res = dag.apply_op_batch(state, o, a, b, acyclic=True,
+                                            method="partial")
+            want = apply_op_batch_oracle(g, np.asarray(o), np.asarray(a),
+                                         np.asarray(b), acyclic=True,
+                                         method="partial")
+            np.testing.assert_array_equal(np.asarray(res), want)
+            assert bool(reachability.is_acyclic(state.adj))
+            assert g.is_acyclic()
+        assert set(np.asarray(state.keys)[np.asarray(state.alive)]) \
+            == g.vertices
+
+
+def test_oracle_partial_spec_equals_closure_spec():
+    for seed in range(8):
+        rng = np.random.default_rng(200 + seed)
+        g1, g2 = SeqGraph(), SeqGraph()
+        for k in range(10):
+            g1.add_vertex(k)
+            g2.add_vertex(k)
+        pairs = [(int(u), int(v))
+                 for u, v in rng.integers(0, 10, (12, 2))]
+        ok1 = g1.acyclic_add_edges_joint(pairs, method="closure")
+        ok2 = g2.acyclic_add_edges_joint(pairs, method="partial")
+        assert ok1 == ok2
+        assert g1.edges == g2.edges
+
+
+def test_partial_fewer_row_products_on_sparse_small_batch():
+    """The paper's cost claim: B frontier rows instead of C closure rows."""
+    rng = np.random.default_rng(5)
+    st = _sparse_dag(rng, n_vertices=48, n_edges=70)
+    us = jnp.asarray(rng.integers(0, 48, 4), jnp.int32)
+    vs = jnp.asarray(rng.integers(0, 48, 4), jnp.int32)
+    _, ok1, s1 = acyclic.acyclic_add_edges(st, us, vs, method="closure",
+                                           with_stats=True)
+    _, ok2, s2 = acyclic.acyclic_add_edges(st, us, vs, method="partial",
+                                           with_stats=True)
+    np.testing.assert_array_equal(np.asarray(ok1), np.asarray(ok2))
+    assert s1["rows_per_product"] == CAP
+    assert s2["rows_per_product"] == 4
+    assert int(s2["row_products"]) < int(s1["row_products"])
+
+
+def test_both_methods_accept_pallas_dispatch_matmul():
+    """`kernels.ops.bitmm_packed` (ref on CPU, Pallas on TPU) drives both
+    reachability algorithms."""
+    st = dag.new_state(CAP)
+    st, _ = dag.add_vertices(st, arr([1, 2, 3]))
+    for method in acyclic.METHODS:
+        st_m, ok = acyclic.acyclic_add_edges(
+            st, arr([1, 2]), arr([2, 3]), method=method,
+            matmul_impl=ops.bitmm_packed)
+        assert bool(jnp.all(ok))
+        _, ok = acyclic.acyclic_add_edges(
+            st_m, arr([3]), arr([1]), method=method,
+            matmul_impl=ops.bitmm_packed)
+        assert not bool(ok[0])
+
+
+def test_path_exists_partial_matches_full():
+    rng = np.random.default_rng(9)
+    st = _sparse_dag(rng, n_vertices=32, n_edges=50)
+    f = jnp.asarray(rng.integers(0, 36, 16), jnp.int32)
+    t = jnp.asarray(rng.integers(0, 36, 16), jnp.int32)
+    np.testing.assert_array_equal(
+        np.asarray(reachability.path_exists(st, f, t)),
+        np.asarray(snapshot.path_exists_partial(st, f, t)))
+
+
+def test_sgt_conflicts_partial():
+    from repro.core import sgt
+    st = sgt.new_scheduler(CAP)
+    st, ok = sgt.begin(st, arr([1, 2, 3, 4]))
+    assert bool(jnp.all(ok))
+    st, acc = sgt.conflicts(st, arr([1, 2, 3]), arr([2, 3, 1]),
+                            subbatches=3, method="partial")
+    np.testing.assert_array_equal(np.asarray(acc), [True, True, False])
+    assert int(st.n_aborted) == 1
+
+
+def test_method_validation():
+    st = dag.new_state(CAP)
+    with pytest.raises(ValueError):
+        acyclic.acyclic_add_edges(st, arr([1]), arr([2]), method="bogus")
+
+
+def test_partial_under_jit():
+    """The whole partial path (while_loop early exit included) jits."""
+    rng = np.random.default_rng(13)
+    st = _sparse_dag(rng, n_vertices=32, n_edges=40)
+    us = jnp.asarray(rng.integers(0, 32, 8), jnp.int32)
+    vs = jnp.asarray(rng.integers(0, 32, 8), jnp.int32)
+    jitted = jax.jit(lambda s, u, v: acyclic.acyclic_add_edges(
+        s, u, v, method="partial"))
+    _, ok_jit = jitted(st, us, vs)
+    _, ok_eager = acyclic.acyclic_add_edges(st, us, vs, method="partial")
+    np.testing.assert_array_equal(np.asarray(ok_jit), np.asarray(ok_eager))
