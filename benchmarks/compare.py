@@ -1,0 +1,165 @@
+"""Benchmark-regression gate: diff a PR's ``benchmarks.run --json`` output
+against the committed ``BENCH_baseline.json``.
+
+    PYTHONPATH=src python -m benchmarks.compare BENCH_pr.json BENCH_baseline.json
+
+What is compared, and why the checks differ in strictness:
+
+* **Row-product counts** (the ``row_products=N`` field of the algo1/algo2/
+  auto rows) are *deterministic* — same seed, same graph, same count — so
+  they are compared directly against the baseline and fail on a >20%
+  increase (``--tolerance``).  This is the real algorithmic-work gate: a
+  change that makes either reachability algorithm (or the auto dispatcher)
+  do more boolean-matmul rows trips it even when wall time is in the noise.
+
+* **Absolute wall times do not transfer between machines**, so time checks
+  are within-run or ratio-based:
+    - auto-never-worse: for every ``algo*_B{n}`` triple *in the PR run*,
+      the auto row must not exceed the worse fixed method by more than
+      ``--tolerance`` (plus a small absolute slack for microsecond rows) —
+      the adaptive dispatcher's acceptance criterion;
+    - serve-flip guard: for every ``sgt_tick_*`` shape, the auto run's
+      ops/s must not trail the closure run's by more than ``--time-tolerance``;
+    - algo2/algo1 time *ratio* drift vs baseline uses ``--time-tolerance``
+      (default 1.0 == 2x), loose enough to absorb CI timer noise on
+      microsecond rows while still catching an order-of-magnitude loss of
+      the partial path's advantage.
+
+Exit status 0 = gate passed; 1 = regression (each failure is printed).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import sys
+
+ROW_PRODUCTS_RE = re.compile(r"row_products=(\d+)")
+OPS_PER_S_RE = re.compile(r"ops_per_s=(\d+)")
+ALGO_B_RE = re.compile(r"^algo(?:1_closure|2_partial|_auto)_B(\d+)$")
+SGT_RE = re.compile(r"^sgt_tick_(b\d+_K\d+)_(closure|auto)$")
+
+# absolute slack (us) added to within-run time comparisons so that
+# microsecond-scale rows don't trip the gate on timer noise alone
+ABS_SLACK_US = 250.0
+
+
+def load_rows(path: str) -> dict:
+    with open(path) as f:
+        data = json.load(f)
+    return {r["name"]: r for r in data["rows"]}
+
+
+def row_products(row: dict):
+    m = ROW_PRODUCTS_RE.search(row["derived"])
+    return int(m.group(1)) if m else None
+
+
+def ops_per_s(row: dict):
+    m = OPS_PER_S_RE.search(row["derived"])
+    return float(m.group(1)) if m else None
+
+
+def check(pr: dict, base: dict, tol: float, time_tol: float) -> list:
+    failures = []
+
+    # 1. coverage: every gated baseline row must still be produced
+    for name in base:
+        if (ALGO_B_RE.match(name) or SGT_RE.match(name)) and name not in pr:
+            failures.append(f"missing row: {name} (present in baseline)")
+
+    # 2. deterministic work: row-product counts vs baseline
+    for name, b_row in base.items():
+        b_rwp = row_products(b_row)
+        if b_rwp is None or name not in pr:
+            continue
+        p_rwp = row_products(pr[name])
+        if p_rwp is None:
+            failures.append(f"{name}: row_products disappeared from derived")
+        elif p_rwp > b_rwp * (1 + tol):
+            failures.append(
+                f"{name}: row_products {b_rwp} -> {p_rwp} "
+                f"(+{100 * (p_rwp / b_rwp - 1):.0f}% > {100 * tol:.0f}%)")
+
+    # 3. within-run: auto never slower than the worse fixed method
+    batches = sorted({int(m.group(1)) for n in pr
+                      if (m := ALGO_B_RE.match(n))})
+    for n_cand in batches:
+        names = {k: f"algo{k}_B{n_cand}"
+                 for k in ("1_closure", "2_partial", "_auto")}
+        if not all(v in pr for v in names.values()):
+            continue
+        t1 = pr[names["1_closure"]]["us_per_call"]
+        t2 = pr[names["2_partial"]]["us_per_call"]
+        ta = pr[names["_auto"]]["us_per_call"]
+        worst = max(t1, t2)
+        if ta > worst * (1 + tol) + ABS_SLACK_US:
+            failures.append(
+                f"algo_auto_B{n_cand}: {ta:.0f}us slower than the worse "
+                f"fixed method ({worst:.0f}us, closure={t1:.0f} "
+                f"partial={t2:.0f})")
+
+    # 4. within-run: the serve-path default flip must not cost throughput
+    sgt_shapes = {}
+    for name, row in pr.items():
+        m = SGT_RE.match(name)
+        if m:
+            sgt_shapes.setdefault(m.group(1), {})[m.group(2)] = row
+    for shape, by_method in sorted(sgt_shapes.items()):
+        if "closure" not in by_method or "auto" not in by_method:
+            continue
+        ops_c = ops_per_s(by_method["closure"])
+        ops_a = ops_per_s(by_method["auto"])
+        if ops_c and ops_a and ops_a < ops_c / (1 + time_tol):
+            failures.append(
+                f"sgt_tick_{shape}: auto {ops_a:.0f} ops/s trails closure "
+                f"{ops_c:.0f} ops/s by more than {100 * time_tol:.0f}%")
+
+    # 5. ratio drift vs baseline: algo2/algo1 wall-time ratio
+    for n_cand in batches:
+        c_name, p_name = f"algo1_closure_B{n_cand}", f"algo2_partial_B{n_cand}"
+        if not all(k in pr and k in base for k in (c_name, p_name)):
+            continue
+        pr_r = pr[p_name]["us_per_call"] / max(pr[c_name]["us_per_call"], 1e-9)
+        b_r = (base[p_name]["us_per_call"]
+               / max(base[c_name]["us_per_call"], 1e-9))
+        if pr_r > b_r * (1 + time_tol) and \
+                pr[p_name]["us_per_call"] > pr[c_name]["us_per_call"] \
+                + ABS_SLACK_US:
+            failures.append(
+                f"B{n_cand}: partial/closure time ratio {b_r:.2f} -> "
+                f"{pr_r:.2f} (+{100 * (pr_r / b_r - 1):.0f}% > "
+                f"{100 * time_tol:.0f}%)")
+
+    return failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("pr_json", help="benchmarks.run --json output of the PR")
+    ap.add_argument("baseline_json", help="committed BENCH_baseline.json")
+    ap.add_argument("--tolerance", type=float, default=0.2,
+                    help="max relative regression for deterministic "
+                         "row-product counts and the auto-never-worse check "
+                         "(default 0.2)")
+    ap.add_argument("--time-tolerance", type=float, default=1.0,
+                    help="max relative drift for wall-time ratio checks "
+                         "(default 1.0 == 2x; loose — CI timers are noisy)")
+    args = ap.parse_args()
+
+    pr, base = load_rows(args.pr_json), load_rows(args.baseline_json)
+    failures = check(pr, base, args.tolerance, args.time_tolerance)
+    if failures:
+        print(f"BENCH GATE: {len(failures)} regression(s)")
+        for f in failures:
+            print(f"  FAIL {f}")
+        return 1
+    n_rwp = sum(1 for r in base.values() if row_products(r) is not None)
+    print(f"BENCH GATE: ok ({len(pr)} rows; {n_rwp} row-product counts "
+          f"within {100 * args.tolerance:.0f}% of baseline; auto never "
+          f"slower than the worse fixed method)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -119,11 +119,15 @@ def _sparse_dag_state(capacity: int, n_vertices: int, n_edges: int, seed=2):
 def algo_compare_rows(capacity: int = 512, n_vertices: int = 384,
                       n_edges: int = 600, batches=(8, 32, 128),
                       matmul_impl=None):
-    """Paper algorithm 1 (full closure) vs algorithm 2 (partial snapshot):
-    time per AcyclicAddEdge batch plus the exact boolean-matmul work each
-    cycle check executed — n_products matmuls of rows_per_product rows;
-    row_products is their product, the comparable unit.  ``matmul_impl``
-    (e.g. `repro.kernels.ops.bitmm_packed`) drives both paths on TPU.
+    """Paper algorithm 1 (full closure) vs algorithm 2 (partial snapshot) vs
+    the adaptive dispatch (`method="auto"`, core/dispatch.py): time per
+    AcyclicAddEdge batch plus the exact boolean-matmul work each cycle check
+    executed — n_products matmuls of rows_per_product rows; row_products is
+    their product, the comparable unit.  The algo_auto row also records
+    which algorithm the cost model chose (chose=...), so the
+    `benchmarks/compare.py` gate can hold "auto is never slower than the
+    worse fixed method" against a committed baseline.  ``matmul_impl``
+    (e.g. `repro.kernels.ops.bitmm_packed`) drives all paths on TPU.
     """
     from repro.core import acyclic as AC
     rows = []
@@ -132,22 +136,28 @@ def algo_compare_rows(capacity: int = 512, n_vertices: int = 384,
         us = jnp.asarray(rng.integers(0, n_vertices, n_cand), jnp.int32)
         vs = jnp.asarray(rng.integers(0, n_vertices, n_cand), jnp.int32)
         stats = {}
-        for method in ("closure", "partial"):
+        for method in AC.METHODS:  # ("closure", "partial", "auto")
             fn = jax.jit(lambda s, u, v, m=method: AC.acyclic_add_edges(
                 s, u, v, method=m, matmul_impl=matmul_impl, with_stats=True))
             t = _time(fn, st0, us, vs, iters=3)
             _, ok, s = fn(st0, us, vs)
             stats[method] = (t, int(s["n_products"]),
                              int(s["rows_per_product"]),
-                             int(s["row_products"]), np.asarray(ok))
-        (t1, np1, rp1, rwp1, ok1) = stats["closure"]
-        (t2, np2, rp2, rwp2, ok2) = stats["partial"]
+                             int(s["row_products"]), int(s["n_partial"]),
+                             np.asarray(ok))
+        (t1, np1, rp1, rwp1, _, ok1) = stats["closure"]
+        (t2, np2, rp2, rwp2, _, ok2) = stats["partial"]
+        (ta, npa, _, rwpa, n_part, oka) = stats["auto"]
         assert (ok1 == ok2).all(), "algo1/algo2 must decide identically"
+        assert (ok1 == oka).all(), "auto must decide like the fixed methods"
+        chose = "partial" if n_part else "closure"
         rows.append((f"algo1_closure_B{n_cand}", t1 * 1e6,
                      f"products={np1}x{rp1}rows_row_products={rwp1}"))
         rows.append((f"algo2_partial_B{n_cand}", t2 * 1e6,
                      f"products={np2}x{rp2}rows_row_products={rwp2}"
                      f"_work_ratio={rwp1 / max(rwp2, 1):.1f}x"))
+        rows.append((f"algo_auto_B{n_cand}", ta * 1e6,
+                     f"products={npa}_row_products={rwpa}_chose={chose}"))
     return rows
 
 

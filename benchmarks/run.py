@@ -1,28 +1,60 @@
 """Benchmark harness: one function per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV.  Run:
-    PYTHONPATH=src python -m benchmarks.run [--quick]
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--json PATH]
+
+``--json`` additionally writes the rows as structured JSON — the format
+`benchmarks/compare.py` diffs against the committed ``BENCH_baseline.json``
+in the CI benchmark-regression gate.
 """
 from __future__ import annotations
 
-import sys
+import argparse
+import json
+import platform
 
 
-def main() -> None:
-    quick = "--quick" in sys.argv
+def collect_rows(quick: bool):
     rows = []
-
     from benchmarks import paper_workloads, kernel_bench
     rows += paper_workloads.all_rows(quick=quick)
     if not quick:
         rows += kernel_bench.all_rows()
-
     from benchmarks import sgt_bench
     rows += sgt_bench.all_rows(quick=quick)
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write rows as JSON (benchmarks/compare.py "
+                         "input)")
+    args = ap.parse_args()
+
+    rows = collect_rows(args.quick)
 
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
+
+    if args.json:
+        import jax
+        payload = {
+            "meta": {
+                "quick": args.quick,
+                "jax": jax.__version__,
+                "backend": jax.default_backend(),
+                "python": platform.python_version(),
+            },
+            "rows": [{"name": n, "us_per_call": us, "derived": d}
+                     for n, us, d in rows],
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+            f.write("\n")
+        print(f"# wrote {args.json}")
 
 
 if __name__ == "__main__":

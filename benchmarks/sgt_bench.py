@@ -1,5 +1,11 @@
 """SGT scheduler end-to-end benchmark (the paper's motivating application):
-sustained scheduling throughput and abort rate under contention."""
+sustained scheduling throughput and abort rate under contention.
+
+Each (batch, subbatches) shape runs twice — ``method="closure"`` (the old
+serve-path default) and ``method="auto"`` (the current default, adaptive
+dispatch per `core/dispatch.py`) — so the default flip is justified by
+before/after rows in the same run.
+"""
 from __future__ import annotations
 
 
@@ -7,10 +13,12 @@ def all_rows(quick: bool = False):
     from repro.launch.serve import serve_sgt
     rows = []
     for batch, sub in ((128, 1), (512, 1), (512, 4)):
-        out = serve_sgt(capacity=1024, batch=batch,
-                        ticks=10 if quick else 30, subbatches=sub)
-        rows.append((f"sgt_tick_b{batch}_K{sub}",
-                     1e6 / (out["ops_per_s"] / batch),
-                     f"ops_per_s={out['ops_per_s']:.0f}"
-                     f"_abort_rate={out['abort_rate']:.3f}"))
+        for method in ("closure", "auto"):
+            out = serve_sgt(capacity=1024, batch=batch,
+                            ticks=10 if quick else 30, subbatches=sub,
+                            method=method)
+            rows.append((f"sgt_tick_b{batch}_K{sub}_{method}",
+                         1e6 / (out["ops_per_s"] / batch),
+                         f"ops_per_s={out['ops_per_s']:.0f}"
+                         f"_abort_rate={out['abort_rate']:.3f}"))
     return rows

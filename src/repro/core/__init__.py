@@ -4,7 +4,9 @@ Public API:
   DagState / new_state / add_vertices / remove_vertices / add_edges /
   remove_edges / contains_vertices / contains_edges / apply_op_batch
   acyclic_add_edges (relaxed acyclic insert, the paper's AcyclicAddEdge;
-                     method="closure"|"partial" picks algorithm 1 or 2)
+                     method="closure"|"partial"|"auto" picks algorithm 1,
+                     algorithm 2, or cost-model dispatch between them)
+  choose_method / prefer_partial (the "auto" cost model, core/dispatch.py)
   path_exists / reach_sets / transitive_closure / is_acyclic (algorithm 1)
   reach_until_decided / partial_cycle_check / path_exists_partial
                      (algorithm 2: partial-snapshot scoped scans)
@@ -17,7 +19,10 @@ from repro.core.dag import (  # noqa: F401
     REMOVE_VERTEX, ADD_VERTEX, REMOVE_EDGE, ADD_EDGE,
     CONTAINS_VERTEX, CONTAINS_EDGE,
 )
-from repro.core.acyclic import acyclic_add_edges  # noqa: F401
+from repro.core.acyclic import acyclic_add_edges, METHODS  # noqa: F401
+from repro.core.dispatch import (  # noqa: F401
+    choose_method, choose_scan_sharding, prefer_partial,
+)
 from repro.core.reachability import (  # noqa: F401
     path_exists, reach_sets, transitive_closure, is_acyclic,
     bool_matmul_packed, expand_frontier,

@@ -22,6 +22,10 @@ the batch (both return identical ok bits — only the work differs):
              from the candidates' target slots — per hop one product over B
              rows, early-exiting at the deciding depth.  Asymptotically
              cheaper for small sparse batches (B << C, shallow cones).
+  "auto"     Adaptive dispatch (`core/dispatch.py`): the cost model picks
+             one of the two per sub-batch from B, C, and a popcount density
+             estimate of ``G ∪ transit``; under jit the choice is a
+             ``lax.cond`` so the dispatch itself is traced, not staged out.
 
 ``subbatches=K`` (beyond paper): splits the batch into K priority classes
 checked sequentially — K=1 is the paper-faithful maximally-concurrent mode,
@@ -35,11 +39,11 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import bitset, snapshot
+from repro.core import bitset, dispatch, snapshot
 from repro.core.dag import DagState, lookup_slots, _valid
 from repro.core.reachability import transitive_closure, MatmulImpl
 
-METHODS = ("closure", "partial")
+METHODS = dispatch.METHODS
 
 
 def acyclic_add_edges(state: DagState, us: jax.Array, vs: jax.Array,
@@ -55,10 +59,14 @@ def acyclic_add_edges(state: DagState, us: jax.Array, vs: jax.Array,
       - False if the insert lies on a cycle of ``G ∪ transit`` (the edge is
         backed out; false positives under concurrency are allowed).
 
-    stats = {"n_products", "rows_per_product", "row_products"} counts the
-    boolean matmuls the cycle checks executed (summed over sub-batches);
-    row_products is the total number of rows fed through the matmul — the
-    comparable work unit between the two methods.
+    stats = {"n_products", "rows_per_product", "row_products", "n_partial"}
+    counts the boolean matmuls the cycle checks executed (summed over
+    sub-batches); row_products is the total number of rows fed through the
+    matmul — the comparable work unit between the two methods
+    (rows_per_product is -1 under ``method="auto"``, where sub-batches may
+    mix row widths; row_products stays exact).  n_partial is the number of
+    sub-batch checks decided by algorithm 2 — under "auto" it exposes what
+    the dispatcher chose.
     """
     if method not in METHODS:
         raise ValueError(f"method must be one of {METHODS}, got {method!r}")
@@ -66,7 +74,10 @@ def acyclic_add_edges(state: DagState, us: jax.Array, vs: jax.Array,
     b = us.shape[0]
     if b % subbatches != 0:
         raise ValueError(f"batch {b} not divisible by subbatches {subbatches}")
-    rows_per_product = state.capacity if method == "closure" else b // subbatches
+    b_sub = b // subbatches
+    rows_per_product = {"closure": state.capacity, "partial": b_sub,
+                        "auto": -1}[method]
+    capacity = state.capacity
 
     us_r = us.reshape(subbatches, -1)
     vs_r = vs.reshape(subbatches, -1)
@@ -81,26 +92,40 @@ def acyclic_add_edges(state: DagState, us: jax.Array, vs: jax.Array,
         already = vert_ok & bitset.bit_get(adj, u_slot, v_slot)
         cand = vert_ok & ~already & ~self_loop
         adj_t = bitset.scatter_set_bits(adj, u_slot, v_slot, cand)  # transit
-        if method == "closure":
-            closure, n_products = transitive_closure(adj_t, matmul_impl,
-                                                     with_stats=True)
+
+        def closure_check(adj_t):
+            closure, n = transitive_closure(adj_t, matmul_impl,
+                                            with_stats=True)
             cyc = bitset.bit_get(closure, v_slot, u_slot)  # path v -> u
-        else:
-            cyc, n_products = snapshot.partial_cycle_check(
+            return cyc, n, n * jnp.int32(capacity), jnp.int32(0)
+
+        def partial_check(adj_t):
+            cyc, n = snapshot.partial_cycle_check(
                 adj_t, u_slot, v_slot, cand, matmul_impl, with_stats=True)
+            return cyc, n, n * jnp.int32(b_sub), jnp.int32(1)
+
+        if method == "closure":
+            checked = closure_check(adj_t)
+        elif method == "partial":
+            checked = partial_check(adj_t)
+        else:  # auto: cost-model dispatch on the transit graph's density
+            use_partial = dispatch.prefer_partial_from_adj(adj_t, b_sub)
+            checked = jax.lax.cond(use_partial, partial_check, closure_check,
+                                   adj_t)
+        cyc, n_products, row_products, chose_partial = checked
         reject = cand & cyc
         adj_n = bitset.scatter_clear_bits(adj_t, u_slot, v_slot, reject)
         ok = already | (cand & ~cyc)
-        return adj_n, (ok, n_products)
+        return adj_n, (ok, n_products, row_products, chose_partial)
 
-    adj, (oks, n_products) = jax.lax.scan(
+    adj, (oks, n_products, row_products, chose_partial) = jax.lax.scan(
         step, state.adj, (us_r, vs_r, valid_r))
     state = state._replace(adj=adj)
     oks = oks.reshape(b)
     if not with_stats:
         return state, oks
-    n_total = jnp.sum(n_products, dtype=jnp.int32)
-    stats = {"n_products": n_total,
+    stats = {"n_products": jnp.sum(n_products, dtype=jnp.int32),
              "rows_per_product": rows_per_product,
-             "row_products": n_total * rows_per_product}
+             "row_products": jnp.sum(row_products, dtype=jnp.int32),
+             "n_partial": jnp.sum(chose_partial, dtype=jnp.int32)}
     return state, oks, stats

@@ -166,8 +166,9 @@ def apply_op_batch(state: DagState, op: jax.Array, a: jax.Array, b: jax.Array,
     RemoveVertex -> AddVertex -> RemoveEdge -> AddEdge -> reads.
 
     ``method`` picks the acyclic cycle-check algorithm ("closure" = paper
-    algorithm 1 full closure, "partial" = algorithm 2 partial snapshot; see
-    `core/acyclic.py`).  Returns (state, ok[B]).
+    algorithm 1 full closure, "partial" = algorithm 2 partial snapshot,
+    "auto" = per-batch cost-model dispatch between the two; see
+    `core/acyclic.py` and `core/dispatch.py`).  Returns (state, ok[B]).
     """
     from repro.core import acyclic as acyclic_mod
 

@@ -78,6 +78,15 @@ def path_exists(state: DagState, from_keys: jax.Array, to_keys: jax.Array,
     return f_found & t_found & hit
 
 
+def closure_iteration_bound(capacity: int) -> int:
+    """ceil(log2 C), floored at 1: the repeated-squaring iteration count.
+
+    Single source of truth — `transitive_closure`, the sharded variant, and
+    the `core/dispatch.py` cost model all price the closure off this bound.
+    """
+    return max(1, math.ceil(math.log2(max(capacity, 2))))
+
+
 def transitive_closure(adj_packed: jax.Array,
                        matmul_impl: Optional[MatmulImpl] = None,
                        with_stats: bool = False):
@@ -90,7 +99,7 @@ def transitive_closure(adj_packed: jax.Array,
     """
     impl = matmul_impl or bool_matmul_packed
     c = adj_packed.shape[0]
-    n_iter = max(1, math.ceil(math.log2(max(c, 2))))
+    n_iter = closure_iteration_bound(c)
 
     def cond(carry):
         _, i, changed = carry

@@ -42,14 +42,17 @@ def begin(state: SgtState, txn_ids: jax.Array, valid=None):
 
 def conflicts(state: SgtState, src: jax.Array, dst: jax.Array, valid=None,
               subbatches: int = 1, matmul_impl=None,
-              method: str = "closure"):
+              method: str = "auto"):
     """Register conflict edges src -> dst. Returns (state, accepted[B]).
 
     accepted=False with live endpoints means a cycle was (possibly jointly)
     detected: the source transaction is aborted and retired from the graph.
-    ``method="partial"`` decides cycles with the scoped algorithm-2 scan —
-    the right default for SGT ticks, whose conflict batches are small and
-    whose conflict graphs are sparse.
+    ``method`` defaults to "auto" (`core/dispatch.py`): SGT conflict batches
+    are usually small and their graphs sparse, so the cost model picks the
+    scoped algorithm-2 scan — but outsized or dense ticks fall back to the
+    algorithm-1 closure instead of paying a deep sequential scan.  The
+    serve-path flip from "closure" is justified by the before/after
+    ``sgt_tick_*`` rows in `benchmarks/sgt_bench.py`.
     """
     g, ok = acyclic.acyclic_add_edges(
         state.graph, src, dst, valid=valid, subbatches=subbatches,
@@ -74,7 +77,7 @@ def finish(state: SgtState, txn_ids: jax.Array, valid=None):
 
 
 def schedule_tick(state: SgtState, begin_ids, conf_src, conf_dst, finish_ids,
-                  subbatches: int = 1, method: str = "closure"):
+                  subbatches: int = 1, method: str = "auto"):
     """One bulk-synchronous scheduling tick: begins, conflicts, finishes."""
     state, began = begin(state, begin_ids)
     state, accepted = conflicts(state, conf_src, conf_dst,

@@ -13,16 +13,20 @@ mesh (axis "shard").  Two execution paths are provided:
                     -> all-gather(partials) -> OR-reduce        (1 collective)
      closure step:  all-gather(R) -> local (C/D, C)x(C, C) prod (1 collective)
      partial scan:  frontier hops with decided-query early exit
-                    (`reach_until_decided_sharded`, paper algorithm 2)
+                    (`reach_until_decided_sharded`, paper algorithm 2);
+                    two schedules exist — frontier-sharded (contraction dim
+                    split, one (B, C) psum per hop) and B-sharded
+                    (`reach_until_decided_batch_sharded`: queries split
+                    across devices, adjacency replicated once, zero per-hop
+                    collectives, per-device early exit) — with
+                    `reach_until_decided_auto_sharded` picking between them
+                    from B and the device count (`dispatch.py`).
    The OR-reduction over devices is the TPU analogue of concurrent threads
    publishing updates: order-free, idempotent, no locks.
 
 Rows must align to 32-bit word boundaries per shard: C % (32*D) == 0.
 """
 from __future__ import annotations
-
-import functools
-import math
 
 import jax
 import jax.numpy as jnp
@@ -108,10 +112,60 @@ def reach_until_decided_sharded(mesh: Mesh, adj: jax.Array,
             mesh, a, frontier))
 
 
+def reach_until_decided_batch_sharded(mesh: Mesh, adj: jax.Array,
+                                      sources: jax.Array,
+                                      target_slots: jax.Array) -> jax.Array:
+    """B-sharded partial scan: the B query rows are partitioned across the
+    mesh and the full adjacency is replicated into every shard (one gather
+    if it arrives row-sharded), so each hop is a purely local
+    (B/D, C)x(C, C) boolean product — no per-hop psum at all, versus the
+    frontier-sharded scan's (B, C) float payload every hop.  Because the
+    loop body has no collectives, every device early-exits at its *own*
+    shard's deciding depth instead of the global maximum.
+
+    Requires B % D == 0.  `reach_until_decided_auto_sharded` dispatches
+    between this and the frontier-sharded scan.
+    """
+    from repro.core import snapshot
+
+    n_dev = mesh.devices.size
+    b = sources.shape[0]
+    if b % n_dev != 0:
+        raise ValueError(f"batch {b} not divisible by mesh size {n_dev}")
+
+    def kernel(adj_full, src_local, tgt_local):
+        return snapshot.reach_until_decided(adj_full, src_local, tgt_local)
+
+    # check_vma/check_rep off: the kernel's data-dependent while_loop has no
+    # replication rule, and nothing here is claimed replicated anyway.
+    return compat.shard_map(
+        kernel, mesh=mesh,
+        in_specs=(P(None, None), P(AXIS, None), P(AXIS)),
+        out_specs=P(AXIS), check_vma=False,
+    )(adj, sources, target_slots)
+
+
+def reach_until_decided_auto_sharded(mesh: Mesh, adj: jax.Array,
+                                     sources: jax.Array,
+                                     target_slots: jax.Array) -> jax.Array:
+    """Partial scan with the schedule picked by `dispatch.choose_scan_sharding`:
+    B-sharded when the query batch divides the mesh with enough rows per
+    device, frontier-sharded otherwise."""
+    from repro.core import dispatch
+
+    plan = dispatch.choose_scan_sharding(sources.shape[0], adj.shape[0],
+                                         mesh.devices.size)
+    if plan == "batch":
+        return reach_until_decided_batch_sharded(mesh, adj, sources,
+                                                 target_slots)
+    return reach_until_decided_sharded(mesh, adj, sources, target_slots)
+
+
 def transitive_closure_sharded(mesh: Mesh, adj: jax.Array) -> jax.Array:
     """Repeated squaring; R stays row-sharded, rhs is all-gathered per step."""
-    c = adj.shape[0]
-    n_iter = max(1, math.ceil(math.log2(max(c, 2))))
+    from repro.core.reachability import closure_iteration_bound
+
+    n_iter = closure_iteration_bound(adj.shape[0])
 
     def step(r_local):
         # r_local: (C/D, W); gather full R as the rhs

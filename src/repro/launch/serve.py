@@ -17,7 +17,12 @@ import numpy as np
 
 
 def serve_sgt(capacity: int = 1024, batch: int = 256, ticks: int = 50,
-              subbatches: int = 1, seed: int = 0) -> dict:
+              subbatches: int = 1, seed: int = 0,
+              method: str = "auto") -> dict:
+    """``method`` picks the conflict cycle-check: "closure" / "partial" /
+    "auto" (default — the `core/dispatch.py` cost model decides per tick;
+    flipped from "closure" on the strength of the sgt_tick benchmark rows).
+    """
     from repro.core import sgt
 
     rng = np.random.default_rng(seed)
@@ -26,7 +31,18 @@ def serve_sgt(capacity: int = 1024, batch: int = 256, ticks: int = 50,
     live: list[int] = []
 
     tick_fn = jax.jit(lambda st, b, cs, cd, f: sgt.schedule_tick(
-        st, b, cs, cd, f, subbatches=subbatches))
+        st, b, cs, cd, f, subbatches=subbatches, method=method))
+
+    # one untimed warmup tick on dummy inputs of the serving shapes, so jit
+    # compile stays out of the throughput window (method="auto" compiles
+    # both lax.cond branches — charging that to the timed region would skew
+    # the closure-vs-auto benchmark rows the CI gate compares)
+    warm, _ = tick_fn(state,
+                      jnp.zeros(batch // 4, jnp.int32),
+                      jnp.zeros(batch // 2, jnp.int32),
+                      jnp.zeros(batch // 2, jnp.int32),
+                      jnp.full(batch // 4, -1, jnp.int32))
+    jax.block_until_ready(warm.graph.adj)
 
     n_ops = 0
     t0 = time.perf_counter()
@@ -56,7 +72,7 @@ def serve_sgt(capacity: int = 1024, batch: int = 256, ticks: int = 50,
         "abort_rate": float(int(state.n_aborted) /
                             max(1, int(state.n_begun))),
     }
-    print(f"[serve-sgt] {n_ops} ops in {dt:.2f}s -> "
+    print(f"[serve-sgt:{method}] {n_ops} ops in {dt:.2f}s -> "
           f"{out['ops_per_s']:.0f} ops/s; began={out['begun']} "
           f"committed={out['committed']} aborted={out['aborted']} "
           f"(abort rate {out['abort_rate']:.3f})")
@@ -100,10 +116,14 @@ def main() -> int:
     p.add_argument("--ticks", type=int, default=50)
     p.add_argument("--batch", type=int, default=256)
     p.add_argument("--subbatches", type=int, default=1)
+    from repro.core import METHODS
+    p.add_argument("--method", choices=list(METHODS), default="auto",
+                   help="conflict cycle-check algorithm (auto = cost-model "
+                        "dispatch, core/dispatch.py)")
     args = p.parse_args()
     if args.mode == "sgt":
         serve_sgt(batch=args.batch, ticks=args.ticks,
-                  subbatches=args.subbatches)
+                  subbatches=args.subbatches, method=args.method)
     else:
         serve_lm(args.arch, batch=max(2, args.batch % 16))
     return 0

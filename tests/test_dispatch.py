@@ -1,0 +1,198 @@
+"""Adaptive reachability dispatch (`method="auto"`, core/dispatch.py) tests.
+
+Pins four things:
+  1. the cost model picks the expected algorithm at the (B, C, density)
+     extremes — small batches go partial at any density, capacity-sized
+     sparse batches go closure, density shifts the threshold up;
+  2. `method="auto"` decides exactly like both fixed methods (same ok bits,
+     same post-state) and matches the sequential oracle on mixed workloads;
+  3. the auto stats expose the choice (n_partial) and charge the chosen
+     algorithm's exact row-products;
+  4. the sharded-scan dispatcher (`choose_scan_sharding`) B-shards only
+     when the query batch divides the mesh with enough rows per device
+     (the multi-device equality check lives in tests/test_sharded_dag.py).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import acyclic, dag, dispatch, reachability
+from repro.core.oracle import SeqGraph, apply_op_batch_oracle
+
+CAP = 64
+
+
+def arr(xs, dtype=jnp.int32):
+    return jnp.asarray(xs, dtype)
+
+
+def _sparse_dag(rng, n_vertices: int, n_edges: int, capacity: int = CAP):
+    st = dag.new_state(capacity)
+    st, _ = dag.add_vertices(st, jnp.arange(n_vertices, dtype=jnp.int32))
+    pairs = rng.integers(0, n_vertices, (n_edges, 2))
+    pairs = pairs[pairs[:, 0] != pairs[:, 1]]
+    us = np.minimum(pairs[:, 0], pairs[:, 1]).astype(np.int32)
+    vs = np.maximum(pairs[:, 0], pairs[:, 1]).astype(np.int32)
+    st, _ = dag.add_edges(st, jnp.asarray(us), jnp.asarray(vs))
+    return st
+
+
+# ------------------------------------------------------- cost-model extremes
+
+@pytest.mark.parametrize("batch,capacity,degree,expected", [
+    # B << C -> partial at any density (the SGT serve-tick shape)
+    (1, 64, 0.1, "partial"),
+    (4, 512, 1.0, "partial"),
+    (8, 512, 0.5, "partial"),
+    (8, 512, 64.0, "partial"),
+    # sparse with B at capacity -> closure (est_depth == log2 C, so the
+    # partial frontier rows alone match the closure's row count)
+    (64, 64, 1.0, "closure"),
+    (512, 512, 1.0, "closure"),
+    (1024, 512, 2.0, "closure"),
+    # dense graphs decide in fewer hops -> partial survives to larger B...
+    (256, 512, 64.0, "partial"),
+    # ...but B far beyond capacity always ends up closure
+    (4096, 512, 256.0, "closure"),
+])
+def test_choose_method_extremes(batch, capacity, degree, expected):
+    assert dispatch.choose_method(batch, capacity, degree) == expected
+
+
+def test_cost_model_pieces_are_monotone():
+    # deeper estimates for sparser graphs, capped at the closure's log2 C
+    log2c = dispatch.ceil_log2(512)
+    d_sparse = float(dispatch.estimate_deciding_depth(512, 0.5))
+    d_dense = float(dispatch.estimate_deciding_depth(512, 64.0))
+    assert 1.0 <= d_dense < d_sparse <= log2c
+    assert dispatch.closure_row_products(512) == 512 * log2c
+
+
+def test_prefer_partial_from_adj_matches_choose_method():
+    rng = np.random.default_rng(3)
+    st = _sparse_dag(rng, n_vertices=48, n_edges=70)
+    degree = float(dispatch.mean_out_degree(st.adj))
+    for b in (2, 8, CAP, 4 * CAP):
+        want = dispatch.choose_method(b, CAP, degree) == "partial"
+        assert bool(dispatch.prefer_partial_from_adj(st.adj, b)) == want
+
+
+# ------------------------------------------------ auto == fixed == oracle
+
+def test_auto_matches_both_fixed_methods():
+    rng = np.random.default_rng(11)
+    st = _sparse_dag(rng, n_vertices=40, n_edges=60)
+    for trial in range(8):
+        us = jnp.asarray(rng.integers(0, 44, 8), jnp.int32)
+        vs = jnp.asarray(rng.integers(0, 44, 8), jnp.int32)
+        outs = {}
+        for method in acyclic.METHODS:
+            outs[method] = acyclic.acyclic_add_edges(st, us, vs,
+                                                     method=method)
+        _, ok_c = outs["closure"]
+        for method in ("partial", "auto"):
+            st_m, ok_m = outs[method]
+            np.testing.assert_array_equal(np.asarray(ok_m), np.asarray(ok_c))
+            np.testing.assert_array_equal(np.asarray(st_m.adj),
+                                          np.asarray(outs["closure"][0].adj))
+        st = outs["auto"][0]
+        assert bool(reachability.is_acyclic(st.adj))
+
+
+def test_auto_mixed_ops_match_oracle():
+    op_codes = [dag.REMOVE_VERTEX, dag.ADD_VERTEX, dag.REMOVE_EDGE,
+                dag.ADD_EDGE, dag.CONTAINS_VERTEX, dag.CONTAINS_EDGE]
+    for seed in range(4):
+        rng = np.random.default_rng(300 + seed)
+        state = dag.new_state(CAP)
+        g = SeqGraph(capacity=CAP)
+        for _ in range(6):
+            n = 6
+            o = jnp.asarray(rng.choice(op_codes, n), jnp.int32)
+            a = jnp.asarray(rng.integers(0, 12, n), jnp.int32)
+            b = jnp.asarray(rng.integers(0, 12, n), jnp.int32)
+            state, res = dag.apply_op_batch(state, o, a, b, acyclic=True,
+                                            method="auto")
+            # both fixed-method specs decide identically, so either oracles
+            # the auto result; use "partial" (the scoped-scan spec)
+            want = apply_op_batch_oracle(g, np.asarray(o), np.asarray(a),
+                                         np.asarray(b), acyclic=True,
+                                         method="partial")
+            np.testing.assert_array_equal(np.asarray(res), want)
+            assert bool(reachability.is_acyclic(state.adj))
+
+
+def test_auto_under_jit_and_subbatches():
+    rng = np.random.default_rng(13)
+    st = _sparse_dag(rng, n_vertices=32, n_edges=40)
+    us = jnp.asarray(rng.integers(0, 32, 8), jnp.int32)
+    vs = jnp.asarray(rng.integers(0, 32, 8), jnp.int32)
+    for k in (1, 2, 4):
+        jitted = jax.jit(lambda s, u, v, k=k: acyclic.acyclic_add_edges(
+            s, u, v, subbatches=k, method="auto"))
+        _, ok_jit = jitted(st, us, vs)
+        _, ok_eager = acyclic.acyclic_add_edges(st, us, vs, subbatches=k,
+                                                method="auto")
+        np.testing.assert_array_equal(np.asarray(ok_jit),
+                                      np.asarray(ok_eager))
+
+
+# ------------------------------------------------------------- auto stats
+
+def test_auto_stats_expose_choice_and_exact_work():
+    rng = np.random.default_rng(5)
+    st = _sparse_dag(rng, n_vertices=48, n_edges=70)
+    us = jnp.asarray(rng.integers(0, 48, 4), jnp.int32)
+    vs = jnp.asarray(rng.integers(0, 48, 4), jnp.int32)
+    _, ok_p, s_p = acyclic.acyclic_add_edges(st, us, vs, method="partial",
+                                             with_stats=True)
+    _, ok_a, s_a = acyclic.acyclic_add_edges(st, us, vs, method="auto",
+                                             with_stats=True)
+    # small sparse batch -> the dispatcher picks algorithm 2 and the work
+    # accounting equals the fixed partial run exactly
+    assert int(s_a["n_partial"]) == 1
+    assert s_a["rows_per_product"] == -1  # mixed-width sentinel
+    assert int(s_a["row_products"]) == int(s_p["row_products"])
+    np.testing.assert_array_equal(np.asarray(ok_a), np.asarray(ok_p))
+
+    # capacity-sized batch on the same sparse graph -> closure
+    us2 = jnp.asarray(rng.integers(0, 48, CAP), jnp.int32)
+    vs2 = jnp.asarray(rng.integers(0, 48, CAP), jnp.int32)
+    _, ok_c, s_c = acyclic.acyclic_add_edges(st, us2, vs2, method="closure",
+                                             with_stats=True)
+    _, ok_a2, s_a2 = acyclic.acyclic_add_edges(st, us2, vs2, method="auto",
+                                               with_stats=True)
+    assert int(s_a2["n_partial"]) == 0
+    assert int(s_a2["row_products"]) == int(s_c["row_products"])
+    np.testing.assert_array_equal(np.asarray(ok_a2), np.asarray(ok_c))
+
+    # fixed methods report their constant row width and their own choice
+    assert s_c["rows_per_product"] == CAP and int(s_c["n_partial"]) == 0
+    assert s_p["rows_per_product"] == 4 and int(s_p["n_partial"]) == 1
+
+
+# ------------------------------------------------------- sgt default = auto
+
+def test_sgt_conflicts_auto_default():
+    from repro.core import sgt
+    st = sgt.new_scheduler(CAP)
+    st, ok = sgt.begin(st, arr([1, 2, 3, 4]))
+    assert bool(jnp.all(ok))
+    # default method (now "auto") keeps the same accept/abort semantics
+    st, acc = sgt.conflicts(st, arr([1, 2, 3]), arr([2, 3, 1]), subbatches=3)
+    np.testing.assert_array_equal(np.asarray(acc), [True, True, False])
+    assert int(st.n_aborted) == 1
+
+
+# ------------------------------------------------- sharded-scan dispatch
+
+@pytest.mark.parametrize("batch,n_devices,expected", [
+    (64, 8, "batch"),     # 8 rows/device: enough to B-shard
+    (16, 8, "frontier"),  # only 2 rows/device
+    (63, 8, "frontier"),  # not divisible
+    (64, 1, "frontier"),  # single device: nothing to shard
+    (256, 8, "batch"),
+])
+def test_choose_scan_sharding(batch, n_devices, expected):
+    assert dispatch.choose_scan_sharding(batch, 256, n_devices) == expected

@@ -46,6 +46,26 @@ SCRIPT = textwrap.dedent("""
         np.asarray(h_got),
         np.asarray(bitset.bit_get(want, jnp.arange(16), tgts)))
 
+    # B-sharded scan == frontier-sharded scan == single-device reference
+    # (64 queries / 8 devices = 8 rows per shard -> the dispatcher B-shards)
+    from repro.core import dispatch
+    srcs64 = bitset.onehot_rows(jnp.arange(64, dtype=jnp.int32) * 3 % CAP,
+                                CAP)
+    tgts64 = (jnp.arange(64, dtype=jnp.int32)[::-1] * 5) % CAP
+    hb_ref = snapshot.reach_until_decided(adj, srcs64, tgts64)
+    hb_got = sharded.reach_until_decided_batch_sharded(mesh, adj, srcs64,
+                                                       tgts64)
+    np.testing.assert_array_equal(np.asarray(hb_got), np.asarray(hb_ref))
+    hf_got = sharded.reach_until_decided_sharded(mesh, adj, srcs64, tgts64)
+    np.testing.assert_array_equal(np.asarray(hf_got), np.asarray(hb_ref))
+    assert dispatch.choose_scan_sharding(64, CAP, 8) == "batch"
+    ha = sharded.reach_until_decided_auto_sharded(mesh, adj, srcs64, tgts64)
+    np.testing.assert_array_equal(np.asarray(ha), np.asarray(hb_ref))
+    # small batch (2 rows/device): the dispatcher keeps the frontier path
+    assert dispatch.choose_scan_sharding(16, CAP, 8) == "frontier"
+    ha16 = sharded.reach_until_decided_auto_sharded(mesh, adj, srcs, tgts)
+    np.testing.assert_array_equal(np.asarray(ha16), np.asarray(h_ref))
+
     assert bool(sharded.is_acyclic_sharded(mesh, adj)) == bool(
         reachability.is_acyclic(adj))
 
