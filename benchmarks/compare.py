@@ -20,6 +20,9 @@ What is compared, and why the checks differ in strictness:
       the adaptive dispatcher's acceptance criterion;
     - serve-flip guard: for every ``sgt_tick_*`` shape, the auto run's
       ops/s must not trail the closure run's by more than ``--time-tolerance``;
+    - engine-façade guard: the ``sgt_tick_*_engine`` row (the unified
+      `DagEngine` session path) must stay within ``ENGINE_TOLERANCE``
+      (10%) of the same shape's function-path (auto) throughput;
     - algo2/algo1 time *ratio* drift vs baseline uses ``--time-tolerance``
       (default 1.0 == 2x), loose enough to absorb CI timer noise on
       microsecond rows while still catching an order-of-magnitude loss of
@@ -37,11 +40,15 @@ import sys
 ROW_PRODUCTS_RE = re.compile(r"row_products=(\d+)")
 OPS_PER_S_RE = re.compile(r"ops_per_s=(\d+)")
 ALGO_B_RE = re.compile(r"^algo(?:1_closure|2_partial|_auto)_B(\d+)$")
-SGT_RE = re.compile(r"^sgt_tick_(b\d+_K\d+)_(closure|auto)$")
+SGT_RE = re.compile(r"^sgt_tick_(b\d+_K\d+)_(closure|auto|engine)$")
 
 # absolute slack (us) added to within-run time comparisons so that
 # microsecond-scale rows don't trip the gate on timer noise alone
 ABS_SLACK_US = 250.0
+
+# the DagEngine session façade must stay within this fraction of the
+# function-path SGT throughput on the same shape (within-run comparison)
+ENGINE_TOLERANCE = 0.10
 
 
 def load_rows(path: str) -> dict:
@@ -114,6 +121,19 @@ def check(pr: dict, base: dict, tol: float, time_tol: float) -> list:
             failures.append(
                 f"sgt_tick_{shape}: auto {ops_a:.0f} ops/s trails closure "
                 f"{ops_c:.0f} ops/s by more than {100 * time_tol:.0f}%")
+
+    # 4b. within-run: the DagEngine façade must not cost throughput vs the
+    # function path on the same shape (the unified-session acceptance bar)
+    for shape, by_method in sorted(sgt_shapes.items()):
+        if "engine" not in by_method or "auto" not in by_method:
+            continue
+        ops_a = ops_per_s(by_method["auto"])
+        ops_e = ops_per_s(by_method["engine"])
+        if ops_a and ops_e and ops_e < ops_a / (1 + ENGINE_TOLERANCE):
+            failures.append(
+                f"sgt_tick_{shape}: engine {ops_e:.0f} ops/s trails the "
+                f"function path (auto) {ops_a:.0f} ops/s by more than "
+                f"{100 * ENGINE_TOLERANCE:.0f}%")
 
     # 5. ratio drift vs baseline: algo2/algo1 wall-time ratio
     for n_cand in batches:

@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import DagEngine, FixedPolicy, OpBatch
 from repro.core import dag
 from repro.configs import paper_dag as PD
 
@@ -47,29 +48,33 @@ def _time(fn, *args, iters: int = 5) -> float:
     return (time.perf_counter() - t0) / iters
 
 
-def _prepopulate(capacity: int, key_space: int):
-    st = dag.new_state(capacity)
+def _prepopulate(capacity: int, key_space: int) -> DagEngine:
+    # closure pinned: the mixed-workload figures predate the dispatcher and
+    # their baseline rows were measured with the algorithm-1 check
+    eng = DagEngine.create(capacity, policy=FixedPolicy("closure"))
     keys = jnp.arange(0, key_space, 2, dtype=jnp.int32)
-    st, _ = dag.add_vertices(st, keys)
-    return st
+    eng, _ = eng.add_vertices(keys)
+    return eng
 
 
 def workload_rows(mix_name: str, mix: dict, acyclic: bool = False,
                   capacity: int = 512, key_space: int = 256,
                   batches=(64, 256, 1024)):
+    """Batched engine sessions (`DagEngine.apply` over typed `OpBatch`es)
+    vs the coarse-grained one-op-at-a-time baseline."""
     rows = []
     rng = np.random.default_rng(0)
     for n_ops in batches:
-        st0 = _prepopulate(capacity, key_space)
+        eng0 = _prepopulate(capacity, key_space)
         op, a, b = gen_workload(rng, n_ops, mix, key_space)
+        batch = OpBatch(op, a, b)
 
-        batched = jax.jit(lambda s, o, x, y: dag.apply_op_batch(
-            s, o, x, y, acyclic=acyclic))
+        batched = jax.jit(lambda e, ob: e.apply(ob, acyclic=acyclic))
         seq = jax.jit(lambda s, o, x, y: dag.apply_op_sequential(
             s, o, x, y, acyclic=acyclic))
 
-        t_b = _time(batched, st0, op, a, b)
-        t_s = _time(seq, st0, op, a, b, iters=2)
+        t_b = _time(batched, eng0, batch)
+        t_s = _time(seq, eng0.state, op, a, b, iters=2)
         speedup = t_s / t_b
         rows.append((f"{mix_name}_batched_n{n_ops}",
                      t_b * 1e6, f"ops_per_s={n_ops/t_b:.0f}"))
@@ -81,22 +86,26 @@ def workload_rows(mix_name: str, mix: dict, acyclic: bool = False,
 def false_abort_rows(capacity: int = 256, key_space: int = 96,
                      n_edges: int = 64):
     """Abort-rate vs sub-batch K on a contended acyclic insert workload."""
-    from repro.core import acyclic as AC
     rows = []
     rng = np.random.default_rng(1)
-    st0 = dag.new_state(capacity)
-    st0, _ = dag.add_vertices(st0, jnp.arange(key_space, dtype=jnp.int32))
+
+    def engine_for(k: int) -> DagEngine:
+        eng = DagEngine.create(capacity, policy=FixedPolicy("closure"),
+                               subbatches=k)
+        eng, _ = eng.add_vertices(jnp.arange(key_space, dtype=jnp.int32))
+        return eng
+
     us = jnp.asarray(rng.integers(0, key_space, n_edges), jnp.int32)
     vs = jnp.asarray(rng.integers(0, key_space, n_edges), jnp.int32)
     # sequential ground truth (zero false positives)
-    _, ok_seq = AC.acyclic_add_edges(st0, us, vs, subbatches=n_edges)
-    n_seq = int(jnp.sum(ok_seq))
+    _, r_seq = engine_for(n_edges).add_edges_acyclic(us, vs)
+    n_seq = int(jnp.sum(r_seq.ok))
     for k in (1, 2, 4, 16, n_edges):
-        fn = jax.jit(lambda s, u, v, k=k: AC.acyclic_add_edges(
-            s, u, v, subbatches=k))
-        t = _time(fn, st0, us, vs, iters=3)
-        _, ok = fn(st0, us, vs)
-        n_ok = int(jnp.sum(ok))
+        eng0 = engine_for(k)
+        fn = jax.jit(lambda e, u, v: e.add_edges_acyclic(u, v))
+        t = _time(fn, eng0, us, vs, iters=3)
+        _, r = fn(eng0, us, vs)
+        n_ok = int(jnp.sum(r.ok))
         false_aborts = n_seq - n_ok
         rows.append((f"acyclic_subbatch_K{k}", t * 1e6,
                      f"accepted={n_ok}/{n_seq}_false_aborts={false_aborts}"))
@@ -120,31 +129,36 @@ def algo_compare_rows(capacity: int = 512, n_vertices: int = 384,
                       n_edges: int = 600, batches=(8, 32, 128),
                       matmul_impl=None):
     """Paper algorithm 1 (full closure) vs algorithm 2 (partial snapshot) vs
-    the adaptive dispatch (`method="auto"`, core/dispatch.py): time per
-    AcyclicAddEdge batch plus the exact boolean-matmul work each cycle check
-    executed — n_products matmuls of rows_per_product rows; row_products is
-    their product, the comparable unit.  The algo_auto row also records
-    which algorithm the cost model chose (chose=...), so the
-    `benchmarks/compare.py` gate can hold "auto is never slower than the
-    worse fixed method" against a committed baseline.  ``matmul_impl``
-    (e.g. `repro.kernels.ops.bitmm_packed`) drives all paths on TPU.
+    the adaptive dispatch (`method="auto"`): one engine per method
+    (`FixedPolicy` pins the fixed ones), time per AcyclicAddEdge batch plus
+    the exact boolean-matmul work each cycle check executed — n_products
+    matmuls of rows_per_product rows; row_products is their product, the
+    comparable unit.  The algo_auto row also records which algorithm the
+    cost model chose (chose=...), so the `benchmarks/compare.py` gate can
+    hold "auto is never slower than the worse fixed method" against a
+    committed baseline.  Every timing call starts from the same fresh
+    engine (depth EMA unseeded), so the auto rows stay deterministic.
+    ``matmul_impl`` (e.g. `repro.kernels.ops.bitmm_packed`) drives all
+    paths on TPU.
     """
-    from repro.core import acyclic as AC
     rows = []
     for n_cand in batches:
         st0, rng = _sparse_dag_state(capacity, n_vertices, n_edges)
         us = jnp.asarray(rng.integers(0, n_vertices, n_cand), jnp.int32)
         vs = jnp.asarray(rng.integers(0, n_vertices, n_cand), jnp.int32)
         stats = {}
-        for method in AC.METHODS:  # ("closure", "partial", "auto")
-            fn = jax.jit(lambda s, u, v, m=method: AC.acyclic_add_edges(
-                s, u, v, method=m, matmul_impl=matmul_impl, with_stats=True))
-            t = _time(fn, st0, us, vs, iters=3)
-            _, ok, s = fn(st0, us, vs)
-            stats[method] = (t, int(s["n_products"]),
-                             int(s["rows_per_product"]),
-                             int(s["row_products"]), int(s["n_partial"]),
-                             np.asarray(ok))
+        for method in ("closure", "partial", "auto"):
+            eng0 = DagEngine.wrap(
+                st0, DagEngine.create(capacity, method=method,
+                                      matmul_impl=matmul_impl).config)
+            fn = jax.jit(lambda e, u, v: e.add_edges_acyclic(u, v))
+            t = _time(fn, eng0, us, vs, iters=3)
+            _, r = fn(eng0, us, vs)
+            rows_per = {"closure": capacity, "partial": n_cand,
+                        "auto": -1}[method]
+            stats[method] = (t, int(r.stats.n_products), rows_per,
+                             int(r.stats.row_products),
+                             int(r.stats.n_partial), np.asarray(r.ok))
         (t1, np1, rp1, rwp1, _, ok1) = stats["closure"]
         (t2, np2, rp2, rwp2, _, ok2) = stats["partial"]
         (ta, npa, _, rwpa, n_part, oka) = stats["auto"]

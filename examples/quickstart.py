@@ -1,47 +1,73 @@
 """Quickstart: the concurrent acyclic DAG in five minutes.
 
     PYTHONPATH=src python examples/quickstart.py
+
+One import (`repro.api`), one session object (`DagEngine`): configuration
+is captured once at `create`, every mutating call returns
+``(engine, OpResult)``, and the same script runs on the local or the
+sharded backend by changing a single argument.
 """
 import jax.numpy as jnp
 
-from repro.core import (acyclic_add_edges, add_vertices, contains_edges,
-                        is_acyclic, new_state, path_exists, remove_vertices)
+from repro.api import DagEngine, OpBatch
 
 
 def arr(xs):
     return jnp.asarray(xs, jnp.int32)
 
 
-def main():
-    # a 1024-slot concurrent DAG; one batch == one "tick" of concurrent ops
-    g = new_state(1024)
+def run_session(backend: str):
+    # a 1024-slot concurrent DAG; one batch == one "tick" of concurrent
+    # ops.  method defaults to "auto": the cost model picks the paper's
+    # algorithm 1 (full closure) or algorithm 2 (partial snapshot) per
+    # batch, seeded by measured deciding depths as the session ages.
+    eng = DagEngine.create(1024, backend=backend)
 
     # 8 "threads" add vertices concurrently
-    g, ok = add_vertices(g, arr([1, 2, 3, 4, 5, 6, 7, 8]))
-    print("add_vertices:", ok.tolist())
+    eng, r = eng.add_vertices(arr([1, 2, 3, 4, 5, 6, 7, 8]))
+    print("add_vertices:", r.ok.tolist(), "| overflow:", int(r.n_overflow))
 
     # acyclicity-preserving edge inserts: the batch {1->2, 2->3, 3->1}
     # closes a cycle; the relaxed spec rejects every edge on it
-    g, ok = acyclic_add_edges(g, arr([1, 2, 3]), arr([2, 3, 1]))
-    print("acyclic_add_edges {1->2,2->3,3->1}:", ok.tolist(),
-          "| graph acyclic:", bool(is_acyclic(g.adj)))
+    eng, r = eng.add_edges_acyclic(arr([1, 2, 3]), arr([2, 3, 1]))
+    print("add_edges_acyclic {1->2,2->3,3->1}:", r.ok.tolist(),
+          "| graph acyclic:", bool(eng.is_acyclic()),
+          "| cycle-check row-products:", int(r.stats.row_products))
 
-    # with priority sub-batches, earlier edges win (fewer false aborts)
-    g, ok = acyclic_add_edges(g, arr([1, 2, 3]), arr([2, 3, 1]),
-                              subbatches=3)
-    print("same batch, subbatches=3:", ok.tolist(),
-          "| acyclic:", bool(is_acyclic(g.adj)))
+    # with priority sub-batches, earlier edges win (fewer false aborts);
+    # sub-batching is session configuration, not a per-call knob
+    eng3 = DagEngine.create(1024, backend=backend, subbatches=3)
+    eng3, _ = eng3.add_vertices(arr([1, 2, 3]))
+    eng3, r = eng3.add_edges_acyclic(arr([1, 2, 3]), arr([2, 3, 1]))
+    print("same batch, subbatches=3:", r.ok.tolist(),
+          "| acyclic:", bool(eng3.is_acyclic()))
+    eng = eng3
 
-    # wait-free reads + reachability
-    print("contains 1->2, 3->1:",
-          contains_edges(g, arr([1, 3]), arr([2, 1])).tolist())
-    print("path 1~>3, 3~>1:",
-          path_exists(g, arr([1, 3]), arr([3, 1])).tolist())
+    # wait-free reads + reachability (the policy picks the scan here too)
+    print("contains_edges 1->2, 3->1:",
+          eng.contains_edges(arr([1, 3]), arr([2, 1])).tolist())
+    print("reachable 1~>3, 3~>1:",
+          eng.reachable(arr([1, 3]), arr([3, 1])).tolist())
 
-    # removing a vertex clears its incident edges in one step
-    g, _ = remove_vertices(g, arr([2]))
-    print("after remove(2), path 1~>3:",
-          path_exists(g, arr([1]), arr([3])).tolist())
+    # one typed mixed batch: removing vertex 2 clears its incident edges,
+    # all in the documented linearization order (batch size must divide
+    # into the session's sub-batches — 3 ops here)
+    batch = OpBatch.concat(OpBatch.remove_vertices(arr([2])),
+                           OpBatch.contains_vertices(arr([1, 3])))
+    eng, r = eng.apply(batch)
+    print("apply(remove 2, contains 1, contains 3):", r.ok.tolist(),
+          "| after remove(2), reachable 1~>3:",
+          eng.reachable(arr([1]), arr([3])).tolist())
+
+
+def main():
+    # the SAME session code serves both engines: "local" places the
+    # adjacency on one device, "sharded" row-shards it over every device
+    # (and routes partial scans through the explicit collective schedule
+    # the dispatch policy picks) — no other changes
+    for backend in ("local", "sharded"):
+        print(f"== backend={backend!r} ==")
+        run_session(backend)
 
 
 if __name__ == "__main__":

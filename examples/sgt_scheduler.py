@@ -1,6 +1,8 @@
 """End-to-end serving driver: a Serialization Graph Testing scheduler
 (the paper's motivating application) processing batched transaction
-requests on the concurrent acyclic DAG.
+requests on the concurrent acyclic DAG — now an engine-backed session
+(`repro.api.DagEngine`), so the dispatch policy's measured-depth EMA
+sharpens its cost estimates tick over tick.
 
     PYTHONPATH=src python examples/sgt_scheduler.py [--ticks 100]
 """
@@ -21,6 +23,9 @@ def main():
     print("== reduced false-abort mode (subbatches=4) ==")
     serve_sgt(capacity=args.capacity, batch=args.batch, ticks=args.ticks,
               subbatches=4)
+    print("== raw DagEngine session API (one jitted typed tick) ==")
+    serve_sgt(capacity=args.capacity, batch=args.batch, ticks=args.ticks,
+              subbatches=1, api="engine")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,35 @@
+"""`repro.api` — the one import for users of the concurrent DAG.
+
+    from repro.api import DagEngine, OpBatch
+
+    eng = DagEngine.create(1024)                  # or backend="sharded"
+    eng, r = eng.add_vertices(keys)
+    eng, r = eng.add_edges_acyclic(us, vs)        # cycle-checked, policy-
+    hit    = eng.reachable(from_keys, to_keys)    #   dispatched (auto)
+    eng, r = eng.apply(OpBatch.concat(
+        OpBatch.add_vertices(new_keys), OpBatch.add_edges(us2, vs2)))
+
+Everything is an immutable pytree: sessions jit, `lax.scan`, shard, and
+checkpoint end-to-end.  Switch ``backend="local"`` -> ``"sharded"`` with no
+other changes; dispatch between the paper's two reachability algorithms —
+and between the sharded partial-scan schedules — is a pluggable
+`DispatchPolicy` (`CostModelPolicy` by default, `FixedPolicy` to pin one).
+
+The SGT scheduler application (`SgtState` & friends) and the low-level
+`DagState` slab functions remain importable from `repro.core`.
+"""
+from repro.core.engine import (  # noqa: F401
+    BACKENDS, DagEngine, EngineConfig, OpBatch, OpResult, ReachStats,
+)
+from repro.core.dispatch import (  # noqa: F401
+    METHODS, DispatchPolicy, CostModelPolicy, FixedPolicy,
+    choose_method, choose_scan_sharding, prefer_partial,
+)
+from repro.core.dag import (  # noqa: F401
+    ADD_EDGE, ADD_VERTEX, CONTAINS_EDGE, CONTAINS_VERTEX, REMOVE_EDGE,
+    REMOVE_VERTEX, DagState,
+)
+from repro.core.reachability import MatmulImpl  # noqa: F401
+from repro.core.sgt import (  # noqa: F401
+    SgtState, begin, conflicts, finish, new_scheduler, schedule_tick,
+)

@@ -1,16 +1,22 @@
 """Core library: the paper's non-blocking concurrent DAG, TPU-native.
 
-Public API:
+Session API (preferred — see `core/engine.py` and `repro.api`):
+  DagEngine / EngineConfig / OpBatch / OpResult / ReachStats
+  DispatchPolicy / CostModelPolicy / FixedPolicy (pluggable dispatch)
+
+Building blocks and legacy surface:
   DagState / new_state / add_vertices / remove_vertices / add_edges /
-  remove_edges / contains_vertices / contains_edges / apply_op_batch
-  acyclic_add_edges (relaxed acyclic insert, the paper's AcyclicAddEdge;
+  remove_edges / contains_vertices / contains_edges
+  apply_op_batch (deprecated shim -> DagEngine.apply)
+  acyclic_add_edges (deprecated shim -> DagEngine.add_edges_acyclic;
                      method="closure"|"partial"|"auto" picks algorithm 1,
                      algorithm 2, or cost-model dispatch between them)
   choose_method / prefer_partial (the "auto" cost model, core/dispatch.py)
   path_exists / reach_sets / transitive_closure / is_acyclic (algorithm 1)
   reach_until_decided / partial_cycle_check / path_exists_partial
                      (algorithm 2: partial-snapshot scoped scans)
-  SgtState / new_scheduler / begin / conflicts / finish (SGT application)
+  SgtState / new_scheduler / begin / conflicts / finish (SGT application,
+                     engine-backed)
 """
 from repro.core.dag import (  # noqa: F401
     DagState, new_state, add_vertices, remove_vertices, add_edges,
@@ -22,6 +28,10 @@ from repro.core.dag import (  # noqa: F401
 from repro.core.acyclic import acyclic_add_edges, METHODS  # noqa: F401
 from repro.core.dispatch import (  # noqa: F401
     choose_method, choose_scan_sharding, prefer_partial,
+    DispatchPolicy, CostModelPolicy, FixedPolicy,
+)
+from repro.core.engine import (  # noqa: F401
+    DagEngine, EngineConfig, OpBatch, OpResult, ReachStats,
 )
 from repro.core.reachability import (  # noqa: F401
     path_exists, reach_sets, transitive_closure, is_acyclic,

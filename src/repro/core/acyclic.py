@@ -34,7 +34,8 @@ trade-off is benchmarked in `benchmarks/paper_workloads.py`.
 """
 from __future__ import annotations
 
-from typing import Optional
+import warnings
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -45,11 +46,36 @@ from repro.core.reachability import transitive_closure, MatmulImpl
 
 METHODS = dispatch.METHODS
 
+# prefer_partial_fn signature: (transit adjacency uint32[C, W], sub-batch
+# size) -> traced bool scalar.  `core/engine.py` closes a DispatchPolicy
+# (plus its measured-depth EMA) over this hook.
+PreferPartialFn = Callable[[jax.Array, int], jax.Array]
+
 
 def acyclic_add_edges(state: DagState, us: jax.Array, vs: jax.Array,
                       valid=None, subbatches: int = 1,
                       matmul_impl: Optional[MatmulImpl] = None,
                       method: str = "closure", with_stats: bool = False):
+    """Deprecated module-level shim — use `repro.core.engine.DagEngine`
+    (``DagEngine.create(capacity).add_edges_acyclic(us, vs)``), which
+    defaults to ``method="auto"`` and returns typed results.  Delegates
+    unchanged (identical results to the pre-engine function)."""
+    warnings.warn(
+        "acyclic.acyclic_add_edges is deprecated; use "
+        "repro.core.engine.DagEngine.add_edges_acyclic (method defaults to "
+        '"auto" there)', DeprecationWarning, stacklevel=2)
+    return acyclic_add_edges_impl(
+        state, us, vs, valid=valid, subbatches=subbatches,
+        matmul_impl=matmul_impl, method=method, with_stats=with_stats)
+
+
+def acyclic_add_edges_impl(
+        state: DagState, us: jax.Array, vs: jax.Array,
+        valid=None, subbatches: int = 1,
+        matmul_impl: Optional[MatmulImpl] = None,
+        method: str = "closure", with_stats: bool = False,
+        prefer_partial_fn: Optional[PreferPartialFn] = None,
+        partial_matmul_impl: Optional[MatmulImpl] = None):
     """Returns (state, ok[B]) — or (state, ok[B], stats) with ``with_stats``.
 
     ok semantics (sequential spec, Table 2 + acyclic relaxation):
@@ -59,14 +85,21 @@ def acyclic_add_edges(state: DagState, us: jax.Array, vs: jax.Array,
       - False if the insert lies on a cycle of ``G ∪ transit`` (the edge is
         backed out; false positives under concurrency are allowed).
 
-    stats = {"n_products", "rows_per_product", "row_products", "n_partial"}
-    counts the boolean matmuls the cycle checks executed (summed over
-    sub-batches); row_products is the total number of rows fed through the
-    matmul — the comparable work unit between the two methods
+    stats = {"n_products", "rows_per_product", "row_products", "n_partial",
+    "deciding_depth"} counts the boolean matmuls the cycle checks executed
+    (summed over sub-batches); row_products is the total number of rows fed
+    through the matmul — the comparable work unit between the two methods
     (rows_per_product is -1 under ``method="auto"``, where sub-batches may
     mix row widths; row_products stays exact).  n_partial is the number of
     sub-batch checks decided by algorithm 2 — under "auto" it exposes what
-    the dispatcher chose.
+    the dispatcher chose.  deciding_depth is the hop count of the *last*
+    algorithm-2 check (0 if none ran) — the measurement the engine feeds
+    back into `CostModelPolicy` as its depth-estimate EMA.
+
+    ``prefer_partial_fn`` overrides the ``method="auto"`` choice (default:
+    `dispatch.prefer_partial_from_adj`); ``partial_matmul_impl`` lets the
+    partial branch run a different matmul schedule than the closure branch
+    (the sharded engine's B-sharded vs frontier-sharded scans).
     """
     if method not in METHODS:
         raise ValueError(f"method must be one of {METHODS}, got {method!r}")
@@ -78,6 +111,10 @@ def acyclic_add_edges(state: DagState, us: jax.Array, vs: jax.Array,
     rows_per_product = {"closure": state.capacity, "partial": b_sub,
                         "auto": -1}[method]
     capacity = state.capacity
+    p_impl = partial_matmul_impl if partial_matmul_impl is not None \
+        else matmul_impl
+    prefer = prefer_partial_fn if prefer_partial_fn is not None \
+        else dispatch.prefer_partial_from_adj
 
     us_r = us.reshape(subbatches, -1)
     vs_r = vs.reshape(subbatches, -1)
@@ -101,7 +138,7 @@ def acyclic_add_edges(state: DagState, us: jax.Array, vs: jax.Array,
 
         def partial_check(adj_t):
             cyc, n = snapshot.partial_cycle_check(
-                adj_t, u_slot, v_slot, cand, matmul_impl, with_stats=True)
+                adj_t, u_slot, v_slot, cand, p_impl, with_stats=True)
             return cyc, n, n * jnp.int32(b_sub), jnp.int32(1)
 
         if method == "closure":
@@ -109,7 +146,7 @@ def acyclic_add_edges(state: DagState, us: jax.Array, vs: jax.Array,
         elif method == "partial":
             checked = partial_check(adj_t)
         else:  # auto: cost-model dispatch on the transit graph's density
-            use_partial = dispatch.prefer_partial_from_adj(adj_t, b_sub)
+            use_partial = prefer(adj_t, b_sub)
             checked = jax.lax.cond(use_partial, partial_check, closure_check,
                                    adj_t)
         cyc, n_products, row_products, chose_partial = checked
@@ -124,8 +161,15 @@ def acyclic_add_edges(state: DagState, us: jax.Array, vs: jax.Array,
     oks = oks.reshape(b)
     if not with_stats:
         return state, oks
+    # deciding depth of the LAST sub-batch check algorithm 2 decided: the
+    # freshest measurement for the engine's depth-EMA feedback loop
+    k_idx = jnp.arange(subbatches, dtype=jnp.int32)
+    last = jnp.max(jnp.where(chose_partial == 1, k_idx, -1))
+    deciding_depth = jnp.where(
+        last >= 0, n_products[jnp.maximum(last, 0)], 0).astype(jnp.int32)
     stats = {"n_products": jnp.sum(n_products, dtype=jnp.int32),
              "rows_per_product": rows_per_product,
              "row_products": jnp.sum(row_products, dtype=jnp.int32),
-             "n_partial": jnp.sum(chose_partial, dtype=jnp.int32)}
+             "n_partial": jnp.sum(chose_partial, dtype=jnp.int32),
+             "deciding_depth": deciding_depth}
     return state, oks, stats

@@ -161,14 +161,42 @@ def contains_edges(state: DagState, us: jax.Array, vs: jax.Array) -> jax.Array:
 
 def apply_op_batch(state: DagState, op: jax.Array, a: jax.Array, b: jax.Array,
                    acyclic: bool = False, subbatches: int = 1,
-                   method: str = "closure"):
+                   method: str = "closure", matmul_impl=None,
+                   with_stats: bool = False):
+    """Deprecated module-level shim — use `repro.core.engine.DagEngine`
+    (``DagEngine.create(capacity).apply(OpBatch(op, a, b))``), which defaults
+    to ``method="auto"`` and returns a typed `OpResult` (ok bits, overflow
+    count, cycle-check stats).  Delegates unchanged."""
+    import warnings
+
+    warnings.warn(
+        "dag.apply_op_batch is deprecated; use "
+        "repro.core.engine.DagEngine.apply (method defaults to "
+        '"auto" there)', DeprecationWarning, stacklevel=2)
+    return apply_op_batch_impl(
+        state, op, a, b, acyclic=acyclic, subbatches=subbatches,
+        method=method, matmul_impl=matmul_impl, with_stats=with_stats)
+
+
+def apply_op_batch_impl(state: DagState, op: jax.Array, a: jax.Array,
+                        b: jax.Array, acyclic: bool = False,
+                        subbatches: int = 1, method: str = "closure",
+                        matmul_impl=None, with_stats: bool = False,
+                        prefer_partial_fn=None, partial_matmul_impl=None):
     """Apply a mixed batch with the documented linearization:
     RemoveVertex -> AddVertex -> RemoveEdge -> AddEdge -> reads.
 
     ``method`` picks the acyclic cycle-check algorithm ("closure" = paper
     algorithm 1 full closure, "partial" = algorithm 2 partial snapshot,
     "auto" = per-batch cost-model dispatch between the two; see
-    `core/acyclic.py` and `core/dispatch.py`).  Returns (state, ok[B]).
+    `core/acyclic.py` and `core/dispatch.py`).  ``matmul_impl`` drives every
+    cycle-check matmul (e.g. the fused Pallas kernel on TPU);
+    ``prefer_partial_fn`` / ``partial_matmul_impl`` are the engine's policy
+    hooks (see `acyclic.acyclic_add_edges_impl`).
+
+    Returns (state, ok[B]) — or (state, ok[B], stats) with ``with_stats``,
+    where stats is the acyclic cycle-check accounting (all-zero when
+    ``acyclic=False``: no cycle check ran).
     """
     from repro.core import acyclic as acyclic_mod
 
@@ -179,10 +207,19 @@ def apply_op_batch(state: DagState, op: jax.Array, a: jax.Array, b: jax.Array,
     res = jnp.where(op == ADD_VERTEX, r, res)
     state, r = remove_edges(state, a, b, valid=op == REMOVE_EDGE)
     res = jnp.where(op == REMOVE_EDGE, r, res)
+    z = jnp.int32(0)
+    stats = {"n_products": z, "rows_per_product": 0, "row_products": z,
+             "n_partial": z, "deciding_depth": z}
     if acyclic:
-        state, r = acyclic_mod.acyclic_add_edges(
+        out = acyclic_mod.acyclic_add_edges_impl(
             state, a, b, valid=op == ADD_EDGE, subbatches=subbatches,
-            method=method)
+            method=method, matmul_impl=matmul_impl, with_stats=with_stats,
+            prefer_partial_fn=prefer_partial_fn,
+            partial_matmul_impl=partial_matmul_impl)
+        if with_stats:
+            state, r, stats = out
+        else:
+            state, r = out
     else:
         state, r = add_edges(state, a, b, valid=op == ADD_EDGE)
     res = jnp.where(op == ADD_EDGE, r, res)
@@ -190,6 +227,8 @@ def apply_op_batch(state: DagState, op: jax.Array, a: jax.Array, b: jax.Array,
     res = jnp.where(op == CONTAINS_VERTEX, r, res)
     r = contains_edges(state, a, b)
     res = jnp.where(op == CONTAINS_EDGE, r, res)
+    if with_stats:
+        return state, res, stats
     return state, res
 
 
@@ -201,8 +240,9 @@ def apply_op_sequential(state: DagState, op: jax.Array, a: jax.Array,
     """
     def body(st, xs):
         o, aa, bb = xs
-        st, r = apply_op_batch(st, o[None], aa[None], bb[None],
-                               acyclic=acyclic, subbatches=1, method=method)
+        st, r = apply_op_batch_impl(st, o[None], aa[None], bb[None],
+                                    acyclic=acyclic, subbatches=1,
+                                    method=method)
         return st, r[0]
 
     return jax.lax.scan(body, state, (op, a, b))

@@ -55,8 +55,29 @@ Everything here is shape-arithmetic plus one popcount; ``prefer_partial``
 is jit-traceable (the choice becomes a ``lax.cond`` in `core/acyclic.py`)
 and `choose_method` is its concrete host-side twin for tests, logging, and
 offline tuning.
+
+Pluggable policies
+------------------
+`core/engine.py` consumes the cost model through the ``DispatchPolicy``
+protocol rather than calling the module functions directly:
+
+  CostModelPolicy(safety_factor=..., ema_alpha=...)
+      wraps the formulas above, and — when the engine hands it a *measured*
+      deciding-depth EMA (`DagEngine.depth_ema`, fed back from every partial
+      check's hop count) — uses that measurement as the depth estimate
+      instead of the static popcount-density guess.
+  FixedPolicy("closure" | "partial")
+      pins one algorithm; the engine then skips the ``lax.cond`` entirely
+      (``fixed_method`` short-circuits the traced dispatch).
+
+Both also answer ``scan_sharding`` (the B-sharded vs frontier-sharded
+partial-scan schedule choice) so the sharded engine's acyclic inserts route
+through the same policy object.
 """
 from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Protocol, runtime_checkable
 
 import jax
 import jax.numpy as jnp
@@ -136,6 +157,20 @@ def choose_method(batch: int, capacity: int, out_degree: float) -> str:
         else "closure"
 
 
+def prefer_partial_with_depth(batch: int, capacity: int, depth_est,
+                              safety_factor: float = SAFETY_FACTOR):
+    """`prefer_partial` with an explicit deciding-depth estimate.
+
+    ``depth_est`` may be a concrete float or a traced scalar (e.g. the
+    engine's measured-depth EMA); it is clipped to the closure's
+    ``ceil(log2 C)`` bound exactly like the density-derived estimate.
+    """
+    log2c = ceil_log2(capacity)
+    depth = jnp.clip(jnp.asarray(depth_est, jnp.float32), 1.0, float(log2c))
+    est = safety_factor * batch * depth
+    return est <= closure_row_products(capacity)
+
+
 def choose_scan_sharding(batch: int, capacity: int, n_devices: int) -> str:
     """Pick the sharded partial-scan schedule: "batch" or "frontier".
 
@@ -150,3 +185,117 @@ def choose_scan_sharding(batch: int, capacity: int, n_devices: int) -> str:
             and batch // n_devices >= MIN_ROWS_PER_SHARD):
         return "batch"
     return "frontier"
+
+
+# --------------------------------------------------------------- policies
+
+@runtime_checkable
+class DispatchPolicy(Protocol):
+    """What `core/engine.py` needs from a dispatch policy.
+
+    ``fixed_method`` is ``None`` for adaptive policies (the engine then
+    traces ``prefer_partial`` into a ``lax.cond``) or a method name that
+    pins the algorithm statically — no traced dispatch at all.
+    """
+
+    fixed_method: Optional[str]
+
+    def prefer_partial(self, adj_packed: jax.Array, batch: int,
+                       depth_hint=None) -> jax.Array:
+        """True iff algorithm 2 should decide this batch.  jit-traceable;
+        ``depth_hint`` is an optional traced scalar of measured deciding
+        depth (<= 0 means "no measurement yet")."""
+        ...
+
+    def scan_sharding(self, batch: int, capacity: int,
+                      n_devices: int) -> str:
+        """"batch" or "frontier": the sharded partial-scan schedule."""
+        ...
+
+
+@dataclasses.dataclass(frozen=True)
+class CostModelPolicy:
+    """The module's cost model as a policy object (the ``method="auto"``
+    default).  When the engine supplies a measured deciding-depth EMA it
+    replaces the static popcount-density depth guess; ``ema_alpha`` is the
+    smoothing weight the engine applies to each new measurement.
+    """
+
+    safety_factor: float = SAFETY_FACTOR
+    ema_alpha: float = 0.25
+    fixed_method: Optional[str] = dataclasses.field(default=None, init=False)
+
+    def prefer_partial(self, adj_packed: jax.Array, batch: int,
+                       depth_hint=None) -> jax.Array:
+        capacity = adj_packed.shape[0]
+        est = estimate_deciding_depth(capacity, mean_out_degree(adj_packed))
+        if depth_hint is not None:
+            measured = jnp.asarray(depth_hint, jnp.float32)
+            est = jnp.where(measured > 0, measured, est)
+        return prefer_partial_with_depth(batch, capacity, est,
+                                         self.safety_factor)
+
+    def scan_sharding(self, batch: int, capacity: int,
+                      n_devices: int) -> str:
+        return choose_scan_sharding(batch, capacity, n_devices)
+
+    def update_depth_ema(self, ema: jax.Array,
+                         measured_depth: jax.Array) -> jax.Array:
+        """Fold one measured deciding depth (int32; 0 == no partial check
+        ran) into the engine's EMA (float32; 0 == unseeded)."""
+        d = measured_depth.astype(jnp.float32)
+        blended = jnp.where(ema > 0,
+                            (1.0 - self.ema_alpha) * ema + self.ema_alpha * d,
+                            d)
+        return jnp.where(d > 0, blended, ema)
+
+
+@dataclasses.dataclass(frozen=True)
+class FixedPolicy:
+    """Pin one of the paper's algorithms ("closure" or "partial")."""
+
+    method: str
+
+    def __post_init__(self):
+        if self.method not in ("closure", "partial"):
+            raise ValueError(
+                f'FixedPolicy method must be "closure" or "partial", '
+                f"got {self.method!r}")
+
+    @property
+    def fixed_method(self) -> str:
+        return self.method
+
+    def prefer_partial(self, adj_packed: jax.Array, batch: int,
+                       depth_hint=None) -> jax.Array:
+        del adj_packed, batch, depth_hint
+        return jnp.asarray(self.method == "partial")
+
+    def scan_sharding(self, batch: int, capacity: int,
+                      n_devices: int) -> str:
+        return choose_scan_sharding(batch, capacity, n_devices)
+
+    def update_depth_ema(self, ema: jax.Array,
+                         measured_depth: jax.Array) -> jax.Array:
+        d = measured_depth.astype(jnp.float32)
+        return jnp.where(d > 0, d, ema)
+
+
+def method_name(policy: DispatchPolicy) -> str:
+    """The method string a policy realizes (its pinned algorithm, or
+    "auto") — the single source for `EngineConfig.method`."""
+    return getattr(policy, "fixed_method", None) or "auto"
+
+
+def policy_for_method(method: str,
+                      policy: Optional[DispatchPolicy] = None):
+    """Resolve the (method, policy) pair of `DagEngine.create`: an explicit
+    policy wins; otherwise "auto" gets the cost model and a fixed method
+    gets pinned."""
+    if policy is not None:
+        return policy
+    if method not in METHODS:
+        raise ValueError(f"method must be one of {METHODS}, got {method!r}")
+    if method == "auto":
+        return CostModelPolicy()
+    return FixedPolicy(method)

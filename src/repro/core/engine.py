@@ -1,0 +1,431 @@
+"""Unified `DagEngine` session API — one façade over the local and sharded
+engines.
+
+The paper's object is a single concurrent DAG with a small linearizable
+operation set; this module exposes exactly that as an immutable,
+pytree-registered session object:
+
+    eng = DagEngine.create(1024)                    # local, method="auto"
+    eng, r = eng.add_vertices(keys)                 # r: OpResult
+    eng, r = eng.add_edges_acyclic(us, vs)          # cycle-checked inserts
+    hit    = eng.reachable(from_keys, to_keys)      # wait-free read
+    eng, r = eng.apply(OpBatch(op, a, b))           # mixed typed batch
+
+Design points:
+
+* **Configuration is captured once** in an `EngineConfig` (static pytree
+  aux data): capacity, backend ("local" | "sharded"), dispatch policy,
+  sub-batch count, and the boolean-matmul implementation.  No per-call
+  ``method=``/``subbatches=``/``matmul_impl=`` threading.
+* **Every mutating call returns ``(engine, OpResult)``** — the engine is a
+  registered pytree whose dynamic leaves are the `DagState` slab plus a
+  measured deciding-depth EMA, so whole sessions ``jit``, ``lax.scan``, and
+  checkpoint like any other jax state.
+* **Dispatch is a pluggable policy** (`core/dispatch.DispatchPolicy`):
+  `CostModelPolicy` (the ``method="auto"`` default) prices algorithm 1
+  vs algorithm 2 per batch — seeding its depth estimate from the engine's
+  *measured* deciding-depth EMA once one exists — while
+  `FixedPolicy("closure" | "partial")` pins one algorithm statically.
+* **The sharded backend routes through the same policy**: acyclic inserts
+  dispatch closure-vs-partial exactly like the local backend, and the
+  partial scan's schedule (B-sharded vs frontier-sharded,
+  `core/sharded.py`) is chosen by ``policy.scan_sharding`` — closing the
+  gap where the sharded engine bypassed the auto dispatcher.
+
+Typed batches replace the positional ``(op, a, b)`` arrays: `OpBatch` has
+constructors per operation plus ``concat``, `OpResult` carries the ok bits,
+the capacity-overflow count of the call, and `ReachStats` (the cycle-check
+work accounting, including the last deciding hop depth fed back into the
+cost model).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitset, dispatch, reachability, snapshot
+from repro.core import acyclic as acyclic_mod
+from repro.core import dag as dag_mod
+from repro.core.dag import (
+    ADD_EDGE, ADD_VERTEX, CONTAINS_EDGE, CONTAINS_VERTEX, DagState,
+    REMOVE_EDGE, REMOVE_VERTEX,
+)
+from repro.core.reachability import MatmulImpl
+
+BACKENDS = ("local", "sharded")
+
+
+# ------------------------------------------------------------ typed batches
+
+class OpBatch(NamedTuple):
+    """A typed batch of operation requests (one row per logical "thread").
+
+    ``op`` holds the `core/dag.py` op codes; ``a``/``b`` are the operands
+    (``b`` is ignored by vertex ops).  Linearization inside one batch is
+    the documented phase order: RemoveVertex -> AddVertex -> RemoveEdge ->
+    AddEdge -> reads, then batch-index order within a phase.
+    """
+
+    op: jax.Array  # int32[B] op codes
+    a: jax.Array   # int32[B] first key operand
+    b: jax.Array   # int32[B] second key operand (edge target)
+
+    @staticmethod
+    def _of(code: int, a, b=None) -> "OpBatch":
+        a = jnp.asarray(a, jnp.int32)
+        b = jnp.zeros_like(a) if b is None else jnp.asarray(b, jnp.int32)
+        return OpBatch(jnp.full(a.shape, code, jnp.int32), a, b)
+
+    @classmethod
+    def add_vertices(cls, keys) -> "OpBatch":
+        return cls._of(ADD_VERTEX, keys)
+
+    @classmethod
+    def remove_vertices(cls, keys) -> "OpBatch":
+        return cls._of(REMOVE_VERTEX, keys)
+
+    @classmethod
+    def add_edges(cls, us, vs) -> "OpBatch":
+        """AcyclicAddEdge requests (the engine's ADD_EDGE is cycle-checked
+        under ``apply(..., acyclic=True)``, the default)."""
+        return cls._of(ADD_EDGE, us, vs)
+
+    @classmethod
+    def remove_edges(cls, us, vs) -> "OpBatch":
+        return cls._of(REMOVE_EDGE, us, vs)
+
+    @classmethod
+    def contains_vertices(cls, keys) -> "OpBatch":
+        return cls._of(CONTAINS_VERTEX, keys)
+
+    @classmethod
+    def contains_edges(cls, us, vs) -> "OpBatch":
+        return cls._of(CONTAINS_EDGE, us, vs)
+
+    @classmethod
+    def concat(cls, *batches: "OpBatch") -> "OpBatch":
+        return cls(jnp.concatenate([x.op for x in batches]),
+                   jnp.concatenate([x.a for x in batches]),
+                   jnp.concatenate([x.b for x in batches]))
+
+    @property
+    def size(self) -> int:
+        return self.op.shape[0]
+
+
+class ReachStats(NamedTuple):
+    """Cycle-check work accounting (replaces the ad-hoc stats dicts).
+
+    ``deciding_depth`` is the hop count of the last algorithm-2 check of
+    the call (0 if none ran) — the measurement `CostModelPolicy` folds into
+    the engine's depth EMA.
+    """
+
+    n_products: jax.Array      # int32: boolean matmuls executed
+    row_products: jax.Array    # int32: total rows fed through the matmul
+    n_partial: jax.Array       # int32: sub-batch checks algorithm 2 decided
+    deciding_depth: jax.Array  # int32: last partial check's hop count
+
+    @classmethod
+    def zeros(cls) -> "ReachStats":
+        z = jnp.int32(0)
+        return cls(z, z, z, z)
+
+    @classmethod
+    def from_raw(cls, stats: dict) -> "ReachStats":
+        return cls(stats["n_products"], stats["row_products"],
+                   stats["n_partial"], stats["deciding_depth"])
+
+
+class OpResult(NamedTuple):
+    """Result of one engine call: per-row ok bits, the number of vertex
+    adds this call dropped for capacity (serving backpressure signal), and
+    the cycle-check stats (zeros when no reachability check ran)."""
+
+    ok: jax.Array          # bool[B]
+    n_overflow: jax.Array  # int32: adds dropped for capacity, this call
+    stats: ReachStats
+
+
+# ----------------------------------------------------------- configuration
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Static session configuration (pytree aux data — hashable, compared
+    by value so jit caches and scans treat equal configs as one trace)."""
+
+    capacity: int
+    backend: str = "local"
+    method: str = "auto"
+    subbatches: int = 1
+    matmul_impl: Optional[MatmulImpl] = None
+    policy: Optional[dispatch.DispatchPolicy] = None
+    mesh: Optional[object] = None  # jax.sharding.Mesh for backend="sharded"
+
+    @property
+    def n_devices(self) -> int:
+        return int(self.mesh.devices.size) if self.mesh is not None else 1
+
+
+@jax.tree_util.register_pytree_node_class
+class DagEngine:
+    """The unified concurrent-DAG session object.  Immutable: every
+    mutating call returns a new engine sharing the static config."""
+
+    __slots__ = ("state", "depth_ema", "config")
+
+    def __init__(self, state: DagState, depth_ema: jax.Array,
+                 config: EngineConfig):
+        self.state = state
+        self.depth_ema = depth_ema
+        self.config = config
+
+    # ------------------------------------------------------- construction
+
+    @classmethod
+    def create(cls, capacity: int, *, backend: str = "local",
+               method: str = "auto", subbatches: int = 1,
+               matmul_impl: Optional[MatmulImpl] = None,
+               policy: Optional[dispatch.DispatchPolicy] = None,
+               mesh=None) -> "DagEngine":
+        """Create an empty engine.  ``policy`` overrides ``method``; with
+        ``policy=None`` the method string resolves to `CostModelPolicy`
+        ("auto", the default everywhere) or `FixedPolicy`.
+
+        ``backend="sharded"`` places the adjacency row-sharded over
+        ``mesh`` (default: all devices, `core/sharded.make_dag_mesh`) and
+        routes partial scans through the explicit collective schedules.
+        """
+        if backend not in BACKENDS:
+            raise ValueError(
+                f"backend must be one of {BACKENDS}, got {backend!r}")
+        if subbatches < 1:
+            raise ValueError(f"subbatches must be >= 1, got {subbatches}")
+        policy = dispatch.policy_for_method(method, policy)
+        method = dispatch.method_name(policy)
+        state = dag_mod.new_state(capacity)
+        if backend == "sharded":
+            from repro.core import sharded as sharded_mod
+            mesh = mesh if mesh is not None else sharded_mod.make_dag_mesh()
+            n_dev = int(mesh.devices.size)
+            if capacity % (bitset.WORD * n_dev) != 0:
+                raise ValueError(
+                    f"sharded capacity must be a multiple of "
+                    f"{bitset.WORD * n_dev} (32 bits x {n_dev} devices), "
+                    f"got {capacity}")
+            state = sharded_mod.shard_state(state, mesh)
+        else:
+            mesh = None
+        config = EngineConfig(capacity=capacity, backend=backend,
+                              method=method, subbatches=subbatches,
+                              matmul_impl=matmul_impl, policy=policy,
+                              mesh=mesh)
+        return cls(state, jnp.float32(0.0), config)
+
+    @classmethod
+    def wrap(cls, state: DagState, config: EngineConfig,
+             depth_ema=None) -> "DagEngine":
+        """Wrap an existing `DagState` slab (e.g. a legacy session) in an
+        engine without copying."""
+        ema = jnp.float32(0.0) if depth_ema is None else depth_ema
+        return cls(state, ema, config)
+
+    def with_options(self, *, method: Optional[str] = None,
+                     subbatches: Optional[int] = None,
+                     matmul_impl=dataclasses.MISSING) -> "DagEngine":
+        """A view of the same session state under overridden static
+        options (legacy per-call knobs).  ``method`` re-resolves the
+        policy; unspecified options are inherited."""
+        cfg = self.config
+        policy = cfg.policy if method is None \
+            else dispatch.policy_for_method(method)
+        new = dataclasses.replace(
+            cfg,
+            method=dispatch.method_name(policy),
+            subbatches=cfg.subbatches if subbatches is None else subbatches,
+            matmul_impl=cfg.matmul_impl
+            if matmul_impl is dataclasses.MISSING else matmul_impl,
+            policy=policy)
+        return DagEngine(self.state, self.depth_ema, new)
+
+    # ------------------------------------------------------------- pytree
+
+    def tree_flatten(self):
+        return (self.state, self.depth_ema), self.config
+
+    @classmethod
+    def tree_unflatten(cls, config, children):
+        state, depth_ema = children
+        return cls(state, depth_ema, config)
+
+    def __repr__(self):
+        c = self.config
+        return (f"DagEngine(capacity={c.capacity}, backend={c.backend!r}, "
+                f"method={c.method!r}, subbatches={c.subbatches})")
+
+    # ---------------------------------------------------------- internals
+
+    @property
+    def capacity(self) -> int:
+        return self.config.capacity
+
+    def _with_state(self, state: DagState,
+                    stats: Optional[dict] = None) -> "DagEngine":
+        ema = self.depth_ema
+        if stats is not None:
+            update = getattr(self.config.policy, "update_depth_ema", None)
+            if update is not None:
+                ema = update(ema, stats["deciding_depth"])
+        return DagEngine(state, ema, self.config)
+
+    def _overflow_delta(self, state: DagState) -> jax.Array:
+        return state.n_overflow - self.state.n_overflow
+
+    def _dispatch_hooks(self, batch: int):
+        """(method, prefer_partial_fn, partial_matmul_impl) for one
+        cycle-checked call of ``batch`` candidate rows."""
+        cfg = self.config
+        policy = cfg.policy
+        fixed = getattr(policy, "fixed_method", None)
+        if fixed is not None:
+            method, prefer = fixed, None
+        else:
+            ema = self.depth_ema
+
+            def prefer(adj_t, b_sub):
+                return policy.prefer_partial(adj_t, b_sub, depth_hint=ema)
+
+            method = "auto"
+        partial_impl = cfg.matmul_impl
+        if cfg.backend == "sharded":
+            from repro.core import sharded as sharded_mod
+            b_sub = max(1, batch // cfg.subbatches)
+            plan = policy.scan_sharding(b_sub, cfg.capacity, cfg.n_devices)
+            partial_impl = sharded_mod.partial_scan_matmul_impl(
+                cfg.mesh, plan)
+        return method, prefer, partial_impl
+
+    # ------------------------------------------------------ vertex ops
+
+    def add_vertices(self, keys, valid=None):
+        """AddVertex batch -> (engine, OpResult); overflowed adds report
+        ok=False and count into ``result.n_overflow``."""
+        state, ok = dag_mod.add_vertices(self.state, keys, valid=valid)
+        res = OpResult(ok, self._overflow_delta(state), ReachStats.zeros())
+        return self._with_state(state), res
+
+    def remove_vertices(self, keys, valid=None):
+        """RemoveVertex batch (logical+physical removal, incident edges
+        cleared in-step) -> (engine, OpResult)."""
+        state, ok = dag_mod.remove_vertices(self.state, keys, valid=valid)
+        res = OpResult(ok, self._overflow_delta(state), ReachStats.zeros())
+        return self._with_state(state), res
+
+    # -------------------------------------------------------- edge ops
+
+    def add_edges_acyclic(self, us, vs, valid=None):
+        """AcyclicAddEdge batch -> (engine, OpResult).  The cycle check is
+        dispatched by the configured policy (the measured deciding depth
+        feeds the next dispatch decision via the engine's EMA); the
+        paper's relaxed joint-abort semantics apply within a sub-batch."""
+        cfg = self.config
+        method, prefer, partial_impl = self._dispatch_hooks(us.shape[0])
+        state, ok, stats = acyclic_mod.acyclic_add_edges_impl(
+            self.state, us, vs, valid=valid, subbatches=cfg.subbatches,
+            matmul_impl=cfg.matmul_impl, method=method, with_stats=True,
+            prefer_partial_fn=prefer, partial_matmul_impl=partial_impl)
+        res = OpResult(ok, self._overflow_delta(state),
+                       ReachStats.from_raw(stats))
+        return self._with_state(state, stats), res
+
+    def remove_edges(self, us, vs, valid=None):
+        state, ok = dag_mod.remove_edges(self.state, us, vs, valid=valid)
+        res = OpResult(ok, self._overflow_delta(state), ReachStats.zeros())
+        return self._with_state(state), res
+
+    # ------------------------------------------------- wait-free reads
+
+    def contains(self, keys) -> jax.Array:
+        """ContainsVertex batch -> bool[B]."""
+        return dag_mod.contains_vertices(self.state, keys)
+
+    def contains_edges(self, us, vs) -> jax.Array:
+        return dag_mod.contains_edges(self.state, us, vs)
+
+    def reachable(self, from_keys, to_keys) -> jax.Array:
+        """Batch PathExists(from, to): True iff a path of >= 1 edge exists.
+
+        Local backend: the policy picks the full reach-set scan or the
+        early-exit partial scan (a ``lax.cond`` under "auto").  Sharded
+        backend: the explicit collective schedule picked by
+        ``policy.scan_sharding`` (B-sharded when the batch divides the
+        mesh with enough rows per device, frontier-sharded otherwise).
+        """
+        cfg = self.config
+        b = from_keys.shape[0]
+        fixed = getattr(cfg.policy, "fixed_method", None)
+        if cfg.backend == "sharded":
+            if fixed == "closure":
+                # honor the pinned algorithm-1 scan; GSPMD partitions the
+                # full reach-set products over the row-sharded adjacency
+                return reachability.path_exists(self.state, from_keys,
+                                                to_keys, cfg.matmul_impl)
+            from repro.core import sharded as sharded_mod
+            src, t_slot, endpoints_ok = reachability.seed_path_queries(
+                self.state, from_keys, to_keys)
+            plan = cfg.policy.scan_sharding(b, cfg.capacity, cfg.n_devices)
+            if plan == "batch":
+                hit = sharded_mod.reach_until_decided_batch_sharded(
+                    cfg.mesh, self.state.adj, src, t_slot)
+            else:
+                hit = sharded_mod.reach_until_decided_sharded(
+                    cfg.mesh, self.state.adj, src, t_slot)
+            return endpoints_ok & hit
+        if fixed == "closure":
+            return reachability.path_exists(self.state, from_keys, to_keys,
+                                            cfg.matmul_impl)
+        if fixed == "partial":
+            return snapshot.path_exists_partial(self.state, from_keys,
+                                                to_keys, cfg.matmul_impl)
+        use_partial = cfg.policy.prefer_partial(self.state.adj, b,
+                                                depth_hint=self.depth_ema)
+        return jax.lax.cond(
+            use_partial,
+            lambda st: snapshot.path_exists_partial(st, from_keys, to_keys,
+                                                    cfg.matmul_impl),
+            lambda st: reachability.path_exists(st, from_keys, to_keys,
+                                               cfg.matmul_impl),
+            self.state)
+
+    def is_acyclic(self) -> jax.Array:
+        return reachability.is_acyclic(self.state.adj,
+                                       self.config.matmul_impl)
+
+    def live_vertex_count(self) -> jax.Array:
+        return dag_mod.live_vertex_count(self.state)
+
+    def edge_count(self) -> jax.Array:
+        return dag_mod.edge_count(self.state)
+
+    # ------------------------------------------------- mixed-op batches
+
+    def apply(self, batch: OpBatch, acyclic: bool = True):
+        """Apply a typed mixed batch -> (engine, OpResult), with the
+        documented linearization (RemoveVertex -> AddVertex -> RemoveEdge
+        -> AddEdge -> reads).  ``acyclic=True`` (default — the engine is a
+        DAG) cycle-checks the ADD_EDGE rows through the dispatch policy;
+        ``acyclic=False`` degrades them to plain directed-graph inserts
+        (the paper's unconstrained-graph baseline)."""
+        cfg = self.config
+        method, prefer, partial_impl = self._dispatch_hooks(batch.size)
+        state, ok, stats = dag_mod.apply_op_batch_impl(
+            self.state, batch.op, batch.a, batch.b, acyclic=acyclic,
+            subbatches=cfg.subbatches, method=method,
+            matmul_impl=cfg.matmul_impl, with_stats=True,
+            prefer_partial_fn=prefer, partial_matmul_impl=partial_impl)
+        res = OpResult(ok, self._overflow_delta(state),
+                       ReachStats.from_raw(stats))
+        return self._with_state(state, stats if acyclic else None), res

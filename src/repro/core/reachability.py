@@ -66,16 +66,27 @@ def reach_sets(adj_packed: jax.Array, sources_packed: jax.Array,
     return reach
 
 
-def path_exists(state: DagState, from_keys: jax.Array, to_keys: jax.Array,
-                matmul_impl: Optional[MatmulImpl] = None) -> jax.Array:
-    """Batch PathExists(from, to): True iff a path of >= 1 edge exists."""
+def seed_path_queries(state: DagState, from_keys: jax.Array,
+                      to_keys: jax.Array):
+    """Shared PathExists query seeding: keys -> (packed source bitsets
+    uint32[B, W] with dead-key rows zeroed, target slots int32[B], and the
+    both-endpoints-live mask bool[B]).  Every PathExists surface (full
+    scan, partial scan, sharded engine) seeds through here so dead-key
+    handling cannot diverge between them."""
     f_slot, f_found = lookup_slots(state, from_keys)
     t_slot, t_found = lookup_slots(state, to_keys)
     src = bitset.onehot_rows(f_slot, state.capacity)
     src = jnp.where(f_found[:, None], src, jnp.uint32(0))
+    return src, t_slot, f_found & t_found
+
+
+def path_exists(state: DagState, from_keys: jax.Array, to_keys: jax.Array,
+                matmul_impl: Optional[MatmulImpl] = None) -> jax.Array:
+    """Batch PathExists(from, to): True iff a path of >= 1 edge exists."""
+    src, t_slot, endpoints_ok = seed_path_queries(state, from_keys, to_keys)
     reach = reach_sets(state.adj, src, matmul_impl)
     hit = bitset.bit_get(reach, jnp.arange(from_keys.shape[0]), t_slot)
-    return f_found & t_found & hit
+    return endpoints_ok & hit
 
 
 def closure_iteration_bound(capacity: int) -> int:

@@ -1,7 +1,9 @@
 """Serialization Graph Testing (SGT) scheduler — the paper's motivating app.
 
 Maintains the conflict graph of live transactions as an acyclic concurrent
-DAG.  Batched interface (one batch == one scheduling tick):
+DAG, held in a `core/engine.DagEngine` session (so the dispatch policy's
+measured-depth EMA persists across ticks).  Batched interface (one batch ==
+one scheduling tick):
 
   begin(txn_ids)            -> AddVertex batch
   conflicts((t_i, t_j))     -> AcyclicAddEdge batch; a rejected edge means
@@ -14,70 +16,96 @@ and all incident edges leave the graph), matching SGT scheduler behaviour.
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import acyclic, dag
+from repro.core import dag
+from repro.core.engine import DagEngine
 
 
 class SgtState(NamedTuple):
-    graph: dag.DagState
+    engine: DagEngine
     n_begun: jax.Array      # int32
     n_committed: jax.Array  # int32
     n_aborted: jax.Array    # int32
 
+    @property
+    def graph(self) -> dag.DagState:
+        """The conflict graph's raw slab (read-only legacy surface)."""
+        return self.engine.state
 
-def new_scheduler(capacity: int) -> SgtState:
+
+def new_scheduler(capacity: int, *, backend: str = "local",
+                  method: str = "auto", subbatches: int = 1,
+                  matmul_impl=None, policy=None, mesh=None) -> SgtState:
+    """Scheduler over a fresh engine session; the keyword options mirror
+    `DagEngine.create` (default: local backend, adaptive dispatch)."""
     z = jnp.zeros((), jnp.int32)
-    return SgtState(dag.new_state(capacity), z, z, z)
+    eng = DagEngine.create(capacity, backend=backend, method=method,
+                           subbatches=subbatches, matmul_impl=matmul_impl,
+                           policy=policy, mesh=mesh)
+    return SgtState(eng, z, z, z)
 
 
 def begin(state: SgtState, txn_ids: jax.Array, valid=None):
-    g, ok = dag.add_vertices(state.graph, txn_ids, valid=valid)
+    eng, r = state.engine.add_vertices(txn_ids, valid=valid)
     return state._replace(
-        graph=g, n_begun=state.n_begun + jnp.sum(ok, dtype=jnp.int32)), ok
+        engine=eng,
+        n_begun=state.n_begun + jnp.sum(r.ok, dtype=jnp.int32)), r.ok
 
 
 def conflicts(state: SgtState, src: jax.Array, dst: jax.Array, valid=None,
-              subbatches: int = 1, matmul_impl=None,
-              method: str = "auto"):
+              subbatches: Optional[int] = None, matmul_impl=None,
+              method: Optional[str] = None):
     """Register conflict edges src -> dst. Returns (state, accepted[B]).
 
     accepted=False with live endpoints means a cycle was (possibly jointly)
     detected: the source transaction is aborted and retired from the graph.
-    ``method`` defaults to "auto" (`core/dispatch.py`): SGT conflict batches
-    are usually small and their graphs sparse, so the cost model picks the
-    scoped algorithm-2 scan — but outsized or dense ticks fall back to the
-    algorithm-1 closure instead of paying a deep sequential scan.  The
-    serve-path flip from "closure" is justified by the before/after
-    ``sgt_tick_*`` rows in `benchmarks/sgt_bench.py`.
+    The cycle check runs through the engine's dispatch policy (default
+    "auto": SGT conflict batches are usually small and their graphs sparse,
+    so the cost model picks the scoped algorithm-2 scan — and its measured
+    deciding depths sharpen the estimate tick over tick).  ``method`` /
+    ``subbatches`` / ``matmul_impl`` are legacy per-call overrides of the
+    engine configuration (None inherits it).
     """
-    g, ok = acyclic.acyclic_add_edges(
-        state.graph, src, dst, valid=valid, subbatches=subbatches,
-        matmul_impl=matmul_impl, method=method)
-    live = (dag.contains_vertices(g, src) & dag.contains_vertices(g, dst))
+    eng = state.engine
+    if method is not None or subbatches is not None or \
+            matmul_impl is not None:
+        eng = eng.with_options(
+            method=method, subbatches=subbatches,
+            **({} if matmul_impl is None
+               else {"matmul_impl": matmul_impl}))
+    eng, r = eng.add_edges_acyclic(src, dst, valid=valid)
+    ok = r.ok
+    live = eng.contains(src) & eng.contains(dst)
     if valid is not None:
         live = live & valid
     aborted = live & ~ok
     # retire aborted transactions (vertex + incident edges); the remove-ok
     # count deduplicates a txn appearing in several conflicts of one batch
-    g, removed = dag.remove_vertices(g, src, valid=aborted)
+    eng, rem = eng.remove_vertices(src, valid=aborted)
+    # carry the session state (slab + depth EMA) forward under the
+    # scheduler's ORIGINAL config: per-call overrides are views, and a
+    # stable config keeps SgtState a fixed pytree structure for lax.scan
+    eng = DagEngine.wrap(eng.state, state.engine.config,
+                         depth_ema=eng.depth_ema)
     return state._replace(
-        graph=g,
-        n_aborted=state.n_aborted + jnp.sum(removed, dtype=jnp.int32)), ok
+        engine=eng,
+        n_aborted=state.n_aborted + jnp.sum(rem.ok, dtype=jnp.int32)), ok
 
 
 def finish(state: SgtState, txn_ids: jax.Array, valid=None):
-    g, ok = dag.remove_vertices(state.graph, txn_ids, valid=valid)
+    eng, r = state.engine.remove_vertices(txn_ids, valid=valid)
     return state._replace(
-        graph=g,
-        n_committed=state.n_committed + jnp.sum(ok, dtype=jnp.int32)), ok
+        engine=eng,
+        n_committed=state.n_committed + jnp.sum(r.ok, dtype=jnp.int32)), r.ok
 
 
 def schedule_tick(state: SgtState, begin_ids, conf_src, conf_dst, finish_ids,
-                  subbatches: int = 1, method: str = "auto"):
+                  subbatches: Optional[int] = None,
+                  method: Optional[str] = None):
     """One bulk-synchronous scheduling tick: begins, conflicts, finishes."""
     state, began = begin(state, begin_ids)
     state, accepted = conflicts(state, conf_src, conf_dst,

@@ -161,6 +161,70 @@ def reach_until_decided_auto_sharded(mesh: Mesh, adj: jax.Array,
     return reach_until_decided_sharded(mesh, adj, sources, target_slots)
 
 
+def partial_scan_matmul_impl(mesh: Mesh, plan: str):
+    """Per-hop boolean-matmul impl realizing a partial-scan schedule.
+
+    ``plan="frontier"``: contraction dim split across devices, one (B, C)
+    psum per hop (`expand_frontier_sharded`).  ``plan="batch"``: the B
+    frontier rows split across devices with the adjacency replicated — the
+    hop is purely local, zero collectives (requires B % D == 0, which
+    `dispatch.choose_scan_sharding` guarantees before picking this plan).
+
+    Feeding this into `snapshot.reach_until_decided` (directly or through
+    `acyclic.acyclic_add_edges_impl`'s ``partial_matmul_impl`` hook) gives
+    the sharded engine's cycle checks the explicit collective schedule the
+    dispatch policy chose.
+    """
+    from repro.core.reachability import bool_matmul_packed
+
+    if plan == "frontier":
+        return lambda frontier, adj: expand_frontier_sharded(mesh, adj,
+                                                             frontier)
+    if plan != "batch":
+        raise ValueError(f'plan must be "batch" or "frontier", got {plan!r}')
+
+    def impl(frontier, adj):
+        return compat.shard_map(
+            bool_matmul_packed, mesh=mesh,
+            in_specs=(P(AXIS, None), P(None, None)),
+            out_specs=P(AXIS, None),
+        )(frontier, adj)
+
+    return impl
+
+
+def acyclic_add_edges_sharded(mesh: Mesh, state: DagState, us: jax.Array,
+                              vs: jax.Array, valid=None,
+                              subbatches: int = 1, policy=None,
+                              matmul_impl=None, with_stats: bool = False):
+    """Sharded-engine AcyclicAddEdge routed through the dispatch policy.
+
+    Closure-vs-partial is decided per sub-batch by ``policy`` (default
+    `dispatch.CostModelPolicy`) exactly like the single-mesh path, and the
+    partial branch runs the scan schedule ``policy.scan_sharding`` picks —
+    the engine façade (`core/engine.py`, ``backend="sharded"``) is the
+    primary caller; this function is the standalone form.  ``matmul_impl``
+    drives the closure branch (the partial branch's schedule is owned by
+    the plan).
+    """
+    from repro.core import dispatch as dispatch_mod
+
+    policy = policy if policy is not None else dispatch_mod.CostModelPolicy()
+    b = us.shape[0]
+    b_sub = max(1, b // subbatches)
+    fixed = getattr(policy, "fixed_method", None)
+    plan = policy.scan_sharding(b_sub, state.capacity,
+                                int(mesh.devices.size))
+    from repro.core import acyclic as acyclic_mod
+
+    return acyclic_mod.acyclic_add_edges_impl(
+        state, us, vs, valid=valid, subbatches=subbatches,
+        method=fixed or "auto", matmul_impl=matmul_impl,
+        with_stats=with_stats,
+        prefer_partial_fn=None if fixed else policy.prefer_partial,
+        partial_matmul_impl=partial_scan_matmul_impl(mesh, plan))
+
+
 def transitive_closure_sharded(mesh: Mesh, adj: jax.Array) -> jax.Array:
     """Repeated squaring; R stays row-sharded, rhs is all-gathered per step."""
     from repro.core.reachability import closure_iteration_bound

@@ -34,7 +34,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import bitset
-from repro.core.dag import DagState, lookup_slots
+from repro.core.dag import DagState
 from repro.core.reachability import MatmulImpl, bool_matmul_packed
 
 
@@ -102,9 +102,8 @@ def path_exists_partial(state: DagState, from_keys: jax.Array,
     """Batch PathExists via the partial-snapshot scan: same answers as
     `reachability.path_exists`, but each query stops at its deciding depth
     instead of exhausting its reach set."""
-    f_slot, f_found = lookup_slots(state, from_keys)
-    t_slot, t_found = lookup_slots(state, to_keys)
-    src = bitset.onehot_rows(f_slot, state.capacity)
-    src = jnp.where(f_found[:, None], src, jnp.uint32(0))
+    from repro.core.reachability import seed_path_queries
+
+    src, t_slot, endpoints_ok = seed_path_queries(state, from_keys, to_keys)
     hit = reach_until_decided(state.adj, src, t_slot, matmul_impl)
-    return f_found & t_found & hit
+    return endpoints_ok & hit

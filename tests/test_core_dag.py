@@ -116,18 +116,18 @@ def test_path_exists_and_closure():
 def test_acyclic_add_edges_basic():
     st = dag.new_state(CAP)
     st, _ = dag.add_vertices(st, arr([1, 2, 3]))
-    st, ok = acyclic.acyclic_add_edges(st, arr([1, 2]), arr([2, 3]))
+    st, ok = acyclic.acyclic_add_edges_impl(st, arr([1, 2]), arr([2, 3]))
     assert bool(jnp.all(ok))
     # closing edge 3->1 must be rejected and backed out
-    st, ok = acyclic.acyclic_add_edges(st, arr([3]), arr([1]))
+    st, ok = acyclic.acyclic_add_edges_impl(st, arr([3]), arr([1]))
     assert not bool(ok[0])
     assert not bool(dag.contains_edges(st, arr([3]), arr([1]))[0])
     assert bool(reachability.is_acyclic(st.adj))
     # re-adding an existing edge -> True
-    st, ok = acyclic.acyclic_add_edges(st, arr([1]), arr([2]))
+    st, ok = acyclic.acyclic_add_edges_impl(st, arr([1]), arr([2]))
     assert bool(ok[0])
     # self loop -> False
-    st, ok = acyclic.acyclic_add_edges(st, arr([2]), arr([2]))
+    st, ok = acyclic.acyclic_add_edges_impl(st, arr([2]), arr([2]))
     assert not bool(ok[0])
 
 
@@ -137,11 +137,11 @@ def test_acyclic_joint_false_positive_semantics():
     st, _ = dag.add_vertices(st, arr([1, 2, 3, 4]))
     st, _ = dag.add_edges(st, arr([1, 3]), arr([2, 4]))  # 1->2, 3->4
     # batch {2->3, 4->1} jointly closes the 4-cycle: both rejected
-    st, ok = acyclic.acyclic_add_edges(st, arr([2, 4]), arr([3, 1]))
+    st, ok = acyclic.acyclic_add_edges_impl(st, arr([2, 4]), arr([3, 1]))
     np.testing.assert_array_equal(np.asarray(ok), [False, False])
     assert bool(reachability.is_acyclic(st.adj))
     # with subbatches=2 (sequentialized), the first succeeds
-    st, ok = acyclic.acyclic_add_edges(st, arr([2, 4]), arr([3, 1]),
+    st, ok = acyclic.acyclic_add_edges_impl(st, arr([2, 4]), arr([3, 1]),
                                        subbatches=2)
     np.testing.assert_array_equal(np.asarray(ok), [True, False])
     assert bool(reachability.is_acyclic(st.adj))
@@ -161,7 +161,7 @@ def test_mixed_batch_matches_oracle():
                dag.CONTAINS_EDGE, dag.CONTAINS_VERTEX, dag.REMOVE_EDGE])
     a = arr([3, 6, 4, 1, 3, 2])
     b = arr([0, 0, 5, 2, 0, 3])
-    st2, res = dag.apply_op_batch(st, ops, a, b)
+    st2, res = dag.apply_op_batch_impl(st, ops, a, b)
     from repro.core.oracle import apply_op_batch_oracle
     want = apply_op_batch_oracle(g, np.asarray(ops), np.asarray(a),
                                  np.asarray(b))

@@ -52,7 +52,7 @@ def test_mixed_batches_match_oracle(ops):
         o = jnp.asarray([c[0] for c in chunk], jnp.int32)
         a = jnp.asarray([c[1] for c in chunk], jnp.int32)
         b = jnp.asarray([c[2] for c in chunk], jnp.int32)
-        state, res = dag.apply_op_batch(state, o, a, b)
+        state, res = dag.apply_op_batch_impl(state, o, a, b)
         want = apply_op_batch_oracle(g, np.asarray(o), np.asarray(a),
                                      np.asarray(b))
         np.testing.assert_array_equal(np.asarray(res), want)
@@ -83,7 +83,7 @@ def test_acyclic_engine_invariant_and_oracle(pairs, subbatches, method):
     vs = jnp.asarray([p[1] for p in pairs] + [0] * pad, jnp.int32)
     valid = jnp.asarray([True] * n + [False] * pad)
 
-    state, ok = acyclic.acyclic_add_edges(state, us, vs, valid=valid,
+    state, ok = acyclic.acyclic_add_edges_impl(state, us, vs, valid=valid,
                                           subbatches=subbatches,
                                           method=method)
     assert bool(reachability.is_acyclic(state.adj))

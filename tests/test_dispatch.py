@@ -88,7 +88,7 @@ def test_auto_matches_both_fixed_methods():
         vs = jnp.asarray(rng.integers(0, 44, 8), jnp.int32)
         outs = {}
         for method in acyclic.METHODS:
-            outs[method] = acyclic.acyclic_add_edges(st, us, vs,
+            outs[method] = acyclic.acyclic_add_edges_impl(st, us, vs,
                                                      method=method)
         _, ok_c = outs["closure"]
         for method in ("partial", "auto"):
@@ -112,7 +112,7 @@ def test_auto_mixed_ops_match_oracle():
             o = jnp.asarray(rng.choice(op_codes, n), jnp.int32)
             a = jnp.asarray(rng.integers(0, 12, n), jnp.int32)
             b = jnp.asarray(rng.integers(0, 12, n), jnp.int32)
-            state, res = dag.apply_op_batch(state, o, a, b, acyclic=True,
+            state, res = dag.apply_op_batch_impl(state, o, a, b, acyclic=True,
                                             method="auto")
             # both fixed-method specs decide identically, so either oracles
             # the auto result; use "partial" (the scoped-scan spec)
@@ -129,10 +129,10 @@ def test_auto_under_jit_and_subbatches():
     us = jnp.asarray(rng.integers(0, 32, 8), jnp.int32)
     vs = jnp.asarray(rng.integers(0, 32, 8), jnp.int32)
     for k in (1, 2, 4):
-        jitted = jax.jit(lambda s, u, v, k=k: acyclic.acyclic_add_edges(
+        jitted = jax.jit(lambda s, u, v, k=k: acyclic.acyclic_add_edges_impl(
             s, u, v, subbatches=k, method="auto"))
         _, ok_jit = jitted(st, us, vs)
-        _, ok_eager = acyclic.acyclic_add_edges(st, us, vs, subbatches=k,
+        _, ok_eager = acyclic.acyclic_add_edges_impl(st, us, vs, subbatches=k,
                                                 method="auto")
         np.testing.assert_array_equal(np.asarray(ok_jit),
                                       np.asarray(ok_eager))
@@ -145,9 +145,9 @@ def test_auto_stats_expose_choice_and_exact_work():
     st = _sparse_dag(rng, n_vertices=48, n_edges=70)
     us = jnp.asarray(rng.integers(0, 48, 4), jnp.int32)
     vs = jnp.asarray(rng.integers(0, 48, 4), jnp.int32)
-    _, ok_p, s_p = acyclic.acyclic_add_edges(st, us, vs, method="partial",
+    _, ok_p, s_p = acyclic.acyclic_add_edges_impl(st, us, vs, method="partial",
                                              with_stats=True)
-    _, ok_a, s_a = acyclic.acyclic_add_edges(st, us, vs, method="auto",
+    _, ok_a, s_a = acyclic.acyclic_add_edges_impl(st, us, vs, method="auto",
                                              with_stats=True)
     # small sparse batch -> the dispatcher picks algorithm 2 and the work
     # accounting equals the fixed partial run exactly
@@ -159,9 +159,9 @@ def test_auto_stats_expose_choice_and_exact_work():
     # capacity-sized batch on the same sparse graph -> closure
     us2 = jnp.asarray(rng.integers(0, 48, CAP), jnp.int32)
     vs2 = jnp.asarray(rng.integers(0, 48, CAP), jnp.int32)
-    _, ok_c, s_c = acyclic.acyclic_add_edges(st, us2, vs2, method="closure",
+    _, ok_c, s_c = acyclic.acyclic_add_edges_impl(st, us2, vs2, method="closure",
                                              with_stats=True)
-    _, ok_a2, s_a2 = acyclic.acyclic_add_edges(st, us2, vs2, method="auto",
+    _, ok_a2, s_a2 = acyclic.acyclic_add_edges_impl(st, us2, vs2, method="auto",
                                                with_stats=True)
     assert int(s_a2["n_partial"]) == 0
     assert int(s_a2["row_products"]) == int(s_c["row_products"])

@@ -81,9 +81,9 @@ def test_partial_matches_closure_on_random_batches(subbatches):
         us = jnp.asarray(rng.integers(0, 44, b), jnp.int32)  # some dead keys
         vs = jnp.asarray(rng.integers(0, 44, b), jnp.int32)
         valid = jnp.asarray(rng.random(b) < 0.9)
-        st1, ok1 = acyclic.acyclic_add_edges(
+        st1, ok1 = acyclic.acyclic_add_edges_impl(
             st, us, vs, valid=valid, subbatches=subbatches, method="closure")
-        st2, ok2 = acyclic.acyclic_add_edges(
+        st2, ok2 = acyclic.acyclic_add_edges_impl(
             st, us, vs, valid=valid, subbatches=subbatches, method="partial")
         np.testing.assert_array_equal(np.asarray(ok1), np.asarray(ok2))
         np.testing.assert_array_equal(np.asarray(st1.adj), np.asarray(st2.adj))
@@ -96,12 +96,12 @@ def test_partial_joint_false_positive_semantics():
     st = dag.new_state(CAP)
     st, _ = dag.add_vertices(st, arr([1, 2, 3, 4]))
     st, _ = dag.add_edges(st, arr([1, 3]), arr([2, 4]))  # 1->2, 3->4
-    st, ok = acyclic.acyclic_add_edges(st, arr([2, 4]), arr([3, 1]),
+    st, ok = acyclic.acyclic_add_edges_impl(st, arr([2, 4]), arr([3, 1]),
                                        method="partial")
     np.testing.assert_array_equal(np.asarray(ok), [False, False])
     assert bool(reachability.is_acyclic(st.adj))
     # sequentialized: the first succeeds
-    st, ok = acyclic.acyclic_add_edges(st, arr([2, 4]), arr([3, 1]),
+    st, ok = acyclic.acyclic_add_edges_impl(st, arr([2, 4]), arr([3, 1]),
                                        subbatches=2, method="partial")
     np.testing.assert_array_equal(np.asarray(ok), [True, False])
     assert bool(reachability.is_acyclic(st.adj))
@@ -120,7 +120,7 @@ def test_partial_mixed_ops_match_oracle():
             o = jnp.asarray(rng.choice(op_codes, n), jnp.int32)
             a = jnp.asarray(rng.integers(0, 12, n), jnp.int32)
             b = jnp.asarray(rng.integers(0, 12, n), jnp.int32)
-            state, res = dag.apply_op_batch(state, o, a, b, acyclic=True,
+            state, res = dag.apply_op_batch_impl(state, o, a, b, acyclic=True,
                                             method="partial")
             want = apply_op_batch_oracle(g, np.asarray(o), np.asarray(a),
                                          np.asarray(b), acyclic=True,
@@ -153,9 +153,9 @@ def test_partial_fewer_row_products_on_sparse_small_batch():
     st = _sparse_dag(rng, n_vertices=48, n_edges=70)
     us = jnp.asarray(rng.integers(0, 48, 4), jnp.int32)
     vs = jnp.asarray(rng.integers(0, 48, 4), jnp.int32)
-    _, ok1, s1 = acyclic.acyclic_add_edges(st, us, vs, method="closure",
+    _, ok1, s1 = acyclic.acyclic_add_edges_impl(st, us, vs, method="closure",
                                            with_stats=True)
-    _, ok2, s2 = acyclic.acyclic_add_edges(st, us, vs, method="partial",
+    _, ok2, s2 = acyclic.acyclic_add_edges_impl(st, us, vs, method="partial",
                                            with_stats=True)
     np.testing.assert_array_equal(np.asarray(ok1), np.asarray(ok2))
     assert s1["rows_per_product"] == CAP
@@ -169,11 +169,11 @@ def test_both_methods_accept_pallas_dispatch_matmul():
     st = dag.new_state(CAP)
     st, _ = dag.add_vertices(st, arr([1, 2, 3]))
     for method in acyclic.METHODS:
-        st_m, ok = acyclic.acyclic_add_edges(
+        st_m, ok = acyclic.acyclic_add_edges_impl(
             st, arr([1, 2]), arr([2, 3]), method=method,
             matmul_impl=ops.bitmm_packed)
         assert bool(jnp.all(ok))
-        _, ok = acyclic.acyclic_add_edges(
+        _, ok = acyclic.acyclic_add_edges_impl(
             st_m, arr([3]), arr([1]), method=method,
             matmul_impl=ops.bitmm_packed)
         assert not bool(ok[0])
@@ -203,7 +203,7 @@ def test_sgt_conflicts_partial():
 def test_method_validation():
     st = dag.new_state(CAP)
     with pytest.raises(ValueError):
-        acyclic.acyclic_add_edges(st, arr([1]), arr([2]), method="bogus")
+        acyclic.acyclic_add_edges_impl(st, arr([1]), arr([2]), method="bogus")
 
 
 def test_partial_under_jit():
@@ -212,8 +212,8 @@ def test_partial_under_jit():
     st = _sparse_dag(rng, n_vertices=32, n_edges=40)
     us = jnp.asarray(rng.integers(0, 32, 8), jnp.int32)
     vs = jnp.asarray(rng.integers(0, 32, 8), jnp.int32)
-    jitted = jax.jit(lambda s, u, v: acyclic.acyclic_add_edges(
+    jitted = jax.jit(lambda s, u, v: acyclic.acyclic_add_edges_impl(
         s, u, v, method="partial"))
     _, ok_jit = jitted(st, us, vs)
-    _, ok_eager = acyclic.acyclic_add_edges(st, us, vs, method="partial")
+    _, ok_eager = acyclic.acyclic_add_edges_impl(st, us, vs, method="partial")
     np.testing.assert_array_equal(np.asarray(ok_jit), np.asarray(ok_eager))
