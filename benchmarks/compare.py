@@ -12,6 +12,13 @@ What is compared, and why the checks differ in strictness:
   change that makes either reachability algorithm (or the auto dispatcher)
   do more boolean-matmul rows trips it even when wall time is in the noise.
 
+* **Incremental-cache gates** are deterministic work counters, checked
+  within-run with NO tolerance: the ``algo_incremental_B*`` rows (warm
+  cache — exactly 0 products) and the ``sgt_tick_insheavy_*`` triples
+  must show the incremental method strictly below the better fixed
+  method's row-products — the tentpole acceptance bar of the closure
+  cache.
+
 * **Absolute wall times do not transfer between machines**, so time checks
   are within-run or ratio-based:
     - auto-never-worse: for every ``algo*_B{n}`` triple *in the PR run*,
@@ -39,8 +46,11 @@ import sys
 
 ROW_PRODUCTS_RE = re.compile(r"row_products=(\d+)")
 OPS_PER_S_RE = re.compile(r"ops_per_s=(\d+)")
-ALGO_B_RE = re.compile(r"^algo(?:1_closure|2_partial|_auto)_B(\d+)$")
+ALGO_B_RE = re.compile(
+    r"^algo(?:1_closure|2_partial|_auto|_incremental)_B(\d+)$")
 SGT_RE = re.compile(r"^sgt_tick_(b\d+_K\d+)_(closure|auto|engine)$")
+INSHEAVY_RE = re.compile(
+    r"^sgt_tick_insheavy_(b\d+)_(closure|partial|incremental)$")
 
 # absolute slack (us) added to within-run time comparisons so that
 # microsecond-scale rows don't trip the gate on timer noise alone
@@ -72,7 +82,8 @@ def check(pr: dict, base: dict, tol: float, time_tol: float) -> list:
 
     # 1. coverage: every gated baseline row must still be produced
     for name in base:
-        if (ALGO_B_RE.match(name) or SGT_RE.match(name)) and name not in pr:
+        if (ALGO_B_RE.match(name) or SGT_RE.match(name)
+                or INSHEAVY_RE.match(name)) and name not in pr:
             failures.append(f"missing row: {name} (present in baseline)")
 
     # 2. deterministic work: row-product counts vs baseline
@@ -83,6 +94,12 @@ def check(pr: dict, base: dict, tol: float, time_tol: float) -> list:
         p_rwp = row_products(pr[name])
         if p_rwp is None:
             failures.append(f"{name}: row_products disappeared from derived")
+        elif b_rwp == 0:
+            # zero-work baselines (the incremental rows) admit no slack
+            if p_rwp > 0:
+                failures.append(
+                    f"{name}: row_products 0 -> {p_rwp} (baseline does "
+                    f"zero work; any increase is a regression)")
         elif p_rwp > b_rwp * (1 + tol):
             failures.append(
                 f"{name}: row_products {b_rwp} -> {p_rwp} "
@@ -134,6 +151,47 @@ def check(pr: dict, base: dict, tol: float, time_tol: float) -> list:
                 f"sgt_tick_{shape}: engine {ops_e:.0f} ops/s trails the "
                 f"function path (auto) {ops_a:.0f} ops/s by more than "
                 f"{100 * ENGINE_TOLERANCE:.0f}%")
+
+    # 4c. within-run, deterministic: the incremental closure cache must do
+    # STRICTLY fewer boolean-matmul row-products than the better fixed
+    # method — per algo batch (warm cache: the count is exactly 0) and on
+    # the insert-heavy serve stream (clean cache end to end).  These are
+    # work counters, not wall times: no tolerance.
+    for n_cand in batches:
+        names = {k: f"algo{k}_B{n_cand}"
+                 for k in ("1_closure", "2_partial", "_incremental")}
+        if not all(v in pr for v in names.values()):
+            continue
+        rwp_i = row_products(pr[names["_incremental"]])
+        fixed = [row_products(pr[names["1_closure"]]),
+                 row_products(pr[names["2_partial"]])]
+        if any(v is None for v in fixed):
+            continue  # section 2 already reports the missing counter
+        best_fixed = min(fixed)
+        if rwp_i is None or rwp_i >= best_fixed:
+            failures.append(
+                f"algo_incremental_B{n_cand}: row_products {rwp_i} not "
+                f"strictly below the best fixed method ({best_fixed})")
+    insheavy = {}
+    for name, row in pr.items():
+        m = INSHEAVY_RE.match(name)
+        if m:
+            insheavy.setdefault(m.group(1), {})[m.group(2)] = row
+    for shape, by_method in sorted(insheavy.items()):
+        if not all(k in by_method for k in ("closure", "partial",
+                                            "incremental")):
+            continue
+        rwp_i = row_products(by_method["incremental"])
+        fixed = [row_products(by_method["closure"]),
+                 row_products(by_method["partial"])]
+        if any(v is None for v in fixed):
+            continue  # section 2 already reports the missing counter
+        best_fixed = min(fixed)
+        if rwp_i is None or rwp_i >= best_fixed:
+            failures.append(
+                f"sgt_tick_insheavy_{shape}: incremental row_products "
+                f"{rwp_i} not strictly below the best fixed method "
+                f"({best_fixed})")
 
     # 5. ratio drift vs baseline: algo2/algo1 wall-time ratio
     for n_cand in batches:

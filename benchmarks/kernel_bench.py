@@ -42,6 +42,24 @@ def bitmm_rows():
     return rows
 
 
+def closure_update_rows():
+    rows = []
+    rng = np.random.default_rng(2)
+    fn = jax.jit(ref.closure_update_ref)
+    for c, b in ((1024, 128), (2048, 256), (4096, 256)):
+        closure = bitset.pack_bits(jnp.asarray(rng.random((c, c)) < 0.05))
+        mask = bitset.pack_bits(jnp.asarray(rng.random((c, b)) < 0.2))
+        sel = bitset.pack_bits(jnp.asarray(rng.random((b, c)) < 0.05))
+        t = _time(fn, closure, mask, sel)
+        # the fused kernel writes packed words once instead of an f32
+        # product + a second read-modify-write OR pass over the closure
+        unfused = c * c * 4 + 2 * (c * c // 8)
+        fused = c * c // 8
+        rows.append((f"closure_update_C{c}_B{b}", t * 1e6,
+                     f"fused_traffic_saving={unfused/fused:.0f}x"))
+    return rows
+
+
 def embbag_rows():
     rows = []
     rng = np.random.default_rng(1)
@@ -71,4 +89,5 @@ def flash_rows():
 
 
 def all_rows():
-    return bitmm_rows() + embbag_rows() + flash_rows()
+    return (bitmm_rows() + closure_update_rows() + embbag_rows()
+            + flash_rows())

@@ -10,13 +10,33 @@ façade-overhead gate in `benchmarks/compare.py` (engine within 10% of the
 function path) compares medians taken under identical CPU contention; the
 closure row keeps justifying the PR-2 default flip at its looser
 tolerance.
+
+The ``sgt_tick_insheavy_*`` rows run the insert-heavy stream (no per-tick
+retirements — the epoch-GC serving style) under each pinned method and
+report the total boolean-matmul row-products: the incremental closure
+cache stays clean the whole run, so its rows do ZERO C-row products while
+closure pays O(C log C) and partial O(B·depth) per tick —
+`benchmarks/compare.py` gates that ordering strictly.
 """
 from __future__ import annotations
 
 
 def all_rows(quick: bool = False):
-    from repro.launch.serve import serve_sgt, serve_sgt_paired
+    from repro.launch.serve import (serve_sgt, serve_sgt_insert_heavy,
+                                    serve_sgt_paired)
     rows = []
+    # insert-heavy steady state (no per-tick retirements): the incremental
+    # closure cache's target regime.  The derived row_products are the
+    # deterministic work counters benchmarks/compare.py gates — the
+    # incremental row must come in STRICTLY below both fixed methods.
+    ins_ticks = 12 if quick else 30
+    for method in ("closure", "partial", "incremental"):
+        out = serve_sgt_insert_heavy(capacity=1024, batch=256,
+                                     ticks=ins_ticks, method=method)
+        rows.append((f"sgt_tick_insheavy_b256_{method}", out["tick_us"],
+                     f"ops_per_s={out['ops_per_s']:.0f}"
+                     f"_row_products={out['row_products']}"
+                     f"_accepted={out['accepted']}"))
     for batch, sub in ((128, 1), (512, 1), (512, 4)):
         # 20 quick ticks (not 10): median-tick throughput needs a window
         # wide enough to sit between contention spikes

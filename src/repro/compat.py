@@ -11,6 +11,9 @@ source:
                                                   mesh (set by ``with mesh:``)
   set_mesh           jax.set_mesh              <- the Mesh context manager
   pallas ANY space   pltpu.MemorySpace.ANY     <- pltpu.TPUMemorySpace.ANY
+  population_count   jax.lax.population_count  <- SWAR fallback (never taken
+                                                  on the pinned floor; kept
+                                                  as the tested reference)
 
 Every shim prefers the new API when it exists, so this module is a no-op
 overhead on current jax and the single choke point to delete once the floor
@@ -73,6 +76,26 @@ def make_mesh(shape, axis_names, devices=None):
     import numpy as np
     devices = devices if devices is not None else jax.devices()
     return jax.sharding.Mesh(np.asarray(devices).reshape(shape), axis_names)
+
+
+def _population_count_swar(x):
+    """Branch-free SWAR popcount over uint32 words — the pre-XLA reference
+    (kept callable so tests can pin the shimmed path against it)."""
+    import jax.numpy as jnp
+
+    x = x - ((x >> 1) & jnp.uint32(0x55555555))
+    x = (x & jnp.uint32(0x33333333)) + ((x >> 2) & jnp.uint32(0x33333333))
+    x = (x + (x >> 4)) & jnp.uint32(0x0F0F0F0F)
+    return (x * jnp.uint32(0x01010101)) >> 24
+
+
+def population_count(x):
+    """Per-word popcount: ``jax.lax.population_count`` (a single XLA HLO,
+    lowered to the hardware popcount instruction) with the SWAR fallback
+    for a hypothetical jax floor without it.  uint32 in, uint32 out."""
+    if hasattr(jax.lax, "population_count"):
+        return jax.lax.population_count(x)
+    return _population_count_swar(x)
 
 
 def pallas_any_memory_space():

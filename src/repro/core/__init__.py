@@ -26,6 +26,10 @@ from repro.core.dag import (  # noqa: F401
     CONTAINS_VERTEX, CONTAINS_EDGE,
 )
 from repro.core.acyclic import acyclic_add_edges, METHODS  # noqa: F401
+from repro.core.closure_cache import (  # noqa: F401
+    ClosureCache, cache_matches_state, empty_cache, incremental_cycle_check,
+    insert_update, rebuild_cache,
+)
 from repro.core.dispatch import (  # noqa: F401
     choose_method, choose_scan_sharding, prefer_partial,
     DispatchPolicy, CostModelPolicy, FixedPolicy,

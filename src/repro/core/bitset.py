@@ -108,7 +108,19 @@ def scatter_clear_bits(packed: jax.Array, rows: jax.Array, cols: jax.Array,
 
 
 def popcount(packed: jax.Array) -> jax.Array:
-    """Number of set bits (summed over the last axis)."""
+    """Number of set bits (summed over the last axis).
+
+    Uses ``jax.lax.population_count`` (one HLO, hardware popcount) through
+    the `repro.compat` shim; `popcount_swar` is the hand-rolled reference
+    it replaced, kept for the equivalence test."""
+    from repro import compat
+
+    return jnp.sum(compat.population_count(packed), axis=-1,
+                   dtype=jnp.int32)
+
+
+def popcount_swar(packed: jax.Array) -> jax.Array:
+    """Reference SWAR popcount (the pre-`lax.population_count` path)."""
     x = packed
     x = x - ((x >> 1) & jnp.uint32(0x55555555))
     x = (x & jnp.uint32(0x33333333)) + ((x >> 2) & jnp.uint32(0x33333333))

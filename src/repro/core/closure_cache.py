@@ -1,0 +1,218 @@
+"""Incremental transitive-closure cache — `method="incremental"`.
+
+Both of the paper's reachability algorithms recompute from scratch on every
+insert batch: algorithm 1 pays ~ceil(log2 C) full-C boolean products,
+algorithm 2 pays B rows per BFS hop.  But an engine session mutates the
+*same* graph tick after tick, so the closure of the committed graph can be
+carried as session state (the amortization move of Chatterjee et al.,
+arXiv:1809.00896, and of the incremental snapshot maintenance in
+arXiv:2310.02380):
+
+  * **Check** — with a clean cache, whether candidate edge (u, v) closes a
+    cycle through the *committed* graph is one bit read,
+    ``closure[v, u]``.  Cycles that only exist through the other candidates
+    of the same batch (the paper's transit edges) are decided on the B x B
+    *candidate hop graph* ``A[i, j] = reach(v_i, u_j)`` — candidate i lies
+    on a cycle of ``G ∪ transit`` iff the strict closure of A has bit
+    (i, i).  Total work: B^2 bit reads plus a B x B boolean closure — ZERO
+    C-row boolean matmul products.
+  * **Update** — an accepted batch folds into the cache with one rank-B
+    boolean update: every vertex w that reaches an accepted edge's source u
+    gains that edge's contribution ``closure[v] | onehot(v)``; chains of
+    accepted edges are pre-composed through the hop graph's
+    reflexive-transitive closure, so the update is exact in one shot
+    (`kernels/closure_update.py` fuses it on TPU).
+  * **Deletes invalidate** — edge/vertex removals mark the cache dirty
+    (maintaining a closure under deletion is a different problem: paths
+    through the removed vertex must be *re-derived*, not just cleared);
+    the next incremental check lazily rebuilds via `transitive_closure`
+    and the session is back to O(B) checks.
+
+Equivalence (pinned by tests/test_closure_cache.py): for every batch the
+incremental check rejects exactly the candidates algorithm 1 rejects —
+a path v_i -> u_i in ``G ∪ transit`` either uses no transit edge (the
+``closure[v_i, u_i]`` bit) or decomposes into committed-graph segments
+between transit edges j1..jk, i.e. a cycle through i in the hop graph.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitset
+from repro.core.reachability import (MatmulImpl, closure_iteration_bound,
+                                     transitive_closure)
+
+# update_impl signature: (closure (C, W), mask (C, B/32), rows (B, W)) ->
+# new closure (C, W).  `kernels/ops.closure_update` is the fused TPU
+# realization; the default composes the jnp reference inline.
+ClosureUpdateImpl = Callable[[jax.Array, jax.Array, jax.Array], jax.Array]
+
+
+class ClosureCache(NamedTuple):
+    """The packed strict transitive closure of the committed graph, plus a
+    staleness flag.  ``dirty=True`` means ``closure`` may be stale (an edge
+    or vertex was deleted, or the slab was wrapped from unknown state) and
+    must be rebuilt before its bits are trusted."""
+
+    closure: jax.Array  # uint32[C, W]: strict closure (paths of >= 1 edge)
+    dirty: jax.Array    # bool[]: True -> rebuild before use
+
+    @property
+    def capacity(self) -> int:
+        return self.closure.shape[0]
+
+    def invalidated_if(self, changed) -> "ClosureCache":
+        """Mark dirty when ``changed`` (traced bool) — the delete path."""
+        return self._replace(dirty=self.dirty | changed)
+
+
+def empty_cache(capacity: int, dirty: bool = False) -> ClosureCache:
+    """Cache for an empty graph (its strict closure IS all-zeros, so
+    ``dirty=False`` is exact for a fresh engine).  ``dirty=True`` is the
+    conservative wrap of an existing slab of unknown closure."""
+    w = bitset.n_words(capacity)
+    return ClosureCache(jnp.zeros((capacity, w), jnp.uint32),
+                        jnp.asarray(dirty))
+
+
+def rebuild_cache(adj_packed: jax.Array,
+                  matmul_impl: Optional[MatmulImpl] = None) -> ClosureCache:
+    """From-scratch rebuild: the lazy-revalidation (and test-oracle) path."""
+    return ClosureCache(transitive_closure(adj_packed, matmul_impl),
+                        jnp.asarray(False))
+
+
+def refresh_closure(closure: jax.Array, dirty: jax.Array,
+                    adj_packed: jax.Array,
+                    matmul_impl: Optional[MatmulImpl] = None):
+    """(trusted closure, n_products): rebuilds iff dirty (a traced
+    ``lax.cond``), charging the rebuild's boolean-matmul products."""
+
+    def rebuild(_):
+        c, n = transitive_closure(adj_packed, matmul_impl, with_stats=True)
+        return c, n
+
+    def keep(_):
+        return closure, jnp.int32(0)
+
+    return jax.lax.cond(dirty, rebuild, keep, None)
+
+
+# --------------------------------------------------- candidate hop graph
+
+def _closure_bool_small(a: jax.Array, strict: bool = True) -> jax.Array:
+    """Transitive closure of a small dense bool[B, B] matrix by repeated
+    squaring (f32 matmuls on the VPU/MXU — B is a candidate batch, not the
+    capacity, so this is noise next to even one C-row product)."""
+    b = a.shape[0]
+    n_iter = closure_iteration_bound(b)
+    if not strict:
+        a = a | jnp.eye(b, dtype=bool)
+
+    def body(_, r):
+        rf = r.astype(jnp.float32)
+        return r | ((rf @ rf) > 0)
+
+    return jax.lax.fori_loop(0, n_iter, body, a)
+
+
+def candidate_hop_matrix(closure: jax.Array, u_slots: jax.Array,
+                         v_slots: jax.Array, mask: jax.Array) -> jax.Array:
+    """A[i, j] = mask[i] & mask[j] & "candidate i's target reaches
+    candidate j's source through the committed graph (>= 0 edges)"."""
+    rows_v = closure[v_slots]                       # (B, W)
+    word = u_slots >> 5
+    shift = (u_slots & 31).astype(jnp.uint32)
+    reach = ((rows_v[:, word] >> shift[None, :]) & jnp.uint32(1)) != 0
+    hop = reach | (v_slots[:, None] == u_slots[None, :])
+    return hop & mask[:, None] & mask[None, :]
+
+
+def incremental_cycle_check(closure: jax.Array, u_slots: jax.Array,
+                            v_slots: jax.Array, cand: jax.Array) -> jax.Array:
+    """cyc[b] = True iff candidate edge (u_b, v_b) lies on a cycle of
+    ``G ∪ transit`` — decided entirely against the cached closure:
+    B^2 bit reads + one B x B boolean closure, zero C-row products."""
+    hop = candidate_hop_matrix(closure, u_slots, v_slots, cand)
+    hop_closure = _closure_bool_small(hop, strict=True)
+    b = u_slots.shape[0]
+    idx = jnp.arange(b)
+    return hop_closure[idx, idx] & cand
+
+
+# --------------------------------------------------------- rank-B update
+
+def _pad32(n: int) -> int:
+    return ((n + 31) // 32) * 32
+
+
+def _default_update_impl(closure: jax.Array, mask_packed: jax.Array,
+                         rows_packed: jax.Array) -> jax.Array:
+    """jnp reference of `kernels/closure_update.py` (kept importable from
+    core without a kernels dependency)."""
+    from repro.core.reachability import bool_matmul_packed
+
+    return closure | bool_matmul_packed(mask_packed, rows_packed)
+
+
+def insert_update(closure: jax.Array, u_slots: jax.Array,
+                  v_slots: jax.Array, accepted: jax.Array,
+                  update_impl: Optional[ClosureUpdateImpl] = None
+                  ) -> jax.Array:
+    """Fold a jointly-acyclic accepted edge batch into the strict closure.
+
+    new[w, x] = old[w, x]  |  exists accepted edges j1..jk (k >= 1) with
+                w ->G* u_{j1}, chained targets->sources through G, and
+                v_{jk} ->G* x
+
+    realized as ``old | L @ Sstar @ R`` where L[w, j] = "w reaches u_j"
+    (C x B bit reads off the old closure), Sstar is the hop graph's
+    reflexive-transitive closure (pre-composing edge chains), and
+    R[j] = closure[v_j] | onehot(v_j) (the rows an edge contributes).
+    ``L @ Sstar`` collapses into the mask, so the heavy (C x B) x (B x C)
+    OR-accumulate is ONE call of ``update_impl`` — the fused Pallas kernel
+    on TPU, its jnp reference elsewhere.
+    """
+    impl = update_impl if update_impl is not None else _default_update_impl
+    c = closure.shape[0]
+    b = u_slots.shape[0]
+
+    # Sstar: chains of >= 0 accepted edges between a consumed and a
+    # starting edge (reflexive-transitive closure of the hop graph)
+    hop = candidate_hop_matrix(closure, u_slots, v_slots, accepted)
+    sstar = _closure_bool_small(hop, strict=False)
+
+    # L[w, j] = accepted[j] & (w == u_j | closure[w, u_j])
+    word = u_slots >> 5
+    shift = (u_slots & 31).astype(jnp.uint32)
+    reaches_u = ((closure[:, word] >> shift[None, :]) & jnp.uint32(1)) != 0
+    is_u = jnp.arange(c, dtype=jnp.int32)[:, None] == u_slots[None, :]
+    l_mask = (reaches_u | is_u) & accepted[None, :]
+
+    # mask = L @ Sstar (C x B bool — small next to the rank-B update)
+    mask = (l_mask.astype(jnp.float32) @ sstar.astype(jnp.float32)) > 0
+
+    # R[j] = closure[v_j] | onehot(v_j), zeroed for rejected rows
+    rows = closure[v_slots] | bitset.onehot_rows(v_slots, c)
+    rows = jnp.where(accepted[:, None], rows, jnp.uint32(0))
+
+    # pad B to a word multiple for the packed-mask kernel layout
+    bp = _pad32(b)
+    if bp != b:
+        mask = jnp.pad(mask, ((0, 0), (0, bp - b)))
+        rows = jnp.pad(rows, ((0, bp - b), (0, 0)))
+    return impl(closure, bitset.pack_bits(mask), rows)
+
+
+# -------------------------------------------------------------- validation
+
+def cache_matches_state(cache: ClosureCache, adj_packed: jax.Array,
+                        matmul_impl: Optional[MatmulImpl] = None) -> jax.Array:
+    """True iff a clean cache's closure equals the from-scratch closure of
+    ``adj_packed`` (dirty caches vacuously match — their bits are not
+    trusted).  The invariant every incremental test asserts."""
+    want = transitive_closure(adj_packed, matmul_impl)
+    return cache.dirty | jnp.all(cache.closure == want)

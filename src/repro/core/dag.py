@@ -182,51 +182,82 @@ def apply_op_batch_impl(state: DagState, op: jax.Array, a: jax.Array,
                         b: jax.Array, acyclic: bool = False,
                         subbatches: int = 1, method: str = "closure",
                         matmul_impl=None, with_stats: bool = False,
-                        prefer_partial_fn=None, partial_matmul_impl=None):
+                        prefer_partial_fn=None, partial_matmul_impl=None,
+                        cache=None, closure_update_impl=None,
+                        n_shards: int = 1, prefer_incremental_fn=None):
     """Apply a mixed batch with the documented linearization:
     RemoveVertex -> AddVertex -> RemoveEdge -> AddEdge -> reads.
 
     ``method`` picks the acyclic cycle-check algorithm ("closure" = paper
     algorithm 1 full closure, "partial" = algorithm 2 partial snapshot,
-    "auto" = per-batch cost-model dispatch between the two; see
-    `core/acyclic.py` and `core/dispatch.py`).  ``matmul_impl`` drives every
-    cycle-check matmul (e.g. the fused Pallas kernel on TPU);
-    ``prefer_partial_fn`` / ``partial_matmul_impl`` are the engine's policy
-    hooks (see `acyclic.acyclic_add_edges_impl`).
+    "incremental" = the cached-closure check, "auto" = per-batch dispatch;
+    see `core/acyclic.py`, `core/closure_cache.py`, `core/dispatch.py`).
+    ``matmul_impl`` drives every cycle-check matmul (e.g. the fused Pallas
+    kernel on TPU); ``prefer_partial_fn`` / ``partial_matmul_impl`` /
+    ``closure_update_impl`` are the engine's policy hooks (see
+    `acyclic.acyclic_add_edges_impl`).
 
-    Returns (state, ok[B]) — or (state, ok[B], stats) with ``with_stats``,
-    where stats is the acyclic cycle-check accounting (all-zero when
-    ``acyclic=False``: no cycle check ran).
+    ``cache`` threads the engine's incremental closure cache through the
+    linearization: the delete phases (RemoveVertex / RemoveEdge) mark it
+    dirty iff they actually cleared adjacency bits, so the AddEdge phase's
+    incremental check lazily rebuilds in-step.  With ``cache`` the return
+    gains the updated cache: (state, ok[, cache][, stats]); stats is the
+    acyclic cycle-check accounting (all-zero when ``acyclic=False``: no
+    cycle check ran).
     """
     from repro.core import acyclic as acyclic_mod
 
     res = jnp.zeros(op.shape[0], bool)
+    # acyclic.acyclic_add_edges_impl threads (and returns) a cache for
+    # method="incremental" even when none was passed — mirror its notion
+    # of "cached" so the unpacking below cannot diverge from it
+    cached = cache is not None or (acyclic and method == "incremental")
+    adj_before = state.adj
     state, r = remove_vertices(state, a, valid=op == REMOVE_VERTEX)
     res = jnp.where(op == REMOVE_VERTEX, r, res)
     state, r = add_vertices(state, a, valid=op == ADD_VERTEX)
     res = jnp.where(op == ADD_VERTEX, r, res)
     state, r = remove_edges(state, a, b, valid=op == REMOVE_EDGE)
     res = jnp.where(op == REMOVE_EDGE, r, res)
+    if cache is not None:
+        # deletes invalidate; vertex adds never touch adjacency
+        cache = cache.invalidated_if(jnp.any(state.adj != adj_before))
     z = jnp.int32(0)
     stats = {"n_products": z, "rows_per_product": 0, "row_products": z,
-             "n_partial": z, "deciding_depth": z}
+             "n_partial": z, "n_incremental": z,
+             "deciding_depth": jnp.zeros((n_shards,), jnp.int32)}
     if acyclic:
         out = acyclic_mod.acyclic_add_edges_impl(
             state, a, b, valid=op == ADD_EDGE, subbatches=subbatches,
             method=method, matmul_impl=matmul_impl, with_stats=with_stats,
             prefer_partial_fn=prefer_partial_fn,
-            partial_matmul_impl=partial_matmul_impl)
-        if with_stats:
+            partial_matmul_impl=partial_matmul_impl, cache=cache,
+            closure_update_impl=closure_update_impl, n_shards=n_shards,
+            prefer_incremental_fn=prefer_incremental_fn)
+        if cached and with_stats:
+            state, r, cache, stats = out
+        elif cached:
+            state, r, cache = out
+        elif with_stats:
             state, r, stats = out
         else:
             state, r = out
     else:
+        adj_pre = state.adj
         state, r = add_edges(state, a, b, valid=op == ADD_EDGE)
+        if cache is not None:
+            # unconstrained inserts bypass the cycle check (and therefore
+            # the rank-B fold-in): the cache goes stale
+            cache = cache.invalidated_if(jnp.any(state.adj != adj_pre))
     res = jnp.where(op == ADD_EDGE, r, res)
     r = contains_vertices(state, a)
     res = jnp.where(op == CONTAINS_VERTEX, r, res)
     r = contains_edges(state, a, b)
     res = jnp.where(op == CONTAINS_EDGE, r, res)
+    if cached and with_stats:
+        return state, res, cache, stats
+    if cached:
+        return state, res, cache
     if with_stats:
         return state, res, stats
     return state, res
@@ -237,7 +268,25 @@ def apply_op_sequential(state: DagState, op: jax.Array, a: jax.Array,
                         method: str = "closure"):
     """Coarse-grained baseline: one op at a time (the moral equivalent of the
     paper's single global lock).  Same linearization as a size-1 batch chain.
+    ``method="incremental"`` threads one closure cache through the whole
+    chain (so the baseline, too, pays a single build instead of one per op).
     """
+    if acyclic and method == "incremental":
+        from repro.core import closure_cache
+
+        def body_cached(carry, xs):
+            st, cache = carry
+            o, aa, bb = xs
+            st, r, cache = apply_op_batch_impl(
+                st, o[None], aa[None], bb[None], acyclic=True,
+                subbatches=1, method=method, cache=cache)
+            return (st, cache), r[0]
+
+        cache0 = closure_cache.empty_cache(state.capacity, dirty=True)
+        (state, _), res = jax.lax.scan(body_cached, (state, cache0),
+                                       (op, a, b))
+        return state, res
+
     def body(st, xs):
         o, aa, bb = xs
         st, r = apply_op_batch_impl(st, o[None], aa[None], bb[None],

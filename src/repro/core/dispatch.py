@@ -73,6 +73,18 @@ protocol rather than calling the module functions directly:
 Both also answer ``scan_sharding`` (the B-sharded vs frontier-sharded
 partial-scan schedule choice) so the sharded engine's acyclic inserts route
 through the same policy object.
+
+Incremental pricing (three-way dispatch)
+----------------------------------------
+`core/closure_cache.py` adds a third check: against a *clean* cached
+closure, a batch costs B^2 bit reads + a B x B closure — zero C-row
+products — strictly below both fixed methods for any shape, so
+``CostModelPolicy.prefer_incremental`` is simply the cache's cleanliness
+(``use_incremental=False`` opts a policy out).  The engine composes the
+two decisions into a traced ``lax.switch``: clean -> incremental, else the
+closure-vs-partial cost model above.  A dirty cache is NOT rebuilt by the
+auto path (rebuilding costs a full closure; the cost model already prices
+that regime) — only ``method="incremental"`` pins lazy rebuilds.
 """
 from __future__ import annotations
 
@@ -84,7 +96,10 @@ import jax.numpy as jnp
 
 from repro.core import bitset
 
-METHODS = ("closure", "partial", "auto")
+METHODS = ("closure", "partial", "auto", "incremental")
+
+# FixedPolicy can pin any concrete algorithm (everything except "auto")
+FIXED_METHODS = ("closure", "partial", "incremental")
 
 # Bias toward the closure's predictable cost unless the partial estimate
 # wins by this factor.
@@ -223,6 +238,7 @@ class CostModelPolicy:
 
     safety_factor: float = SAFETY_FACTOR
     ema_alpha: float = 0.25
+    use_incremental: bool = True
     fixed_method: Optional[str] = dataclasses.field(default=None, init=False)
 
     def prefer_partial(self, adj_packed: jax.Array, batch: int,
@@ -230,10 +246,22 @@ class CostModelPolicy:
         capacity = adj_packed.shape[0]
         est = estimate_deciding_depth(capacity, mean_out_degree(adj_packed))
         if depth_hint is not None:
-            measured = jnp.asarray(depth_hint, jnp.float32)
+            # per-shard EMA vector (or legacy scalar): dispatch on the
+            # deepest measured shard — the conservative depth for the
+            # whole batch; unmeasured shards (0) drop out of the max
+            measured = jnp.max(jnp.asarray(depth_hint, jnp.float32))
             est = jnp.where(measured > 0, measured, est)
         return prefer_partial_with_depth(batch, capacity, est,
                                          self.safety_factor)
+
+    def prefer_incremental(self, cache_dirty: jax.Array) -> jax.Array:
+        """True iff the cycle check should read the incremental closure
+        cache: a clean cache turns the whole check into B^2 bit reads plus
+        a B x B closure — beating both O(C log C) and O(B·depth) row
+        products unconditionally — so "clean" IS the decision."""
+        if not self.use_incremental:
+            return jnp.asarray(False)
+        return ~cache_dirty
 
     def scan_sharding(self, batch: int, capacity: int,
                       n_devices: int) -> str:
@@ -252,14 +280,15 @@ class CostModelPolicy:
 
 @dataclasses.dataclass(frozen=True)
 class FixedPolicy:
-    """Pin one of the paper's algorithms ("closure" or "partial")."""
+    """Pin one concrete algorithm: the paper's "closure" / "partial", or
+    the cache-backed "incremental" (`core/closure_cache.py`)."""
 
     method: str
 
     def __post_init__(self):
-        if self.method not in ("closure", "partial"):
+        if self.method not in FIXED_METHODS:
             raise ValueError(
-                f'FixedPolicy method must be "closure" or "partial", '
+                f"FixedPolicy method must be one of {FIXED_METHODS}, "
                 f"got {self.method!r}")
 
     @property

@@ -18,14 +18,24 @@ Design points:
   sub-batch count, and the boolean-matmul implementation.  No per-call
   ``method=``/``subbatches=``/``matmul_impl=`` threading.
 * **Every mutating call returns ``(engine, OpResult)``** — the engine is a
-  registered pytree whose dynamic leaves are the `DagState` slab plus a
-  measured deciding-depth EMA, so whole sessions ``jit``, ``lax.scan``, and
-  checkpoint like any other jax state.
+  registered pytree whose dynamic leaves are the `DagState` slab, a
+  per-shard measured deciding-depth EMA (float32[S]), and the incremental
+  transitive-closure cache (`core/closure_cache.ClosureCache`), so whole
+  sessions ``jit``, ``lax.scan``, and checkpoint like any other jax state
+  (`ft/checkpoint.save_engine_checkpoint`).
 * **Dispatch is a pluggable policy** (`core/dispatch.DispatchPolicy`):
-  `CostModelPolicy` (the ``method="auto"`` default) prices algorithm 1
-  vs algorithm 2 per batch — seeding its depth estimate from the engine's
-  *measured* deciding-depth EMA once one exists — while
-  `FixedPolicy("closure" | "partial")` pins one algorithm statically.
+  `CostModelPolicy` (the ``method="auto"`` default) short-circuits to the
+  cached O(B) incremental check whenever the closure cache is clean, and
+  otherwise prices algorithm 1 vs algorithm 2 per batch — seeding its
+  depth estimate from the engine's *measured* deciding-depth EMA once one
+  exists — while `FixedPolicy("closure" | "partial" | "incremental")`
+  pins one algorithm statically.
+* **The closure cache amortizes the hot path**: acyclic inserts against a
+  clean cache execute ZERO boolean matmul products (B^2 bit reads + a
+  B x B candidate-hop closure) and fold accepted edges back in with one
+  rank-B update (`kernels/closure_update.py` on TPU, row-sharded on the
+  mesh); deletes invalidate, and the next incremental check (or
+  `refresh_cache`) lazily rebuilds.
 * **The sharded backend routes through the same policy**: acyclic inserts
   dispatch closure-vs-partial exactly like the local backend, and the
   partial scan's schedule (B-sharded vs frontier-sharded,
@@ -46,9 +56,10 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import bitset, dispatch, reachability, snapshot
+from repro.core import bitset, closure_cache, dispatch, reachability, snapshot
 from repro.core import acyclic as acyclic_mod
 from repro.core import dag as dag_mod
+from repro.core.closure_cache import ClosureCache
 from repro.core.dag import (
     ADD_EDGE, ADD_VERTEX, CONTAINS_EDGE, CONTAINS_VERTEX, DagState,
     REMOVE_EDGE, REMOVE_VERTEX,
@@ -119,25 +130,30 @@ class OpBatch(NamedTuple):
 class ReachStats(NamedTuple):
     """Cycle-check work accounting (replaces the ad-hoc stats dicts).
 
-    ``deciding_depth`` is the hop count of the last algorithm-2 check of
-    the call (0 if none ran) — the measurement `CostModelPolicy` folds into
-    the engine's depth EMA.
+    ``deciding_depth`` is int32[S] (S = shard count, 1 on the local
+    backend): the per-shard deciding hop counts of the call's last
+    algorithm-2 check (all-zero if none ran) — the measurement
+    `CostModelPolicy` folds into the engine's per-shard depth-EMA vector.
+    ``n_incremental`` counts sub-batch checks the closure cache decided —
+    with a clean cache those execute ZERO boolean matmul products.
     """
 
     n_products: jax.Array      # int32: boolean matmuls executed
     row_products: jax.Array    # int32: total rows fed through the matmul
     n_partial: jax.Array       # int32: sub-batch checks algorithm 2 decided
-    deciding_depth: jax.Array  # int32: last partial check's hop count
+    n_incremental: jax.Array   # int32: sub-batch checks the cache decided
+    deciding_depth: jax.Array  # int32[S]: last partial check's hop counts
 
     @classmethod
-    def zeros(cls) -> "ReachStats":
+    def zeros(cls, n_shards: int = 1) -> "ReachStats":
         z = jnp.int32(0)
-        return cls(z, z, z, z)
+        return cls(z, z, z, z, jnp.zeros((n_shards,), jnp.int32))
 
     @classmethod
     def from_raw(cls, stats: dict) -> "ReachStats":
         return cls(stats["n_products"], stats["row_products"],
-                   stats["n_partial"], stats["deciding_depth"])
+                   stats["n_partial"], stats["n_incremental"],
+                   stats["deciding_depth"])
 
 
 class OpResult(NamedTuple):
@@ -164,6 +180,13 @@ class EngineConfig:
     matmul_impl: Optional[MatmulImpl] = None
     policy: Optional[dispatch.DispatchPolicy] = None
     mesh: Optional[object] = None  # jax.sharding.Mesh for backend="sharded"
+    # explicit rank-B closure-cache fold-in override (e.g.
+    # `kernels/ops.closure_update` on TPU).  None = derived at call time:
+    # the row-sharded shard_map schedule on backend="sharded", the jnp
+    # reference locally — deriving lazily keeps equal-parameter configs
+    # EQUAL (a baked-in closure would be compared by identity and defeat
+    # jit cache reuse across engines)
+    closure_update_impl: Optional[object] = None
 
     @property
     def n_devices(self) -> int:
@@ -175,12 +198,13 @@ class DagEngine:
     """The unified concurrent-DAG session object.  Immutable: every
     mutating call returns a new engine sharing the static config."""
 
-    __slots__ = ("state", "depth_ema", "config")
+    __slots__ = ("state", "depth_ema", "cache", "config")
 
     def __init__(self, state: DagState, depth_ema: jax.Array,
-                 config: EngineConfig):
+                 cache: ClosureCache, config: EngineConfig):
         self.state = state
-        self.depth_ema = depth_ema
+        self.depth_ema = depth_ema  # float32[S]: per-shard deciding-depth EMA
+        self.cache = cache          # incremental transitive-closure cache
         self.config = config
 
     # ------------------------------------------------------- construction
@@ -190,14 +214,18 @@ class DagEngine:
                method: str = "auto", subbatches: int = 1,
                matmul_impl: Optional[MatmulImpl] = None,
                policy: Optional[dispatch.DispatchPolicy] = None,
-               mesh=None) -> "DagEngine":
+               mesh=None, closure_update_impl=None) -> "DagEngine":
         """Create an empty engine.  ``policy`` overrides ``method``; with
         ``policy=None`` the method string resolves to `CostModelPolicy`
-        ("auto", the default everywhere) or `FixedPolicy`.
+        ("auto", the default everywhere) or `FixedPolicy`
+        ("closure" | "partial" | "incremental").
 
-        ``backend="sharded"`` places the adjacency row-sharded over
-        ``mesh`` (default: all devices, `core/sharded.make_dag_mesh`) and
-        routes partial scans through the explicit collective schedules.
+        ``backend="sharded"`` places the adjacency (and the closure cache)
+        row-sharded over ``mesh`` (default: all devices,
+        `core/sharded.make_dag_mesh`) and routes partial scans and cache
+        updates through the explicit collective schedules.
+        ``closure_update_impl`` overrides the rank-B cache fold-in
+        (`repro.kernels.ops.closure_update` fuses it on TPU).
         """
         if backend not in BACKENDS:
             raise ValueError(
@@ -207,6 +235,10 @@ class DagEngine:
         policy = dispatch.policy_for_method(method, policy)
         method = dispatch.method_name(policy)
         state = dag_mod.new_state(capacity)
+        # a fresh engine's cache is exact: the empty graph's strict closure
+        # is all-zeros, so the session starts clean (O(B) cycle checks from
+        # the first tick)
+        cache = closure_cache.empty_cache(capacity)
         if backend == "sharded":
             from repro.core import sharded as sharded_mod
             mesh = mesh if mesh is not None else sharded_mod.make_dag_mesh()
@@ -217,21 +249,40 @@ class DagEngine:
                     f"{bitset.WORD * n_dev} (32 bits x {n_dev} devices), "
                     f"got {capacity}")
             state = sharded_mod.shard_state(state, mesh)
+            cache = sharded_mod.shard_cache(cache, mesh)
         else:
             mesh = None
         config = EngineConfig(capacity=capacity, backend=backend,
                               method=method, subbatches=subbatches,
                               matmul_impl=matmul_impl, policy=policy,
-                              mesh=mesh)
-        return cls(state, jnp.float32(0.0), config)
+                              mesh=mesh,
+                              closure_update_impl=closure_update_impl)
+        n_dev = config.n_devices
+        return cls(state, jnp.zeros((n_dev,), jnp.float32), cache, config)
 
     @classmethod
     def wrap(cls, state: DagState, config: EngineConfig,
-             depth_ema=None) -> "DagEngine":
+             depth_ema=None, cache=None) -> "DagEngine":
         """Wrap an existing `DagState` slab (e.g. a legacy session) in an
-        engine without copying."""
-        ema = jnp.float32(0.0) if depth_ema is None else depth_ema
-        return cls(state, ema, config)
+        engine without copying.  Without an explicit ``cache`` the closure
+        cache starts DIRTY (the slab's closure is unknown); the first
+        incremental check lazily rebuilds it, or call `refresh_cache`."""
+        ema = jnp.zeros((config.n_devices,), jnp.float32) \
+            if depth_ema is None else depth_ema
+        if cache is None:
+            cache = closure_cache.empty_cache(config.capacity, dirty=True)
+        return cls(state, ema, cache, config)
+
+    def refresh_cache(self) -> "DagEngine":
+        """Rebuild the closure cache from the committed graph iff dirty
+        (a traced ``lax.cond``) — the explicit form of the lazy rebuild,
+        for pre-warming a session before a latency-sensitive window."""
+        closure, _ = closure_cache.refresh_closure(
+            self.cache.closure, self.cache.dirty, self.state.adj,
+            self.config.matmul_impl)
+        return DagEngine(self.state, self.depth_ema,
+                         ClosureCache(closure, jnp.asarray(False)),
+                         self.config)
 
     def with_options(self, *, method: Optional[str] = None,
                      subbatches: Optional[int] = None,
@@ -249,17 +300,17 @@ class DagEngine:
             matmul_impl=cfg.matmul_impl
             if matmul_impl is dataclasses.MISSING else matmul_impl,
             policy=policy)
-        return DagEngine(self.state, self.depth_ema, new)
+        return DagEngine(self.state, self.depth_ema, self.cache, new)
 
     # ------------------------------------------------------------- pytree
 
     def tree_flatten(self):
-        return (self.state, self.depth_ema), self.config
+        return (self.state, self.depth_ema, self.cache), self.config
 
     @classmethod
     def tree_unflatten(cls, config, children):
-        state, depth_ema = children
-        return cls(state, depth_ema, config)
+        state, depth_ema, cache = children
+        return cls(state, depth_ema, cache, config)
 
     def __repr__(self):
         c = self.config
@@ -272,14 +323,51 @@ class DagEngine:
     def capacity(self) -> int:
         return self.config.capacity
 
-    def _with_state(self, state: DagState,
+    def _with_state(self, state: DagState, cache: ClosureCache,
                     stats: Optional[dict] = None) -> "DagEngine":
         ema = self.depth_ema
         if stats is not None:
             update = getattr(self.config.policy, "update_depth_ema", None)
             if update is not None:
+                # per-shard elementwise fold: measured (S,) into EMA (S,)
                 ema = update(ema, stats["deciding_depth"])
-        return DagEngine(state, ema, self.config)
+        return DagEngine(state, ema, cache, self.config)
+
+    def _invalidated_cache(self, state: DagState) -> ClosureCache:
+        """Cache after a mutation that bypassed the incremental fold-in:
+        dirty iff any adjacency bit actually changed (vertex adds and
+        no-op removes keep a clean cache clean).
+
+        Configurations that never READ the cache (FixedPolicy closure/
+        partial, opted-out cost models) skip the O(C*W) adjacency diff and
+        conservatively mark it stale — dirty is always sound, and a later
+        ``with_options(method="incremental")`` view simply lazy-rebuilds.
+        """
+        if not self._cache_aware(self.config.method):
+            return self.cache._replace(dirty=jnp.asarray(True))
+        return self.cache.invalidated_if(
+            jnp.any(state.adj != self.state.adj))
+
+    def _cache_aware(self, method: str) -> bool:
+        """Whether this call threads the closure cache through the cycle
+        check (fixed incremental, or auto with an opted-in policy)."""
+        if method == "incremental":
+            return True
+        return method == "auto" and getattr(
+            self.config.policy, "use_incremental", False)
+
+    def _closure_update_impl(self):
+        """The rank-B cache fold-in for this call: the explicit config
+        override, else the row-sharded schedule on the sharded backend
+        (derived per call, like `partial_scan_matmul_impl`), else None
+        (the jnp reference inside `closure_cache.insert_update`)."""
+        cfg = self.config
+        if cfg.closure_update_impl is not None:
+            return cfg.closure_update_impl
+        if cfg.backend == "sharded":
+            from repro.core import sharded as sharded_mod
+            return sharded_mod.closure_update_impl(cfg.mesh)
+        return None
 
     def _overflow_delta(self, state: DagState) -> jax.Array:
         return state.n_overflow - self.state.n_overflow
@@ -314,37 +402,56 @@ class DagEngine:
         """AddVertex batch -> (engine, OpResult); overflowed adds report
         ok=False and count into ``result.n_overflow``."""
         state, ok = dag_mod.add_vertices(self.state, keys, valid=valid)
-        res = OpResult(ok, self._overflow_delta(state), ReachStats.zeros())
-        return self._with_state(state), res
+        res = OpResult(ok, self._overflow_delta(state),
+                       ReachStats.zeros(self.config.n_devices))
+        # vertex adds never touch adjacency: a clean cache stays clean
+        return self._with_state(state, self.cache), res
 
     def remove_vertices(self, keys, valid=None):
         """RemoveVertex batch (logical+physical removal, incident edges
-        cleared in-step) -> (engine, OpResult)."""
+        cleared in-step) -> (engine, OpResult).  Deletes that clear edges
+        mark the closure cache dirty (lazy rebuild on the next check)."""
         state, ok = dag_mod.remove_vertices(self.state, keys, valid=valid)
-        res = OpResult(ok, self._overflow_delta(state), ReachStats.zeros())
-        return self._with_state(state), res
+        res = OpResult(ok, self._overflow_delta(state),
+                       ReachStats.zeros(self.config.n_devices))
+        return self._with_state(state, self._invalidated_cache(state)), res
 
     # -------------------------------------------------------- edge ops
 
     def add_edges_acyclic(self, us, vs, valid=None):
         """AcyclicAddEdge batch -> (engine, OpResult).  The cycle check is
         dispatched by the configured policy (the measured deciding depth
-        feeds the next dispatch decision via the engine's EMA); the
-        paper's relaxed joint-abort semantics apply within a sub-batch."""
+        feeds the next dispatch decision via the engine's per-shard EMA;
+        a clean closure cache short-circuits to the O(B) incremental
+        check); the paper's relaxed joint-abort semantics apply within a
+        sub-batch."""
         cfg = self.config
         method, prefer, partial_impl = self._dispatch_hooks(us.shape[0])
-        state, ok, stats = acyclic_mod.acyclic_add_edges_impl(
-            self.state, us, vs, valid=valid, subbatches=cfg.subbatches,
-            matmul_impl=cfg.matmul_impl, method=method, with_stats=True,
-            prefer_partial_fn=prefer, partial_matmul_impl=partial_impl)
+        common = dict(valid=valid, subbatches=cfg.subbatches,
+                      matmul_impl=cfg.matmul_impl, method=method,
+                      with_stats=True, prefer_partial_fn=prefer,
+                      partial_matmul_impl=partial_impl,
+                      n_shards=cfg.n_devices)
+        if self._cache_aware(method):
+            state, ok, cache, stats = acyclic_mod.acyclic_add_edges_impl(
+                self.state, us, vs, cache=self.cache,
+                closure_update_impl=self._closure_update_impl(),
+                prefer_incremental_fn=getattr(cfg.policy,
+                                              "prefer_incremental", None),
+                **common)
+        else:
+            state, ok, stats = acyclic_mod.acyclic_add_edges_impl(
+                self.state, us, vs, **common)
+            cache = self._invalidated_cache(state)
         res = OpResult(ok, self._overflow_delta(state),
                        ReachStats.from_raw(stats))
-        return self._with_state(state, stats), res
+        return self._with_state(state, cache, stats), res
 
     def remove_edges(self, us, vs, valid=None):
         state, ok = dag_mod.remove_edges(self.state, us, vs, valid=valid)
-        res = OpResult(ok, self._overflow_delta(state), ReachStats.zeros())
-        return self._with_state(state), res
+        res = OpResult(ok, self._overflow_delta(state),
+                       ReachStats.zeros(self.config.n_devices))
+        return self._with_state(state, self._invalidated_cache(state)), res
 
     # ------------------------------------------------- wait-free reads
 
@@ -367,6 +474,21 @@ class DagEngine:
         cfg = self.config
         b = from_keys.shape[0]
         fixed = getattr(cfg.policy, "fixed_method", None)
+        if fixed == "incremental":
+            # O(1)-per-query read path: a clean cache answers PathExists
+            # with B bit lookups; a dirty cache falls back to the full
+            # algorithm-1 scan (reads cannot return a rebuilt engine)
+            def read(_):
+                f_slot, f_found = dag_mod.lookup_slots(self.state, from_keys)
+                t_slot, t_found = dag_mod.lookup_slots(self.state, to_keys)
+                return f_found & t_found & bitset.bit_get(
+                    self.cache.closure, f_slot, t_slot)
+
+            def scan(_):
+                return reachability.path_exists(self.state, from_keys,
+                                                to_keys, cfg.matmul_impl)
+
+            return jax.lax.cond(self.cache.dirty, scan, read, None)
         if cfg.backend == "sharded":
             if fixed == "closure":
                 # honor the pinned algorithm-1 scan; GSPMD partitions the
@@ -421,11 +543,23 @@ class DagEngine:
         (the paper's unconstrained-graph baseline)."""
         cfg = self.config
         method, prefer, partial_impl = self._dispatch_hooks(batch.size)
-        state, ok, stats = dag_mod.apply_op_batch_impl(
-            self.state, batch.op, batch.a, batch.b, acyclic=acyclic,
-            subbatches=cfg.subbatches, method=method,
-            matmul_impl=cfg.matmul_impl, with_stats=True,
-            prefer_partial_fn=prefer, partial_matmul_impl=partial_impl)
+        common = dict(acyclic=acyclic, subbatches=cfg.subbatches,
+                      method=method, matmul_impl=cfg.matmul_impl,
+                      with_stats=True, prefer_partial_fn=prefer,
+                      partial_matmul_impl=partial_impl,
+                      n_shards=cfg.n_devices)
+        if acyclic and self._cache_aware(method):
+            state, ok, cache, stats = dag_mod.apply_op_batch_impl(
+                self.state, batch.op, batch.a, batch.b, cache=self.cache,
+                closure_update_impl=self._closure_update_impl(),
+                prefer_incremental_fn=getattr(cfg.policy,
+                                              "prefer_incremental", None),
+                **common)
+        else:
+            state, ok, stats = dag_mod.apply_op_batch_impl(
+                self.state, batch.op, batch.a, batch.b, **common)
+            cache = self._invalidated_cache(state)
         res = OpResult(ok, self._overflow_delta(state),
                        ReachStats.from_raw(stats))
-        return self._with_state(state, stats if acyclic else None), res
+        return self._with_state(state, cache,
+                                stats if acyclic else None), res

@@ -86,11 +86,12 @@ def conflicts(state: SgtState, src: jax.Array, dst: jax.Array, valid=None,
     # retire aborted transactions (vertex + incident edges); the remove-ok
     # count deduplicates a txn appearing in several conflicts of one batch
     eng, rem = eng.remove_vertices(src, valid=aborted)
-    # carry the session state (slab + depth EMA) forward under the
-    # scheduler's ORIGINAL config: per-call overrides are views, and a
-    # stable config keeps SgtState a fixed pytree structure for lax.scan
+    # carry the session state (slab + depth EMA + closure cache) forward
+    # under the scheduler's ORIGINAL config: per-call overrides are views,
+    # and a stable config keeps SgtState a fixed pytree structure for
+    # lax.scan
     eng = DagEngine.wrap(eng.state, state.engine.config,
-                         depth_ema=eng.depth_ema)
+                         depth_ema=eng.depth_ema, cache=eng.cache)
     return state._replace(
         engine=eng,
         n_aborted=state.n_aborted + jnp.sum(rem.ok, dtype=jnp.int32)), ok

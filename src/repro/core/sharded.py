@@ -56,6 +56,43 @@ def shard_state(state: DagState, mesh: Mesh) -> DagState:
     )
 
 
+def shard_cache(cache, mesh: Mesh):
+    """Place an incremental closure cache on the mesh: the packed closure
+    rows follow the adjacency's row sharding, the dirty flag replicates."""
+    from repro.core.closure_cache import ClosureCache
+
+    return ClosureCache(
+        closure=jax.device_put(cache.closure,
+                               NamedSharding(mesh, P(AXIS, None))),
+        dirty=jax.device_put(cache.dirty, NamedSharding(mesh, P())),
+    )
+
+
+def closure_update_impl(mesh: Mesh):
+    """Row-sharded rank-B closure-cache fold-in.
+
+    The update ``out[w] = closure[w] | OR_{j: mask[w, j]} rows[j]`` is
+    embarrassingly row-parallel: each device owns a (C/D, W) closure block
+    and the matching (C/D, B/32) mask rows, and the B contributed rows
+    replicate once — so the whole update is one local masked OR-accumulate
+    per device, ZERO collectives (the sharded analogue of
+    `kernels/closure_update.py`).
+    """
+    from repro.core.reachability import bool_matmul_packed
+
+    def impl(closure, mask_packed, rows_packed):
+        def kernel(cl_local, mask_local, rows_full):
+            return cl_local | bool_matmul_packed(mask_local, rows_full)
+
+        return compat.shard_map(
+            kernel, mesh=mesh,
+            in_specs=(P(AXIS, None), P(AXIS, None), P(None, None)),
+            out_specs=P(AXIS, None),
+        )(closure, mask_packed, rows_packed)
+
+    return impl
+
+
 def _or_reduce_gathered(parts: jax.Array) -> jax.Array:
     """(D, ...) uint32 -> OR over axis 0."""
     return jax.lax.reduce(parts, jnp.uint32(0), jax.lax.bitwise_or, (0,))
@@ -196,7 +233,8 @@ def partial_scan_matmul_impl(mesh: Mesh, plan: str):
 def acyclic_add_edges_sharded(mesh: Mesh, state: DagState, us: jax.Array,
                               vs: jax.Array, valid=None,
                               subbatches: int = 1, policy=None,
-                              matmul_impl=None, with_stats: bool = False):
+                              matmul_impl=None, with_stats: bool = False,
+                              cache=None):
     """Sharded-engine AcyclicAddEdge routed through the dispatch policy.
 
     Closure-vs-partial is decided per sub-batch by ``policy`` (default
@@ -205,7 +243,10 @@ def acyclic_add_edges_sharded(mesh: Mesh, state: DagState, us: jax.Array,
     the engine façade (`core/engine.py`, ``backend="sharded"``) is the
     primary caller; this function is the standalone form.  ``matmul_impl``
     drives the closure branch (the partial branch's schedule is owned by
-    the plan).
+    the plan).  Passing ``cache`` (or pinning ``FixedPolicy("incremental")``)
+    threads the incremental closure cache through the check, with the
+    row-sharded rank-B fold-in (`closure_update_impl`) on this mesh; the
+    return then gains the updated cache, exactly like the local impl.
     """
     from repro.core import dispatch as dispatch_mod
 
@@ -222,7 +263,11 @@ def acyclic_add_edges_sharded(mesh: Mesh, state: DagState, us: jax.Array,
         method=fixed or "auto", matmul_impl=matmul_impl,
         with_stats=with_stats,
         prefer_partial_fn=None if fixed else policy.prefer_partial,
-        partial_matmul_impl=partial_scan_matmul_impl(mesh, plan))
+        partial_matmul_impl=partial_scan_matmul_impl(mesh, plan),
+        cache=cache, closure_update_impl=closure_update_impl(mesh),
+        n_shards=int(mesh.devices.size),
+        prefer_incremental_fn=None if fixed
+        else getattr(policy, "prefer_incremental", None))
 
 
 def transitive_closure_sharded(mesh: Mesh, adj: jax.Array) -> jax.Array:

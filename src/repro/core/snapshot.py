@@ -41,7 +41,8 @@ from repro.core.reachability import MatmulImpl, bool_matmul_packed
 def reach_until_decided(adj_packed: jax.Array, sources_packed: jax.Array,
                         target_slots: jax.Array,
                         matmul_impl: Optional[MatmulImpl] = None,
-                        with_stats: bool = False):
+                        with_stats: bool = False,
+                        with_depths: bool = False):
     """Batched decided-early-exit reachability.
 
     hit[b] = True iff a path of >= 1 edge leads from any vertex in
@@ -53,29 +54,37 @@ def reach_until_decided(adj_packed: jax.Array, sources_packed: jax.Array,
 
     With ``with_stats`` also returns the number of boolean matmul products
     executed (each over B = sources rows); used by the algo1-vs-algo2
-    benchmark comparison.
+    benchmark comparison.  ``with_depths`` (implies stats) additionally
+    returns the per-query deciding hop int32[B] — the hop at which each
+    query's frontier was killed (hit or died; 0 for never-seeded rows) —
+    the per-shard depth measurement the engine's EMA vector consumes.
     """
     impl = matmul_impl or bool_matmul_packed
     b = sources_packed.shape[0]
     rows = jnp.arange(b)
 
     def cond(carry):
-        _, frontier, _, _ = carry
+        _, frontier, _, _, _ = carry
         return jnp.any(frontier != 0)
 
     def body(carry):
-        reach, frontier, hit, n = carry
+        reach, frontier, hit, n, decided_at = carry
+        alive = jnp.any(frontier != 0, axis=-1)
         nxt = impl(frontier, adj_packed)
         new = nxt & ~reach
         reach = reach | new
         hit = hit | bitset.bit_get(reach, rows, target_slots)
         # kill decided frontiers: no further expansion for answered queries
         frontier = jnp.where(hit[:, None], jnp.uint32(0), new)
-        return reach, frontier, hit, n + 1
+        decided = alive & ~jnp.any(frontier != 0, axis=-1)
+        decided_at = jnp.where(decided, n + 1, decided_at)
+        return reach, frontier, hit, n + 1, decided_at
 
     init = (jnp.zeros_like(sources_packed), sources_packed,
-            jnp.zeros((b,), bool), jnp.int32(0))
-    _, _, hit, n_products = jax.lax.while_loop(cond, body, init)
+            jnp.zeros((b,), bool), jnp.int32(0), jnp.zeros((b,), jnp.int32))
+    _, _, hit, n_products, decided_at = jax.lax.while_loop(cond, body, init)
+    if with_depths:
+        return hit, n_products, decided_at
     if with_stats:
         return hit, n_products
     return hit
@@ -84,7 +93,8 @@ def reach_until_decided(adj_packed: jax.Array, sources_packed: jax.Array,
 def partial_cycle_check(adj_packed: jax.Array, u_slots: jax.Array,
                         v_slots: jax.Array, cand: jax.Array,
                         matmul_impl: Optional[MatmulImpl] = None,
-                        with_stats: bool = False):
+                        with_stats: bool = False,
+                        with_depths: bool = False):
     """cyc[b] = True iff a path v_slots[b] -> u_slots[b] exists in
     ``adj_packed`` and cand[b] — i.e. candidate edge (u, v) would close a
     cycle.  Non-candidate rows get zero seed bitsets (dead frontiers), so
@@ -93,7 +103,8 @@ def partial_cycle_check(adj_packed: jax.Array, u_slots: jax.Array,
     src = bitset.onehot_rows(v_slots, c)
     src = jnp.where(cand[:, None], src, jnp.uint32(0))
     return reach_until_decided(adj_packed, src, u_slots, matmul_impl,
-                               with_stats=with_stats)
+                               with_stats=with_stats,
+                               with_depths=with_depths)
 
 
 def path_exists_partial(state: DagState, from_keys: jax.Array,

@@ -1,5 +1,6 @@
 from repro.ft.checkpoint import (  # noqa: F401
     CheckpointManager, save_checkpoint, restore_checkpoint, latest_step,
+    save_engine_checkpoint, restore_engine_checkpoint,
 )
 from repro.ft.straggler import StragglerMonitor  # noqa: F401
 from repro.ft.elastic import reshard_tree  # noqa: F401

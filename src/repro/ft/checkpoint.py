@@ -99,6 +99,33 @@ def restore_checkpoint(directory: str, like: Any, step: Optional[int] = None,
     return tree
 
 
+def save_engine_checkpoint(directory: str, step: int, engine) -> str:
+    """Checkpoint a whole `repro.api.DagEngine` session.
+
+    The engine is a registered pytree whose dynamic leaves are the full
+    session state — adjacency slab, key table, overflow counter, the
+    per-shard deciding-depth EMA, and the incremental closure cache with
+    its dirty flag — so the generic atomic writer captures everything the
+    dispatch policy has learned, not just the graph."""
+    return save_checkpoint(directory, step, engine)
+
+
+def restore_engine_checkpoint(directory: str, like, step: Optional[int] = None,
+                              shardings: Any = None):
+    """Restore a `DagEngine` session into the structure of ``like`` (an
+    engine built with the SAME `EngineConfig` — the config is static pytree
+    aux data and is not serialized).  ``shardings`` re-places leaves for a
+    different mesh, exactly like `restore_checkpoint`; on the sharded
+    backend pass the sharding tree of the target engine.
+
+    Returns the restored engine; a session resumed from it continues
+    identically — including the closure cache, so no warm-up rebuild is
+    paid after restart (round-trip pinned in tests/test_closure_cache.py).
+    """
+    return restore_checkpoint(directory, like, step=step,
+                              shardings=shardings)
+
+
 class CheckpointManager:
     """Async checkpointing with bounded queue + keep-last-k retention."""
 

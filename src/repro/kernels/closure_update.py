@@ -1,0 +1,75 @@
+"""Fused rank-B transitive-closure update: mask-select -> OR-accumulate -> pack.
+
+The incremental closure cache (`core/closure_cache.py`) folds an accepted
+batch of B edges into the cached closure with one rank-B boolean update:
+
+    out[w] = closure[w]  |  OR over {j : mask[w, j]} rows[j]
+
+where ``mask[w, j]`` says "vertex w reaches accepted edge j's source" and
+``rows[j]`` is the packed reach-row the edge contributes
+(``closure[v_j] | onehot(v_j)``, with the intra-batch edge chaining already
+folded in by the caller).  The unfused jnp composition materializes an f32
+(C, C) count matrix in HBM before thresholding and then reads the old
+closure back for the OR; this kernel keeps the (bm, bn) product tile in
+VMEM, ORs the old closure block in the epilogue, and writes only packed
+uint32 words — the same 32x HBM write cut as `kernels/bitmm.py`, plus the
+closure read is fused instead of a second pass.
+
+Layout: closure (C, C/32) uint32, mask (C, B/32) uint32 (B = padded batch,
+a multiple of 32), rows (B, C/32) uint32 -> out (C, C/32) uint32.
+Blocking mirrors `bitmm.py`: full-K panels (K = B is small — the candidate
+batch), grid over (C/bm, C/bn).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# the in-kernel bit layout must match bitmm's exactly (LSB-first words) —
+# share its helpers rather than redeclare them
+from repro.kernels.bitmm import WORD, _pack_bool, _unpack_f32
+
+
+def _closure_update_kernel(closure_ref, mask_ref, rows_ref, out_ref):
+    m = _unpack_f32(mask_ref[...])           # (bm, B)   select bits
+    r = _unpack_f32(rows_ref[...])           # (B, bn)   contributed rows
+    acc = jax.lax.dot_general(
+        m, r, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)  # (bm, bn) OR-accumulate on MXU
+    out_ref[...] = closure_ref[...] | _pack_bool(acc > 0)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
+def closure_update(closure_packed: jax.Array, mask_packed: jax.Array,
+                   rows_packed: jax.Array, *, bm: int = 128, bn: int = 256,
+                   interpret: bool = False) -> jax.Array:
+    """closure (C, C/32) | mask (C, B/32) x rows (B, C/32) -> (C, C/32)."""
+    c, w = closure_packed.shape
+    c2, wb = mask_packed.shape
+    b, w2 = rows_packed.shape
+    assert c2 == c and w2 == w and wb * WORD == b, (
+        closure_packed.shape, mask_packed.shape, rows_packed.shape)
+    bm = min(bm, c)
+    bn = min(bn, w * WORD)
+    if c % bm != 0:
+        bm = c
+    if (w * WORD) % bn != 0:
+        bn = w * WORD  # capacities only guarantee 32-alignment, not 256
+    assert c % bm == 0 and (w * WORD) % bn == 0 and bn % WORD == 0
+    bwn = bn // WORD
+    grid = (c // bm, (w * WORD) // bn)
+    return pl.pallas_call(
+        _closure_update_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bwn), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, wb), lambda i, j: (i, 0)),
+            pl.BlockSpec((b, bwn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bwn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((c, w), jnp.uint32),
+        interpret=interpret,
+    )(closure_packed, mask_packed, rows_packed)

@@ -11,6 +11,7 @@ from __future__ import annotations
 import jax
 
 from repro.kernels import bitmm as _bitmm
+from repro.kernels import closure_update as _closure_update
 from repro.kernels import embbag as _embbag
 from repro.kernels import flashattn as _flash
 from repro.kernels import ref as _ref
@@ -33,6 +34,19 @@ def bitmm_packed(lhs_packed, rhs_packed, *, impl: str = "auto"):
         return _ref.bitmm_ref(lhs_packed, rhs_packed)
     return _bitmm.bitmm(lhs_packed, rhs_packed,
                         interpret=impl == "pallas_interpret")
+
+
+def closure_update(closure_packed, mask_packed, rows_packed, *,
+                   impl: str = "auto"):
+    """Fused rank-B transitive-closure update (incremental-cache hot spot):
+    out[w] = closure[w] | OR_{j: mask[w, j]} rows[j], all packed uint32."""
+    impl = _resolve(impl)
+    if impl == "ref":
+        return _ref.closure_update_ref(closure_packed, mask_packed,
+                                       rows_packed)
+    return _closure_update.closure_update(
+        closure_packed, mask_packed, rows_packed,
+        interpret=impl == "pallas_interpret")
 
 
 def embedding_bag(table, idx, weights, *, impl: str = "auto"):

@@ -17,6 +17,18 @@ def bitmm_ref(lhs_packed: jax.Array, rhs_packed: jax.Array) -> jax.Array:
     return bitset.pack_bits((lhs @ rhs) > 0)
 
 
+def closure_update_ref(closure_packed: jax.Array, mask_packed: jax.Array,
+                       rows_packed: jax.Array) -> jax.Array:
+    """Rank-B closure update: out[w] = closure[w] | OR_{j: mask[w,j]} rows[j].
+
+    closure (C, C/32), mask (C, B/32), rows (B, C/32) -> (C, C/32).
+    The fused kernel ORs the old closure block in the matmul epilogue and
+    writes only packed words; this reference composes the same result from
+    the unfused bitmm.
+    """
+    return closure_packed | bitmm_ref(mask_packed, rows_packed)
+
+
 def embbag_ref(table: jax.Array, idx: jax.Array,
                weights: jax.Array) -> jax.Array:
     """Embedding bag: table (R, D), idx (B, K), weights (B, K) -> (B, D).

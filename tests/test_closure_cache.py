@@ -1,0 +1,465 @@
+"""Incremental transitive-closure cache tests (`core/closure_cache.py`,
+`method="incremental"`, the engine cache plumbing).
+
+Pins the tentpole contracts:
+  1. incremental decisions are IDENTICAL to the paper's two algorithms on
+     random mixed streams (including intra-batch joint aborts), and the
+     cache equals the from-scratch `transitive_closure` after every op;
+  2. with a clean cache an acyclic insert batch executes ZERO boolean
+     matmul products (the acceptance criterion, asserted via stats);
+  3. deletes mark the cache dirty and the next check lazily rebuilds —
+     charged as closure products — leaving a clean, exact cache;
+  4. `method="auto"` three-way dispatch: clean cache -> incremental,
+     dirty cache -> the PR-2 closure-vs-partial cost model;
+  5. `reachable` answers from the cache in O(1) reads when clean and falls
+     back to the full scan when dirty (identical answers);
+  6. engine-native checkpointing round-trips a whole session — slab,
+     per-shard depth EMA, closure cache and dirty flag.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import (ClosureCache, CostModelPolicy, DagEngine, FixedPolicy,
+                       OpBatch)
+from repro.core import bitset, closure_cache, dag, reachability
+from repro.core.oracle import SeqGraph, apply_op_batch_oracle
+
+CAP = 64
+OP_CODES = [dag.REMOVE_VERTEX, dag.ADD_VERTEX, dag.REMOVE_EDGE,
+            dag.ADD_EDGE, dag.CONTAINS_VERTEX, dag.CONTAINS_EDGE]
+
+
+def arr(xs, dtype=jnp.int32):
+    return jnp.asarray(xs, dtype)
+
+
+def _rand_batch(rng, n=6, key_space=12) -> OpBatch:
+    return OpBatch(jnp.asarray(rng.choice(OP_CODES, n), jnp.int32),
+                   jnp.asarray(rng.integers(0, key_space, n), jnp.int32),
+                   jnp.asarray(rng.integers(0, key_space, n), jnp.int32))
+
+
+def _assert_cache_exact(eng: DagEngine):
+    """A clean cache must equal the from-scratch strict closure."""
+    assert bool(closure_cache.cache_matches_state(eng.cache, eng.state.adj))
+
+
+# ------------------------------------------- equivalence with the paper
+
+def test_incremental_matches_fixed_methods_on_mixed_streams():
+    for seed in range(4):
+        rng = np.random.default_rng(900 + seed)
+        eng_i = DagEngine.create(CAP, method="incremental")
+        eng_c = DagEngine.create(CAP, method="closure")
+        g = SeqGraph(capacity=CAP)
+        for _ in range(6):
+            batch = _rand_batch(rng)
+            eng_i, r_i = eng_i.apply(batch)
+            eng_c, r_c = eng_c.apply(batch)
+            want = apply_op_batch_oracle(
+                g, np.asarray(batch.op), np.asarray(batch.a),
+                np.asarray(batch.b), acyclic=True, method="partial")
+            np.testing.assert_array_equal(np.asarray(r_i.ok), want)
+            np.testing.assert_array_equal(np.asarray(r_i.ok),
+                                          np.asarray(r_c.ok))
+            np.testing.assert_array_equal(np.asarray(eng_i.state.adj),
+                                          np.asarray(eng_c.state.adj))
+            assert bool(eng_i.is_acyclic())
+            _assert_cache_exact(eng_i)
+
+
+def test_intra_batch_joint_abort():
+    """Cycles that only exist through the batch's other transit edges must
+    be caught by the candidate-hop construction (closure[v, u] alone would
+    accept both halves of a 2-cycle)."""
+    eng = DagEngine.create(CAP, method="incremental")
+    eng, _ = eng.add_vertices(arr([0, 1, 2]))
+    eng, r = eng.add_edges_acyclic(arr([0, 1]), arr([1, 0]))
+    assert r.ok.tolist() == [False, False]
+    assert bool(eng.is_acyclic())
+    assert int(eng.edge_count()) == 0
+    _assert_cache_exact(eng)
+    # and the 3-cycle through an edge already committed
+    eng, r = eng.add_edges_acyclic(arr([0]), arr([1]))
+    assert r.ok.tolist() == [True]
+    eng, r = eng.add_edges_acyclic(arr([1, 2]), arr([2, 0]))
+    assert r.ok.tolist() == [False, False]  # jointly close 0->1->2->0
+    _assert_cache_exact(eng)
+
+
+def test_subbatches_sequential_priority():
+    eng = DagEngine.create(CAP, method="incremental", subbatches=3)
+    eng, _ = eng.add_vertices(arr([1, 2, 3]))
+    eng, r = eng.add_edges_acyclic(arr([1, 2, 3]), arr([2, 3, 1]))
+    assert r.ok.tolist() == [True, True, False]  # earlier sub-batches win
+    assert int(r.stats.n_incremental) == 3
+    _assert_cache_exact(eng)
+
+
+# ------------------------------------------------ the acceptance criterion
+
+def test_clean_cache_executes_zero_products():
+    eng = DagEngine.create(CAP, method="incremental")
+    eng, _ = eng.add_vertices(jnp.arange(16, dtype=jnp.int32))
+    eng, r = eng.add_edges_acyclic(arr([0, 1, 2, 3]), arr([1, 2, 3, 4]))
+    assert bool(jnp.all(r.ok))
+    assert int(r.stats.n_products) == 0
+    assert int(r.stats.row_products) == 0
+    assert int(r.stats.n_incremental) == 1
+    assert not bool(eng.cache.dirty)
+    _assert_cache_exact(eng)
+    # stays zero as the session keeps inserting
+    eng, r = eng.add_edges_acyclic(arr([4, 5]), arr([5, 6]))
+    assert int(r.stats.row_products) == 0
+    _assert_cache_exact(eng)
+
+
+def test_delete_invalidates_and_check_lazily_rebuilds():
+    eng = DagEngine.create(CAP, method="incremental")
+    eng, _ = eng.add_vertices(jnp.arange(8, dtype=jnp.int32))
+    eng, _ = eng.add_edges_acyclic(arr([0, 1, 2]), arr([1, 2, 3]))
+    assert not bool(eng.cache.dirty)
+    eng, r = eng.remove_edges(arr([1]), arr([2]))
+    assert bool(r.ok[0]) and bool(eng.cache.dirty)
+    # the next check pays one rebuild (charged as closure products) and
+    # leaves the cache clean and exact
+    eng, r = eng.add_edges_acyclic(arr([3]), arr([0]))
+    assert r.ok.tolist() == [True]  # 0->1 edge gone, no cycle anymore
+    assert int(r.stats.n_products) > 0
+    assert int(r.stats.n_incremental) == 1
+    assert not bool(eng.cache.dirty)
+    _assert_cache_exact(eng)
+    # vertex removal (with incident edges) also invalidates
+    eng, _ = eng.remove_vertices(arr([3]))
+    assert bool(eng.cache.dirty)
+    # ...but a no-op removal keeps a clean cache clean
+    eng = eng.refresh_cache()
+    eng, r = eng.remove_vertices(arr([42]))
+    assert not bool(r.ok[0]) and not bool(eng.cache.dirty)
+    # and removing an edge-free vertex does not touch adjacency either
+    eng, _ = eng.add_vertices(arr([50]))
+    eng, r = eng.remove_vertices(arr([50]))
+    assert bool(r.ok[0]) and not bool(eng.cache.dirty)
+
+
+def test_refresh_cache_is_idempotent_and_traced():
+    eng = DagEngine.create(CAP, method="incremental")
+    eng, _ = eng.add_vertices(jnp.arange(8, dtype=jnp.int32))
+    eng, _ = eng.add_edges_acyclic(arr([0, 1]), arr([1, 2]))
+    eng, _ = eng.remove_edges(arr([0]), arr([1]))
+    warm = jax.jit(lambda e: e.refresh_cache())(eng)
+    assert not bool(warm.cache.dirty)
+    _assert_cache_exact(warm)
+    again = warm.refresh_cache()
+    np.testing.assert_array_equal(np.asarray(again.cache.closure),
+                                  np.asarray(warm.cache.closure))
+
+
+# ------------------------------------------------- auto three-way dispatch
+
+def test_auto_uses_cache_when_clean_and_cost_model_when_dirty():
+    eng = DagEngine.create(CAP)  # auto: CostModelPolicy(use_incremental=True)
+    eng, _ = eng.add_vertices(jnp.arange(16, dtype=jnp.int32))
+    eng, r = eng.add_edges_acyclic(arr([0, 1]), arr([1, 2]))
+    assert int(r.stats.n_incremental) == 1  # clean cache -> incremental
+    assert int(r.stats.row_products) == 0
+    _assert_cache_exact(eng)
+    eng, _ = eng.remove_edges(arr([0]), arr([1]))
+    assert bool(eng.cache.dirty)
+    eng, r = eng.add_edges_acyclic(arr([3]), arr([4]))
+    # dirty -> the PR-2 two-way cost model (auto does NOT pay a rebuild)
+    assert int(r.stats.n_incremental) == 0
+    assert int(r.stats.n_partial) + int(r.stats.n_products) > 0
+    # opting out pins the old behavior even with a clean cache
+    eng2 = DagEngine.create(CAP,
+                            policy=CostModelPolicy(use_incremental=False))
+    eng2, _ = eng2.add_vertices(arr([1, 2]))
+    eng2, r2 = eng2.add_edges_acyclic(arr([1]), arr([2]))
+    assert int(r2.stats.n_incremental) == 0
+
+
+def test_closure_branch_opportunistically_refreshes_auto_cache():
+    """An auto closure-branch check with zero rejects computes exactly the
+    new committed graph's closure — the cache comes back clean for free."""
+    eng = DagEngine.create(CAP)
+    eng, _ = eng.add_vertices(jnp.arange(48, dtype=jnp.int32))
+    eng, r = eng.add_edges_acyclic(arr([0]), arr([1]))
+    assert bool(r.ok[0]) and not bool(eng.cache.dirty)
+    eng, _ = eng.remove_edges(arr([0]), arr([1]))
+    assert bool(eng.cache.dirty)
+    # a capacity-sized forward-edge batch on the sparse graph: the dirty
+    # cache sends auto to the closure branch (B >= C/2), every insert is a
+    # forward edge so zero rejects -> the cache refreshes in place
+    us = arr(np.arange(CAP, dtype=np.int32) % 47)
+    vs = arr((np.arange(CAP, dtype=np.int32) % 47) + 1)
+    eng, r = eng.add_edges_acyclic(us, vs)
+    assert int(r.stats.n_partial) == 0 and int(r.stats.n_incremental) == 0
+    assert bool(jnp.all(r.ok))
+    assert not bool(eng.cache.dirty)
+    _assert_cache_exact(eng)
+
+
+# --------------------------------------------------- O(1) reachable reads
+
+def test_reachable_reads_cache_when_clean():
+    eng = DagEngine.create(CAP, method="incremental")
+    eng, _ = eng.add_vertices(jnp.arange(8, dtype=jnp.int32))
+    eng, _ = eng.add_edges_acyclic(arr([0, 1, 2]), arr([1, 2, 3]))
+    f = arr([0, 3, 5, 0])
+    t = arr([3, 0, 6, 42])
+    want = reachability.path_exists(eng.state, f, t)
+    np.testing.assert_array_equal(np.asarray(eng.reachable(f, t)),
+                                  np.asarray(want))
+    # dirty cache falls back to the full scan — same answers
+    eng, _ = eng.remove_edges(arr([1]), arr([2]))
+    assert bool(eng.cache.dirty)
+    want = reachability.path_exists(eng.state, f, t)
+    np.testing.assert_array_equal(np.asarray(eng.reachable(f, t)),
+                                  np.asarray(want))
+
+
+# ------------------------------------------------------- module-level API
+
+def test_standalone_incremental_call_builds_own_cache():
+    from repro.core import acyclic
+    st = dag.new_state(CAP)
+    st, _ = dag.add_vertices(st, jnp.arange(8, dtype=jnp.int32))
+    st2, ok, cache = acyclic.acyclic_add_edges_impl(
+        st, arr([0, 1]), arr([1, 2]), method="incremental")
+    assert ok.tolist() == [True, True]
+    assert isinstance(cache, ClosureCache) and not bool(cache.dirty)
+    assert bool(closure_cache.cache_matches_state(cache, st2.adj))
+    st3, ok3 = dag.apply_op_sequential(
+        st, arr([dag.ADD_EDGE, dag.ADD_EDGE]), arr([0, 1]), arr([1, 2]),
+        acyclic=True)
+    np.testing.assert_array_equal(np.asarray(st2.adj), np.asarray(st3.adj))
+
+
+def test_mixed_batch_impl_incremental_without_cache():
+    """`dag.apply_op_batch_impl(acyclic=True, method="incremental")` with
+    no cache passed must auto-create one and return it (regression: the
+    unpacking used to key on `cache is not None` and crashed)."""
+    st = dag.new_state(CAP)
+    st, _ = dag.add_vertices(st, jnp.arange(8, dtype=jnp.int32))
+    op = arr([dag.ADD_EDGE, dag.ADD_EDGE])
+    a, b = arr([0, 1]), arr([1, 0])
+    st2, ok, cache = dag.apply_op_batch_impl(st, op, a, b, acyclic=True,
+                                             method="incremental")
+    assert ok.tolist() == [False, False]  # joint 2-cycle abort
+    assert isinstance(cache, ClosureCache) and not bool(cache.dirty)
+    st3, ok3, cache3, stats = dag.apply_op_batch_impl(
+        st, op, a, b, acyclic=True, method="incremental", with_stats=True)
+    np.testing.assert_array_equal(np.asarray(ok3), np.asarray(ok))
+    st4, ok4 = dag.apply_op_batch_impl(st, op, a, b, acyclic=True,
+                                       method="closure")
+    np.testing.assert_array_equal(np.asarray(st2.adj), np.asarray(st4.adj))
+
+
+def test_non_cache_aware_engine_marks_stale_and_view_rebuilds():
+    """Fixed closure/partial engines never read the cache: mutations mark
+    it stale without the O(C*W) adjacency diff, and an incremental view
+    created later lazily rebuilds to an exact cache."""
+    eng = DagEngine.create(CAP, policy=FixedPolicy("partial"))
+    eng, _ = eng.add_vertices(jnp.arange(8, dtype=jnp.int32))
+    eng, r = eng.add_edges_acyclic(arr([0, 1]), arr([1, 2]))
+    assert bool(jnp.all(r.ok))
+    assert bool(eng.cache.dirty)  # conservatively stale, never read
+    view = eng.with_options(method="incremental")
+    view, r = view.add_edges_acyclic(arr([2]), arr([3]))
+    assert bool(r.ok[0]) and int(r.stats.n_products) > 0  # lazy rebuild
+    assert not bool(view.cache.dirty)
+    _assert_cache_exact(view)
+
+
+def test_sequential_baseline_supports_incremental():
+    """`dag.apply_op_sequential(method="incremental")` threads one cache
+    through the op chain (regression: the scan body used to crash on the
+    cached return arity) and decides exactly like the closure baseline."""
+    st = dag.new_state(CAP)
+    st, _ = dag.add_vertices(st, jnp.arange(8, dtype=jnp.int32))
+    op = arr([dag.ADD_EDGE] * 4)
+    a, b = arr([0, 1, 2, 3]), arr([1, 2, 3, 0])
+    st_i, ok_i = dag.apply_op_sequential(st, op, a, b, acyclic=True,
+                                         method="incremental")
+    st_c, ok_c = dag.apply_op_sequential(st, op, a, b, acyclic=True,
+                                         method="closure")
+    np.testing.assert_array_equal(np.asarray(ok_i), np.asarray(ok_c))
+    np.testing.assert_array_equal(np.asarray(st_i.adj), np.asarray(st_c.adj))
+    assert ok_i.tolist() == [True, True, True, False]  # sequential: no
+    # false positives; only the cycle-closing 3->0 aborts
+
+
+def test_policy_prefer_incremental_is_the_dispatch_hook():
+    """A policy overriding prefer_incremental controls the traced cached
+    short-circuit (regression: the hook used to be dead code)."""
+    import dataclasses as dc
+
+    @dc.dataclass(frozen=True)
+    class NeverIncremental(CostModelPolicy):
+        def prefer_incremental(self, cache_dirty):
+            del cache_dirty
+            return jnp.asarray(False)
+
+    eng = DagEngine.create(CAP, policy=NeverIncremental())
+    eng, _ = eng.add_vertices(jnp.arange(8, dtype=jnp.int32))
+    eng, r = eng.add_edges_acyclic(arr([0, 1]), arr([1, 2]))
+    # clean cache, but the policy said no -> the cost model ran instead
+    assert int(r.stats.n_incremental) == 0
+    assert int(r.stats.n_partial) + int(r.stats.n_products) > 0
+
+
+def test_kernel_handles_non_pow2_capacity():
+    """closure_update must accept any 32-aligned capacity (regression: the
+    bn blocking asserted for C > 256 not divisible by 256)."""
+    from repro.kernels import ops as kops, ref as kref
+    rng = np.random.default_rng(17)
+    c, b = 320, 32
+    closure = bitset.pack_bits(jnp.asarray(rng.random((c, c)) < 0.05))
+    mask = bitset.pack_bits(jnp.asarray(rng.random((c, b)) < 0.2))
+    rows = bitset.pack_bits(jnp.asarray(rng.random((b, c)) < 0.1))
+    got = kops.closure_update(closure, mask, rows, impl="pallas_interpret")
+    np.testing.assert_array_equal(
+        np.asarray(got),
+        np.asarray(kref.closure_update_ref(closure, mask, rows)))
+
+
+def test_update_impl_matches_default():
+    """The kernels-routed update impl is a drop-in for the jnp default."""
+    from repro.kernels import ops as kops
+    rng = np.random.default_rng(11)
+    a = rng.random((CAP, CAP)) < 0.05
+    np.fill_diagonal(a, False)
+    closure = reachability.transitive_closure(
+        bitset.pack_bits(jnp.asarray(np.triu(a))))
+    u = arr(rng.integers(0, CAP, 8))
+    v = arr(rng.integers(0, CAP, 8))
+    acc = jnp.asarray(rng.random(8) < 0.7)
+    want = closure_cache.insert_update(closure, u, v, acc)
+    got = closure_cache.insert_update(
+        closure, u, v, acc,
+        update_impl=lambda c, m, r: kops.closure_update(c, m, r, impl="ref"))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ----------------------------------------------- engine-native checkpoint
+
+def test_engine_checkpoint_roundtrip(tmp_path):
+    from repro.ft import restore_engine_checkpoint, save_engine_checkpoint
+    rng = np.random.default_rng(13)
+    eng = DagEngine.create(CAP, method="incremental", subbatches=2)
+    eng, _ = eng.add_vertices(jnp.arange(12, dtype=jnp.int32))
+    eng, _ = eng.add_edges_acyclic(arr([0, 1, 2, 3]), arr([1, 2, 3, 4]))
+    eng, _ = eng.remove_edges(arr([1]), arr([2]))  # leave a DIRTY cache
+    save_engine_checkpoint(str(tmp_path), 7, eng)
+
+    template = DagEngine.create(CAP, method="incremental", subbatches=2)
+    got = restore_engine_checkpoint(str(tmp_path), template)
+    assert isinstance(got, DagEngine)
+    assert got.config == eng.config
+    for name in ("keys", "alive", "adj", "n_overflow"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(got.state, name)),
+            np.asarray(getattr(eng.state, name)))
+    np.testing.assert_array_equal(np.asarray(got.depth_ema),
+                                  np.asarray(eng.depth_ema))
+    np.testing.assert_array_equal(np.asarray(got.cache.closure),
+                                  np.asarray(eng.cache.closure))
+    assert bool(got.cache.dirty) == bool(eng.cache.dirty) is True
+    # the restored session continues identically (incl. the lazy rebuild)
+    us = arr(rng.integers(0, 12, 4))
+    vs = arr(rng.integers(0, 12, 4))
+    eng2, r_a = eng.add_edges_acyclic(us, vs)
+    got2, r_b = got.add_edges_acyclic(us, vs)
+    np.testing.assert_array_equal(np.asarray(r_a.ok), np.asarray(r_b.ok))
+    np.testing.assert_array_equal(np.asarray(eng2.cache.closure),
+                                  np.asarray(got2.cache.closure))
+
+
+# ------------------------------------------------- per-shard depth EMAs
+
+def test_depth_ema_is_per_shard_vector():
+    eng = DagEngine.create(CAP)
+    assert eng.depth_ema.shape == (1,)  # local backend: one shard
+    from repro.core import sharded
+    mesh = sharded.make_dag_mesh(jax.devices()[:1])
+    eng_s = DagEngine.create(CAP, backend="sharded", mesh=mesh)
+    assert eng_s.depth_ema.shape == (mesh.devices.size,)
+    # stats carry the per-shard deciding-depth vector
+    pol = CostModelPolicy(use_incremental=False)
+    eng = DagEngine.create(CAP, policy=pol)
+    eng, _ = eng.add_vertices(jnp.arange(8, dtype=jnp.int32))
+    eng, r = eng.add_edges_acyclic(arr([0, 1, 2]), arr([1, 2, 3]))
+    assert r.stats.deciding_depth.shape == (1,)
+    assert float(eng.depth_ema[0]) == float(r.stats.deciding_depth[0]) > 0
+    # the policy dispatches on the deepest measured shard
+    hint = jnp.asarray([2.0, 0.0], jnp.float32)
+    assert bool(pol.prefer_partial(eng.state.adj, 48, depth_hint=hint))
+    deep = jnp.asarray([2.0, 1e6], jnp.float32)
+    assert not bool(pol.prefer_partial(eng.state.adj, 48, depth_hint=deep))
+
+
+# --------------------------------------------------- hypothesis property
+
+@pytest.mark.parametrize("seed", range(2))
+def test_randomized_insert_delete_query_equivalence(seed):
+    """Randomized session: after EVERY op batch the incremental engine
+    matches a closure-method engine bit for bit and its clean cache equals
+    the from-scratch closure (delete-triggered rebuilds included)."""
+    rng = np.random.default_rng(7000 + seed)
+    eng_i = DagEngine.create(CAP, method="incremental")
+    eng_c = DagEngine.create(CAP, method="closure")
+    saw_rebuild = False
+    for _ in range(10):
+        batch = _rand_batch(rng, n=8, key_space=10)
+        eng_i, r_i = eng_i.apply(batch)
+        eng_c, r_c = eng_c.apply(batch)
+        np.testing.assert_array_equal(np.asarray(r_i.ok),
+                                      np.asarray(r_c.ok))
+        np.testing.assert_array_equal(np.asarray(eng_i.state.adj),
+                                      np.asarray(eng_c.state.adj))
+        # products under fixed incremental == a delete-triggered lazy
+        # rebuild inside the AddEdge phase (post-call the cache is clean
+        # again — the rebuild is in-step by design)
+        saw_rebuild |= int(r_i.stats.n_products) > 0
+        assert not bool(eng_i.cache.dirty)
+        _assert_cache_exact(eng_i)
+        f = arr(rng.integers(0, 10, 6))
+        t = arr(rng.integers(0, 10, 6))
+        np.testing.assert_array_equal(np.asarray(eng_i.reachable(f, t)),
+                                      np.asarray(eng_c.reachable(f, t)))
+    assert saw_rebuild  # the stream must actually exercise invalidation
+
+
+def test_hypothesis_cache_equivalence():
+    pytest.importorskip(
+        "hypothesis",
+        reason="property tests need the dev extra (pip install -e .[dev])")
+    from hypothesis import given, settings, strategies as st
+
+    op_strategy = st.tuples(
+        st.sampled_from([dag.REMOVE_VERTEX, dag.ADD_VERTEX, dag.REMOVE_EDGE,
+                         dag.ADD_EDGE]),
+        st.integers(min_value=0, max_value=9),
+        st.integers(min_value=0, max_value=9))
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.lists(op_strategy, min_size=1, max_size=18))
+    def run(ops):
+        eng = DagEngine.create(CAP, method="incremental")
+        g = SeqGraph(capacity=CAP)
+        for i in range(0, len(ops), 6):
+            chunk = ops[i:i + 6]
+            op = jnp.asarray([o for o, _, _ in chunk], jnp.int32)
+            a = jnp.asarray([x for _, x, _ in chunk], jnp.int32)
+            b = jnp.asarray([y for _, _, y in chunk], jnp.int32)
+            eng, r = eng.apply(OpBatch(op, a, b))
+            want = apply_op_batch_oracle(g, np.asarray(op), np.asarray(a),
+                                         np.asarray(b), acyclic=True,
+                                         method="partial")
+            np.testing.assert_array_equal(np.asarray(r.ok), want)
+            _assert_cache_exact(eng)
+        assert bool(eng.is_acyclic())
+
+    run()

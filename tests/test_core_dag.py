@@ -31,6 +31,26 @@ def test_popcount():
         np.asarray(bitset.popcount(packed)), bits.sum(-1))
 
 
+def test_popcount_lax_matches_swar_reference():
+    """`bitset.popcount` now lowers to `jax.lax.population_count` (via the
+    `repro.compat` shim); the retired hand-rolled SWAR path stays as the
+    reference, bit-for-bit equal on every word pattern."""
+    from repro import compat
+    rng = np.random.default_rng(2)
+    words = jnp.asarray(
+        rng.integers(0, 2**32, (16, 8), dtype=np.uint64).astype(np.uint32))
+    edge = jnp.asarray([[0, 0xFFFFFFFF, 0x80000000, 1, 0x55555555,
+                         0xAAAAAAAA, 0x01010101, 0xF0F0F0F0]], jnp.uint32)
+    for packed in (words, edge):
+        np.testing.assert_array_equal(
+            np.asarray(bitset.popcount(packed)),
+            np.asarray(bitset.popcount_swar(packed)))
+        # the compat shim's fallback agrees with lax per-word too
+        np.testing.assert_array_equal(
+            np.asarray(compat.population_count(packed)),
+            np.asarray(compat._population_count_swar(packed)))
+
+
 def test_scatter_set_clear_bits_duplicates():
     packed = jnp.zeros((CAP, CAP // 32), jnp.uint32)
     rows = arr([3, 3, 3, 5, 5])

@@ -151,7 +151,8 @@ def test_engine_jit_matches_eager():
     np.testing.assert_array_equal(np.asarray(r_j.ok), np.asarray(r_e.ok))
     np.testing.assert_array_equal(np.asarray(eng_j.state.adj),
                                   np.asarray(eng_e.state.adj))
-    assert float(eng_j.depth_ema) == float(eng_e.depth_ema)
+    np.testing.assert_array_equal(np.asarray(eng_j.depth_ema),
+                                  np.asarray(eng_e.depth_ema))
 
 
 def test_scanned_sgt_session_compiles_once():
@@ -184,8 +185,8 @@ def test_scanned_sgt_session_compiles_once():
                                       np.asarray(res["accepted"]))
     assert int(final.n_begun) == int(state_e.n_begun)
     assert int(final.n_aborted) == int(state_e.n_aborted)
-    assert float(final.engine.depth_ema) == \
-        pytest.approx(float(state_e.engine.depth_ema))
+    assert float(final.engine.depth_ema[0]) == \
+        pytest.approx(float(state_e.engine.depth_ema[0]))
     assert bool(reachability.is_acyclic(final.graph.adj))
 
 
@@ -231,7 +232,7 @@ def test_apply_op_batch_plumbs_matmul_impl_and_stats():
                                         acyclic=True, method="partial")
     np.testing.assert_array_equal(np.asarray(res), np.asarray(res3))
     assert set(stats) == {"n_products", "rows_per_product", "row_products",
-                          "n_partial", "deciding_depth"}
+                          "n_partial", "n_incremental", "deciding_depth"}
     # non-acyclic path: zero stats, same keys
     _, _, stats0 = dag.apply_op_batch_impl(st, batch.op, batch.a, batch.b,
                                            with_stats=True)
@@ -253,23 +254,27 @@ def test_overflow_surfaces_in_opresult():
 # -------------------------------------------- measured-depth feedback
 
 def test_depth_ema_seeds_and_updates():
-    eng = DagEngine.create(CAP)
-    assert float(eng.depth_ema) == 0.0
+    # use_incremental=False: a clean cache would otherwise short-circuit
+    # the partial path this test measures (the EMA feedback loop matters
+    # exactly when the cache is not clean)
+    eng = DagEngine.create(CAP,
+                           policy=CostModelPolicy(use_incremental=False))
+    assert float(eng.depth_ema[0]) == 0.0
     eng, _ = eng.add_vertices(jnp.arange(8, dtype=jnp.int32))
     # chain 0->1->2->3: the partial check of 3->0's candidate scans depth 3
     eng, r = eng.add_edges_acyclic(arr([0, 1, 2]), arr([1, 2, 3]))
     assert int(r.stats.n_partial) == 1
-    first = float(eng.depth_ema)
-    assert first == float(r.stats.deciding_depth) > 0  # seeded, not blended
+    first = float(eng.depth_ema[0])
+    assert first == float(r.stats.deciding_depth[0]) > 0  # seeded, not blended
     eng2, r2 = eng.add_edges_acyclic(arr([3]), arr([0]))
     alpha = CostModelPolicy().ema_alpha
-    want = (1 - alpha) * first + alpha * float(r2.stats.deciding_depth)
-    assert float(eng2.depth_ema) == pytest.approx(want)
+    want = (1 - alpha) * first + alpha * float(r2.stats.deciding_depth[0])
+    assert float(eng2.depth_ema[0]) == pytest.approx(want)
     # a closure-decided call leaves the EMA untouched
     eng3 = DagEngine.create(CAP, method="closure")
     eng3, _ = eng3.add_vertices(arr([1, 2]))
     eng3, _ = eng3.add_edges_acyclic(arr([1]), arr([2]))
-    assert float(eng3.depth_ema) == 0.0
+    assert float(eng3.depth_ema[0]) == 0.0
 
 
 def test_measured_depth_overrides_density_guess():

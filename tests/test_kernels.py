@@ -40,6 +40,49 @@ def test_bitmm_agrees_with_core_reachability():
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
+# -------------------------------------------------------- closure_update
+
+@pytest.mark.parametrize("c,b", [
+    (128, 32),
+    (256, 64),
+    (512, 256),
+    (1024, 32),
+])
+@pytest.mark.parametrize("density", [0.0, 0.05, 0.5])
+def test_closure_update_matches_ref(c, b, density):
+    rng = np.random.default_rng(c + b)
+    closure = bitset.pack_bits(jnp.asarray(rng.random((c, c)) < density))
+    mask = bitset.pack_bits(jnp.asarray(rng.random((c, b)) < 0.2))
+    rows = bitset.pack_bits(jnp.asarray(rng.random((b, c)) < 0.1))
+    want = ref.closure_update_ref(closure, mask, rows)
+    got = ops.closure_update(closure, mask, rows, impl="pallas_interpret")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_closure_update_agrees_with_incremental_cache():
+    """The kernel is a drop-in update_impl for the closure cache."""
+    from repro.core import closure_cache, dag, reachability
+    rng = np.random.default_rng(5)
+    cap = 128
+    st = dag.new_state(cap)
+    st, _ = dag.add_vertices(st, jnp.arange(64, dtype=jnp.int32))
+    pairs = rng.integers(0, 64, (80, 2))
+    pairs = pairs[pairs[:, 0] != pairs[:, 1]]
+    st, _ = dag.add_edges(
+        st, jnp.asarray(np.minimum(pairs[:, 0], pairs[:, 1]), jnp.int32),
+        jnp.asarray(np.maximum(pairs[:, 0], pairs[:, 1]), jnp.int32))
+    closure = reachability.transitive_closure(st.adj)
+    u = jnp.asarray(rng.integers(0, 64, 16), jnp.int32)
+    v = jnp.asarray(rng.integers(0, 64, 16), jnp.int32)
+    acc = jnp.asarray(rng.random(16) < 0.6)
+    want = closure_cache.insert_update(closure, u, v, acc)
+    got = closure_cache.insert_update(
+        closure, u, v, acc,
+        update_impl=lambda c, m, r: ops.closure_update(
+            c, m, r, impl="pallas_interpret"))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
 # ---------------------------------------------------------------- embbag
 
 @pytest.mark.parametrize("rows,d,b,k", [

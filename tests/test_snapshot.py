@@ -163,19 +163,22 @@ def test_partial_fewer_row_products_on_sparse_small_batch():
     assert int(s2["row_products"]) < int(s1["row_products"])
 
 
-def test_both_methods_accept_pallas_dispatch_matmul():
-    """`kernels.ops.bitmm_packed` (ref on CPU, Pallas on TPU) drives both
-    reachability algorithms."""
+def test_all_methods_accept_pallas_dispatch_matmul():
+    """`kernels.ops.bitmm_packed` (ref on CPU, Pallas on TPU) drives every
+    reachability method (the incremental path uses it for rebuilds; its
+    return additionally carries the closure cache)."""
     st = dag.new_state(CAP)
     st, _ = dag.add_vertices(st, arr([1, 2, 3]))
     for method in acyclic.METHODS:
-        st_m, ok = acyclic.acyclic_add_edges_impl(
+        st_m, ok, *rest = acyclic.acyclic_add_edges_impl(
             st, arr([1, 2]), arr([2, 3]), method=method,
             matmul_impl=ops.bitmm_packed)
         assert bool(jnp.all(ok))
-        _, ok = acyclic.acyclic_add_edges_impl(
+        assert len(rest) == (1 if method == "incremental" else 0)
+        _, ok, *_ = acyclic.acyclic_add_edges_impl(
             st_m, arr([3]), arr([1]), method=method,
-            matmul_impl=ops.bitmm_packed)
+            matmul_impl=ops.bitmm_packed,
+            cache=rest[0] if rest else None)
         assert not bool(ok[0])
 
 
