@@ -60,6 +60,26 @@ def closure_update_rows():
     return rows
 
 
+def closure_delete_rows():
+    rows = []
+    rng = np.random.default_rng(3)
+    fn = jax.jit(ref.closure_delete_ref)
+    for c, aff_frac in ((1024, 0.10), (2048, 0.05), (4096, 0.05)):
+        r = bitset.pack_bits(jnp.asarray(rng.random((c, c)) < 0.05))
+        s = bitset.pack_bits(jnp.asarray(rng.random((c, c)) < 0.05))
+        aff = bitset.pack_bits(jnp.asarray(rng.random(c) < aff_frac))
+        t = _time(fn, r, s, aff)
+        # the fused kernel writes packed words once instead of an f32
+        # product + a masked read-modify-write OR pass over the rows —
+        # and skips the matmul for row blocks with no affected row
+        unfused = c * c * 4 + 2 * (c * c // 8)
+        fused = c * c // 8
+        rows.append((f"closure_delete_C{c}_aff{int(aff_frac * 100)}pct",
+                     t * 1e6,
+                     f"fused_traffic_saving={unfused / fused:.0f}x"))
+    return rows
+
+
 def embbag_rows():
     rows = []
     rng = np.random.default_rng(1)
@@ -89,5 +109,5 @@ def flash_rows():
 
 
 def all_rows():
-    return (bitmm_rows() + closure_update_rows() + embbag_rows()
-            + flash_rows())
+    return (bitmm_rows() + closure_update_rows() + closure_delete_rows()
+            + embbag_rows() + flash_rows())

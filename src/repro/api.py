@@ -21,7 +21,7 @@ The SGT scheduler application (`SgtState` & friends) and the low-level
 from repro.core.engine import (  # noqa: F401
     BACKENDS, DagEngine, EngineConfig, OpBatch, OpResult, ReachStats,
 )
-from repro.core.closure_cache import ClosureCache  # noqa: F401
+from repro.core.closure_cache import CacheDelta, ClosureCache  # noqa: F401
 from repro.core.dispatch import (  # noqa: F401
     METHODS, DispatchPolicy, CostModelPolicy, FixedPolicy,
     choose_method, choose_scan_sharding, prefer_partial,

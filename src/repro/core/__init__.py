@@ -12,6 +12,8 @@ Building blocks and legacy surface:
                      method="closure"|"partial"|"auto" picks algorithm 1,
                      algorithm 2, or cost-model dispatch between them)
   choose_method / prefer_partial (the "auto" cost model, core/dispatch.py)
+  CacheDelta / commit / affected_rows / masked_delete_scan (the closure
+                     cache's delta-commit pipeline, core/closure_cache.py)
   path_exists / reach_sets / transitive_closure / is_acyclic (algorithm 1)
   reach_until_decided / partial_cycle_check / path_exists_partial
                      (algorithm 2: partial-snapshot scoped scans)
@@ -27,8 +29,9 @@ from repro.core.dag import (  # noqa: F401
 )
 from repro.core.acyclic import acyclic_add_edges, METHODS  # noqa: F401
 from repro.core.closure_cache import (  # noqa: F401
-    ClosureCache, cache_matches_state, empty_cache, incremental_cycle_check,
-    insert_update, rebuild_cache,
+    CacheDelta, ClosureCache, affected_rows, cache_matches_state, commit,
+    empty_cache, incremental_cycle_check, insert_update, masked_delete_scan,
+    rebuild_cache,
 )
 from repro.core.dispatch import (  # noqa: F401
     choose_method, choose_scan_sharding, prefer_partial,

@@ -24,8 +24,10 @@ identical ok bits — only the work differs):
   "incremental"  `core/closure_cache.py`: B^2 bit reads against the cached
                  closure of the committed graph plus a B x B candidate-hop
                  closure — ZERO C-row products when the cache is clean; an
-                 accepted batch folds back in as one rank-B update, a dirty
-                 cache (edge/vertex deletes) lazily rebuilds first.
+                 accepted batch folds back in as one rank-B update (the add
+                 side of the delta-commit pipeline, fused here with the
+                 check), a dirty cache (a delete the commit chose not to
+                 repair) lazily rebuilds first.
   "auto"         Adaptive dispatch (`core/dispatch.py`): clean cache ->
                  incremental, else the cost model prices closure vs partial
                  from B, C, and a popcount density estimate; under jit the
@@ -254,7 +256,10 @@ def acyclic_add_edges_impl(
             step, carry0, (us_r, vs_r, valid_r))
     state = state._replace(adj=adj)
     oks = oks.reshape(b)
-    out_cache = ClosureCache(closure_f, dirty_f) if cached else None
+    # the insert scan never runs a delete repair: the repair-depth EMA
+    # rides through unchanged
+    out_cache = ClosureCache(closure_f, dirty_f, cache.repair_ema) \
+        if cached else None
     if not with_stats:
         return (state, oks, out_cache) if cached else (state, oks)
     # deciding depth of the LAST sub-batch check algorithm 2 decided: the
@@ -270,6 +275,7 @@ def acyclic_add_edges_impl(
              "n_partial": jnp.sum(chose == CHOSE_PARTIAL, dtype=jnp.int32),
              "n_incremental": jnp.sum(chose == CHOSE_INCREMENTAL,
                                       dtype=jnp.int32),
+             "n_repair": jnp.int32(0),  # insert checks never delete-repair
              "deciding_depth": deciding_depth}
     if cached:
         return state, oks, out_cache, stats

@@ -16,27 +16,48 @@ arXiv:2310.02380):
     on a cycle of ``G ∪ transit`` iff the strict closure of A has bit
     (i, i).  Total work: B^2 bit reads plus a B x B boolean closure — ZERO
     C-row boolean matmul products.
-  * **Update** — an accepted batch folds into the cache with one rank-B
-    boolean update: every vertex w that reaches an accepted edge's source u
-    gains that edge's contribution ``closure[v] | onehot(v)``; chains of
-    accepted edges are pre-composed through the hop graph's
-    reflexive-transitive closure, so the update is exact in one shot
-    (`kernels/closure_update.py` fuses it on TPU).
-  * **Deletes invalidate** — edge/vertex removals mark the cache dirty
-    (maintaining a closure under deletion is a different problem: paths
-    through the removed vertex must be *re-derived*, not just cleared);
-    the next incremental check lazily rebuilds via `transitive_closure`
-    and the session is back to O(B) checks.
+  * **Commit** — every mutation reaches the cache as a typed `CacheDelta`
+    (edges added, edges removed, vertex columns cleared) applied through
+    the single `commit` entry point:
+      - *adds* fold in with one rank-B boolean update: every vertex w that
+        reaches an accepted edge's source u gains that edge's contribution
+        ``closure[v] | onehot(v)``; chains of accepted edges are
+        pre-composed through the hop graph's reflexive-transitive closure,
+        so the update is exact in one shot (`kernels/closure_update.py`
+        fuses it on TPU).
+      - *removes* are maintained by **affected-region re-derivation**: the
+        rows whose reach sets can shrink are exactly the ancestors of each
+        removed edge's source (plus the source itself) — read in O(1) per
+        row off the packed closure's COLUMN bits — and only those rows are
+        re-derived by a bounded masked scan (`masked_delete_scan`) whose
+        hop matrix jumps through unaffected rows' still-exact closure rows
+        in one step (`kernels/closure_delete.py` fuses the hop on TPU; the
+        sharded schedule runs it with zero per-hop collectives).  Vertex
+        removals are the same repair seeded at the removed slot: its
+        ancestors re-derive without the cleared column, and the slot's own
+        row zeroes out — so the slot is safe to recycle immediately.
+      - the *delete dispatch arm* (`dispatch.prefer_delete_repair`, wired
+        by the engine's policy) weighs the affected-row count against the
+        full rebuild's C·log2(C) rows; when repair would not pay, the
+        commit falls back to invalidation and the next incremental check
+        lazily rebuilds via `transitive_closure` — the two routes are
+        decision-identical, only the work differs.
+
+The cache additionally carries ``repair_ema`` — the EMA of measured
+delete-repair scan depths — which sharpens the repair-vs-rebuild pricing
+the same way the engine's deciding-depth EMA sharpens closure-vs-partial
+(and round-trips through `ft/checkpoint.py` with the rest of the cache).
 
 Equivalence (pinned by tests/test_closure_cache.py): for every batch the
 incremental check rejects exactly the candidates algorithm 1 rejects —
 a path v_i -> u_i in ``G ∪ transit`` either uses no transit edge (the
 ``closure[v_i, u_i]`` bit) or decomposes into committed-graph segments
-between transit edges j1..jk, i.e. a cycle through i in the hop graph.
+between transit edges j1..jk, i.e. a cycle through i in the hop graph —
+and a delete-maintained cache equals the from-scratch closure bit for bit.
 """
 from __future__ import annotations
 
-from typing import Callable, NamedTuple, Optional
+from typing import Callable, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -50,22 +71,34 @@ from repro.core.reachability import (MatmulImpl, closure_iteration_bound,
 # realization; the default composes the jnp reference inline.
 ClosureUpdateImpl = Callable[[jax.Array, jax.Array, jax.Array], jax.Array]
 
+# delete_impl signature: (adj_after (C, W), closure (C, W), affected
+# bool[C]) -> (closure' (C, W), n_products int32, row_products int32).
+# `masked_delete_scan` is the jnp default (its per-hop product can be the
+# fused `kernels/ops.closure_delete`); `sharded.closure_delete_impl` is
+# the row-sharded zero-collective schedule.
+DeleteScanImpl = Callable[[jax.Array, jax.Array, jax.Array], Tuple]
+
 
 class ClosureCache(NamedTuple):
     """The packed strict transitive closure of the committed graph, plus a
-    staleness flag.  ``dirty=True`` means ``closure`` may be stale (an edge
-    or vertex was deleted, or the slab was wrapped from unknown state) and
-    must be rebuilt before its bits are trusted."""
+    staleness flag and the measured repair-depth EMA.  ``dirty=True`` means
+    ``closure`` may be stale (a delete was not maintained, or the slab was
+    wrapped from unknown state) and must be rebuilt before its bits are
+    trusted."""
 
-    closure: jax.Array  # uint32[C, W]: strict closure (paths of >= 1 edge)
-    dirty: jax.Array    # bool[]: True -> rebuild before use
+    closure: jax.Array     # uint32[C, W]: strict closure (paths of >= 1 edge)
+    dirty: jax.Array       # bool[]: True -> rebuild before use
+    repair_ema: jax.Array  # float32[]: EMA of measured delete-repair scan
+    #                        depths (0 = unseeded) — the delete dispatch
+    #                        arm's depth estimate
 
     @property
     def capacity(self) -> int:
         return self.closure.shape[0]
 
     def invalidated_if(self, changed) -> "ClosureCache":
-        """Mark dirty when ``changed`` (traced bool) — the delete path."""
+        """Mark dirty when ``changed`` (traced bool) — the fallback for
+        mutations that bypass the delta-commit pipeline."""
         return self._replace(dirty=self.dirty | changed)
 
 
@@ -75,14 +108,14 @@ def empty_cache(capacity: int, dirty: bool = False) -> ClosureCache:
     conservative wrap of an existing slab of unknown closure."""
     w = bitset.n_words(capacity)
     return ClosureCache(jnp.zeros((capacity, w), jnp.uint32),
-                        jnp.asarray(dirty))
+                        jnp.asarray(dirty), jnp.zeros((), jnp.float32))
 
 
 def rebuild_cache(adj_packed: jax.Array,
                   matmul_impl: Optional[MatmulImpl] = None) -> ClosureCache:
     """From-scratch rebuild: the lazy-revalidation (and test-oracle) path."""
     return ClosureCache(transitive_closure(adj_packed, matmul_impl),
-                        jnp.asarray(False))
+                        jnp.asarray(False), jnp.zeros((), jnp.float32))
 
 
 def refresh_closure(closure: jax.Array, dirty: jax.Array,
@@ -99,6 +132,195 @@ def refresh_closure(closure: jax.Array, dirty: jax.Array,
         return closure, jnp.int32(0)
 
     return jax.lax.cond(dirty, rebuild, keep, None)
+
+
+# ------------------------------------------------------------ typed deltas
+
+def _empty_slots():
+    return jnp.zeros((0,), jnp.int32)
+
+
+def _empty_mask():
+    return jnp.zeros((0,), bool)
+
+
+class CacheDelta(NamedTuple):
+    """The typed mutation record every engine mutator emits.
+
+    All masks are *adjacency-diff exact*: a row participates only if the
+    mutation actually flipped adjacency bits (the edge existed and was
+    cleared — first occurrence of a duplicated pair only; the removed
+    vertex had at least one incident edge).  No-op and repeated removals
+    therefore commit as empty deltas and leave a clean cache clean, at
+    zero repair cost.
+    """
+
+    add_u: jax.Array       # int32[Ba]: accepted edge sources (slots)
+    add_v: jax.Array       # int32[Ba]: accepted edge targets (slots)
+    add_mask: jax.Array    # bool[Ba]: which rows fold in
+    rem_u: jax.Array       # int32[Br]: removed edge sources (slots)
+    rem_v: jax.Array       # int32[Br]: removed edge targets (slots)
+    rem_mask: jax.Array    # bool[Br]: which rows actually cleared a bit
+    clear_slots: jax.Array  # int32[Bc]: removed-vertex slots (row+col clear)
+    clear_mask: jax.Array   # bool[Bc]: which removals touched adjacency
+
+    @classmethod
+    def empty(cls) -> "CacheDelta":
+        e, m = _empty_slots(), _empty_mask()
+        return cls(e, e, m, e, e, m, e, m)
+
+    @classmethod
+    def edges_added(cls, u_slots, v_slots, mask) -> "CacheDelta":
+        e, m = _empty_slots(), _empty_mask()
+        return cls(u_slots, v_slots, mask, e, e, m, e, m)
+
+    @classmethod
+    def edges_removed(cls, u_slots, v_slots, mask) -> "CacheDelta":
+        e, m = _empty_slots(), _empty_mask()
+        return cls(e, e, m, u_slots, v_slots, mask, e, m)
+
+    @classmethod
+    def vertices_cleared(cls, slots, mask) -> "CacheDelta":
+        e, m = _empty_slots(), _empty_mask()
+        return cls(e, e, m, e, e, m, slots, mask)
+
+    def removal_seeds(self):
+        """(seeds int32[Br+Bc], mask bool[Br+Bc]): the slots whose ancestor
+        rows need re-derivation.  A removed edge (u, v) can only shrink the
+        reach sets of u's ancestors (and u); a removed vertex r can only
+        shrink the reach sets of r's ancestors (and r) — every in-neighbor
+        of r IS such an ancestor, so one seed covers row and column clears
+        alike."""
+        return (jnp.concatenate([self.rem_u, self.clear_slots]),
+                jnp.concatenate([self.rem_mask, self.clear_mask]))
+
+
+def affected_rows(closure: jax.Array, seeds: jax.Array,
+                  mask: jax.Array) -> jax.Array:
+    """bool[C]: rows whose reach sets a removal at ``seeds`` can shrink —
+    the union over enabled seeds s of (ancestors of s, read off the packed
+    closure's COLUMN bits: one gather + shift per seed) plus s itself."""
+    c = closure.shape[0]
+    if seeds.shape[0] == 0:
+        return jnp.zeros((c,), bool)
+    word = seeds >> 5
+    shift = (seeds & 31).astype(jnp.uint32)
+    anc = ((closure[:, word] >> shift[None, :]) & jnp.uint32(1)) != 0  # (C,B)
+    is_seed = jnp.arange(c, dtype=jnp.int32)[:, None] == seeds[None, :]
+    return jnp.any((anc | is_seed) & mask[None, :], axis=1)
+
+
+def masked_delete_scan(adj_after: jax.Array, closure: jax.Array,
+                       affected: jax.Array, hop_impl=None):
+    """Re-derive the affected rows of a delete-maintained closure.
+
+    The scan's hop matrix ``S = where(affected, adj_after, closure)`` lets
+    a frontier jump through an UNAFFECTED row's still-exact closure row in
+    one step (those rows are fixed points: everything they reach is already
+    transitively closed), so the fixpoint ``R <- R | R @ S`` from ``R = S``
+    converges at the depth of the longest chain through *affected* vertices
+    — the bounded masked scan, not a full re-closure.  Unaffected rows pass
+    through unchanged.
+
+    ``hop_impl`` overrides one hop: (R (C, W), S (C, W), affected_packed
+    (W,)) -> next R — `kernels/ops.closure_delete` fuses the masked
+    product + OR + pack on TPU.
+
+    Returns (closure', n_products, row_products) where row_products counts
+    only the affected rows each product re-derives (the comparable work
+    unit `benchmarks/compare.py` gates against the rebuild's C-row
+    products).
+    """
+    from repro.core.reachability import bool_matmul_packed
+
+    s = jnp.where(affected[:, None], adj_after, closure)
+    affp = bitset.pack_bits(affected)
+    if hop_impl is None:
+        def hop_impl(r, s_, aff_packed):
+            del aff_packed
+            return jnp.where(affected[:, None],
+                             r | bool_matmul_packed(r, s_), r)
+
+    def cond(carry):
+        _, _, changed = carry
+        return changed
+
+    def body(carry):
+        r, i, _ = carry
+        rn = hop_impl(r, s, affp)
+        return rn, i + 1, jnp.any(rn != r)
+
+    r, n, _ = jax.lax.while_loop(
+        cond, body, (s, jnp.int32(0), jnp.any(affected)))
+    n_aff = jnp.sum(affected, dtype=jnp.int32)
+    return r, n, n * n_aff
+
+
+def commit(cache: ClosureCache, delta: CacheDelta, adj_after: jax.Array, *,
+           update_impl: Optional[ClosureUpdateImpl] = None,
+           delete_impl: Optional[DeleteScanImpl] = None,
+           prefer_repair_fn=None, ema_alpha: float = 0.25,
+           with_stats: bool = False):
+    """The single entry point applying a typed `CacheDelta` to the cache.
+
+    Delete side first (a phase's removals precede its adds in the
+    linearization): on a clean cache with any adjacency-touching removal,
+    ``prefer_repair_fn(n_affected, repair_ema)`` (default:
+    `dispatch.prefer_delete_repair` — the cost model's fourth arm) picks
+    between the masked affected-row re-derivation (cache stays CLEAN) and
+    invalidation (lazy rebuild at the next check).  A dirty cache commits
+    removals as a no-op — there is nothing to maintain.  Adds then fold in
+    with the rank-B `insert_update` (skipped on a dirty cache).
+
+    Returns ``cache'`` — or ``(cache', stats)`` with ``with_stats``, where
+    stats counts the repair's products/row-products and whether a repair
+    ran (``n_repair``); invalidation costs zero here (its rebuild is
+    charged where it happens, at the next incremental check).
+    """
+    closure, dirty, ema = cache.closure, cache.dirty, cache.repair_ema
+    z = jnp.int32(0)
+    n_products, row_products, n_repair = z, z, z
+    seeds, smask = delta.removal_seeds()
+    if seeds.shape[0]:
+        any_removed = jnp.any(smask)
+        affected = affected_rows(closure, seeds, smask)
+        n_aff = jnp.sum(affected, dtype=jnp.int32)
+        if prefer_repair_fn is None:
+            from repro.core import dispatch
+            capacity = closure.shape[0]
+
+            def prefer_repair_fn(n, depth_hint):
+                return dispatch.prefer_delete_repair(n, capacity, depth_hint)
+
+        scan = delete_impl if delete_impl is not None else masked_delete_scan
+        do_repair = ~dirty & any_removed & prefer_repair_fn(n_aff, ema)
+
+        def repair(args):
+            cl, em = args
+            cl2, n, rows = scan(adj_after, cl, affected)
+            d = n.astype(jnp.float32)
+            em2 = jnp.where(em > 0,
+                            (1.0 - ema_alpha) * em + ema_alpha * d, d)
+            return cl2, jnp.asarray(False), em2, n, rows, jnp.int32(1)
+
+        def invalidate(args):
+            cl, em = args
+            return cl, dirty | any_removed, em, z, z, z
+
+        closure, dirty, ema, n_products, row_products, n_repair = \
+            jax.lax.cond(do_repair, repair, invalidate, (closure, ema))
+    if delta.add_u.shape[0]:
+        def fold(cl):
+            return insert_update(cl, delta.add_u, delta.add_v,
+                                 delta.add_mask, update_impl)
+
+        closure = jax.lax.cond(dirty | ~jnp.any(delta.add_mask),
+                               lambda cl: cl, fold, closure)
+    out = ClosureCache(closure, dirty, ema)
+    if with_stats:
+        return out, {"n_products": n_products, "row_products": row_products,
+                     "n_repair": n_repair}
+    return out
 
 
 # --------------------------------------------------- candidate hop graph
@@ -162,7 +384,9 @@ def insert_update(closure: jax.Array, u_slots: jax.Array,
                   v_slots: jax.Array, accepted: jax.Array,
                   update_impl: Optional[ClosureUpdateImpl] = None
                   ) -> jax.Array:
-    """Fold a jointly-acyclic accepted edge batch into the strict closure.
+    """Fold a jointly-acyclic accepted edge batch into the strict closure
+    (the add side of `commit`; `core/acyclic.py` calls it fused with the
+    incremental check, one fold per sub-batch).
 
     new[w, x] = old[w, x]  |  exists accepted edges j1..jk (k >= 1) with
                 w ->G* u_{j1}, chained targets->sources through G, and

@@ -106,12 +106,33 @@ def add_vertices(state: DagState, keys: jax.Array, valid=None):
 def remove_vertices(state: DagState, keys: jax.Array, valid=None):
     """RemoveVertex batch: logical+physical removal, plus the paper's
     RemoveIncomingEdges as a single masked column clear. Returns (state, ok)."""
+    state, rem, _ = remove_vertices_delta(state, keys, valid=valid)
+    return state, rem
+
+
+def remove_vertices_delta(state: DagState, keys: jax.Array, valid=None):
+    """`remove_vertices` that additionally emits the typed `CacheDelta`
+    for the delta-commit pipeline (`core/closure_cache.commit`).  The
+    delta mask is adjacency-diff exact: only removals whose slot had at
+    least one incident edge (a nonzero out-row or in-column) seed a cache
+    repair — removing an edge-free vertex commits as a no-op and leaves a
+    clean cache clean.  Returns (state, ok, delta)."""
+    from repro.core.closure_cache import CacheDelta
+
     valid = _valid(valid, keys)
     c = state.capacity
     slot, found = lookup_slots(state, keys)
     first = bitset._first_occurrence(
         jnp.where(valid & found, keys, -jnp.arange(keys.shape[0]) - 2))
     rem = valid & found & first
+    # adjacency-touching test on the PRE-removal slab (slot is garbage for
+    # non-removed rows — masked out by ``rem`` below)
+    out_any = jnp.any(state.adj[jnp.where(rem, slot, 0)] != 0, axis=-1)
+    word = slot >> 5
+    shift = (slot & 31).astype(jnp.uint32)
+    col_bits = (state.adj[:, word] >> shift[None, :]) & jnp.uint32(1)
+    in_any = jnp.any(col_bits != 0, axis=0)
+    touched = rem & (out_any | in_any)
     tgt = jnp.where(rem, slot, c)
     alive_new = state.alive.at[tgt].set(False, mode="drop")
     keys_new = state.keys.at[tgt].set(EMPTY_KEY, mode="drop")
@@ -120,7 +141,7 @@ def remove_vertices(state: DagState, keys: jax.Array, valid=None):
     adj_new = jnp.where(removed_row[:, None], jnp.uint32(0), state.adj)
     adj_new = adj_new & ~colmask[None, :]
     state = state._replace(keys=keys_new, alive=alive_new, adj=adj_new)
-    return state, rem
+    return state, rem, CacheDelta.vertices_cleared(slot, touched)
 
 
 # ------------------------------------------------------------------- edges
@@ -136,12 +157,33 @@ def add_edges(state: DagState, us: jax.Array, vs: jax.Array, valid=None):
 
 
 def remove_edges(state: DagState, us: jax.Array, vs: jax.Array, valid=None):
+    state, ok, _ = remove_edges_delta(state, us, vs, valid=valid)
+    return state, ok
+
+
+def remove_edges_delta(state: DagState, us: jax.Array, vs: jax.Array,
+                       valid=None):
+    """`remove_edges` that additionally emits the typed `CacheDelta` for
+    the delta-commit pipeline (`core/closure_cache.commit`).  The delta
+    mask is adjacency-diff exact: only removals whose bit was actually set
+    (edge present pre-batch, first occurrence of a duplicated pair) seed a
+    cache repair — no-op and repeated removals commit as empty deltas and
+    leave a clean cache clean.  ``ok`` keeps the sequential spec (True for
+    live endpoints whether or not the edge existed).  Returns
+    (state, ok, delta)."""
+    from repro.core.closure_cache import CacheDelta
+
     valid = _valid(valid, us)
     u_slot, u_found = lookup_slots(state, us)
     v_slot, v_found = lookup_slots(state, vs)
     ok = valid & u_found & v_found
+    existed = bitset.bit_get(state.adj, u_slot, v_slot)
+    first = bitset._dedupe_enabled(u_slot, v_slot, ok & existed,
+                                   state.capacity)
+    cleared = ok & existed & first
     adj = bitset.scatter_clear_bits(state.adj, u_slot, v_slot, ok)
-    return state._replace(adj=adj), ok
+    return (state._replace(adj=adj), ok,
+            CacheDelta.edges_removed(u_slot, v_slot, cleared))
 
 
 # ---------------------------------------------------- wait-free reads
@@ -184,7 +226,8 @@ def apply_op_batch_impl(state: DagState, op: jax.Array, a: jax.Array,
                         matmul_impl=None, with_stats: bool = False,
                         prefer_partial_fn=None, partial_matmul_impl=None,
                         cache=None, closure_update_impl=None,
-                        n_shards: int = 1, prefer_incremental_fn=None):
+                        n_shards: int = 1, prefer_incremental_fn=None,
+                        closure_delete_impl=None, prefer_repair_fn=None):
     """Apply a mixed batch with the documented linearization:
     RemoveVertex -> AddVertex -> RemoveEdge -> AddEdge -> reads.
 
@@ -198,33 +241,62 @@ def apply_op_batch_impl(state: DagState, op: jax.Array, a: jax.Array,
     `acyclic.acyclic_add_edges_impl`).
 
     ``cache`` threads the engine's incremental closure cache through the
-    linearization: the delete phases (RemoveVertex / RemoveEdge) mark it
-    dirty iff they actually cleared adjacency bits, so the AddEdge phase's
-    incremental check lazily rebuilds in-step.  With ``cache`` the return
-    gains the updated cache: (state, ok[, cache][, stats]); stats is the
-    acyclic cycle-check accounting (all-zero when ``acyclic=False``: no
-    cycle check ran).
+    linearization as the delta-commit pipeline: each delete phase
+    (RemoveVertex, then RemoveEdge) emits its adj-diff-exact `CacheDelta`
+    and commits it through `closure_cache.commit` — maintaining the cache
+    by affected-row re-derivation when the delete dispatch arm
+    (``prefer_repair_fn``; scan realized by ``closure_delete_impl``) says
+    it pays, invalidating otherwise so the AddEdge phase's incremental
+    check lazily rebuilds in-step.  The per-phase commits (rather than one
+    batched diff) make recycled slots safe: a slot freed and re-added in
+    the same batch has its closure row/column repaired before reuse.  With
+    ``cache`` the return gains the updated cache:
+    (state, ok[, cache][, stats]); stats is the cycle-check + commit
+    accounting (all-zero when ``acyclic=False`` and no repair ran).
     """
     from repro.core import acyclic as acyclic_mod
+    from repro.core import closure_cache as cc_mod
 
     res = jnp.zeros(op.shape[0], bool)
     # acyclic.acyclic_add_edges_impl threads (and returns) a cache for
     # method="incremental" even when none was passed — mirror its notion
     # of "cached" so the unpacking below cannot diverge from it
     cached = cache is not None or (acyclic and method == "incremental")
-    adj_before = state.adj
-    state, r = remove_vertices(state, a, valid=op == REMOVE_VERTEX)
+    z = jnp.int32(0)
+    commit_products, commit_rows, commit_repairs = z, z, z
+
+    def commit_phase(cache, delta):
+        cache, st = cc_mod.commit(
+            cache, delta, state.adj, update_impl=closure_update_impl,
+            delete_impl=closure_delete_impl,
+            prefer_repair_fn=prefer_repair_fn, with_stats=True)
+        return cache, st
+
+    if cache is not None:
+        state, r, d_v = remove_vertices_delta(state, a,
+                                              valid=op == REMOVE_VERTEX)
+    else:
+        state, r = remove_vertices(state, a, valid=op == REMOVE_VERTEX)
     res = jnp.where(op == REMOVE_VERTEX, r, res)
+    if cache is not None:
+        cache, st = commit_phase(cache, d_v)
+        commit_products += st["n_products"]
+        commit_rows += st["row_products"]
+        commit_repairs += st["n_repair"]
     state, r = add_vertices(state, a, valid=op == ADD_VERTEX)
     res = jnp.where(op == ADD_VERTEX, r, res)
-    state, r = remove_edges(state, a, b, valid=op == REMOVE_EDGE)
-    res = jnp.where(op == REMOVE_EDGE, r, res)
     if cache is not None:
-        # deletes invalidate; vertex adds never touch adjacency
-        cache = cache.invalidated_if(jnp.any(state.adj != adj_before))
-    z = jnp.int32(0)
+        state, r, d_e = remove_edges_delta(state, a, b,
+                                           valid=op == REMOVE_EDGE)
+        cache, st = commit_phase(cache, d_e)
+        commit_products += st["n_products"]
+        commit_rows += st["row_products"]
+        commit_repairs += st["n_repair"]
+    else:
+        state, r = remove_edges(state, a, b, valid=op == REMOVE_EDGE)
+    res = jnp.where(op == REMOVE_EDGE, r, res)
     stats = {"n_products": z, "rows_per_product": 0, "row_products": z,
-             "n_partial": z, "n_incremental": z,
+             "n_partial": z, "n_incremental": z, "n_repair": z,
              "deciding_depth": jnp.zeros((n_shards,), jnp.int32)}
     if acyclic:
         out = acyclic_mod.acyclic_add_edges_impl(
@@ -249,6 +321,11 @@ def apply_op_batch_impl(state: DagState, op: jax.Array, a: jax.Array,
             # unconstrained inserts bypass the cycle check (and therefore
             # the rank-B fold-in): the cache goes stale
             cache = cache.invalidated_if(jnp.any(state.adj != adj_pre))
+    if with_stats and cache is not None:
+        stats = dict(stats)
+        stats["n_products"] = stats["n_products"] + commit_products
+        stats["row_products"] = stats["row_products"] + commit_rows
+        stats["n_repair"] = stats["n_repair"] + commit_repairs
     res = jnp.where(op == ADD_EDGE, r, res)
     r = contains_vertices(state, a)
     res = jnp.where(op == CONTAINS_VERTEX, r, res)

@@ -85,6 +85,24 @@ two decisions into a traced ``lax.switch``: clean -> incremental, else the
 closure-vs-partial cost model above.  A dirty cache is NOT rebuilt by the
 auto path (rebuilding costs a full closure; the cost model already prices
 that regime) — only ``method="incremental"`` pins lazy rebuilds.
+
+Delete-repair pricing (the fourth arm)
+--------------------------------------
+Removals committed against a clean cache (`closure_cache.commit`) choose
+between maintaining the cache by masked affected-row re-derivation and
+invalidating it (full rebuild at the next check):
+
+  rows_repair  = n_affected * repair_depth     (depth unknown up front)
+  rows_rebuild = C * ceil(log2 C)              (exact)
+
+``prefer_delete_repair`` picks repair iff
+``SAFETY_FACTOR * rows_repair <= rows_rebuild``, estimating the repair
+depth from the cache's measured repair-depth EMA once seeded (worst case
+``ceil(log2 C)`` before that — the rule then degenerates to
+``n_affected <= C / SAFETY_FACTOR``, i.e. repair unless most of the graph
+is upstream of the removals).  ``use_delete_repair=False`` opts a policy
+out entirely (the PR-4 invalidate-always behavior, kept as the benchmark
+baseline for the delete-heavy serve rows).
 """
 from __future__ import annotations
 
@@ -186,6 +204,37 @@ def prefer_partial_with_depth(batch: int, capacity: int, depth_est,
     return est <= closure_row_products(capacity)
 
 
+def delete_repair_row_products(n_affected, capacity: int, depth_est):
+    """Estimated row-products of the masked affected-row re-derivation."""
+    log2c = ceil_log2(capacity)
+    depth = jnp.clip(jnp.asarray(depth_est, jnp.float32), 1.0, float(log2c))
+    return jnp.asarray(n_affected, jnp.float32) * depth
+
+
+def prefer_delete_repair(n_affected, capacity: int, depth_hint=None,
+                         safety_factor: float = SAFETY_FACTOR) -> jax.Array:
+    """True iff a delete should be maintained by affected-row re-derivation
+    rather than invalidating the cache (full rebuild at the next check).
+
+    ``n_affected`` is a traced int (the ancestor count of the removal
+    seeds); ``depth_hint`` an optional traced scalar of measured repair
+    scan depth (<= 0 or None = unseeded -> the conservative
+    ``ceil(log2 C)`` bound, under which the rule is simply
+    ``safety_factor * n_affected <= C``).  jit-traceable — the commit
+    stages it into a ``lax.cond``.
+    """
+    log2c = ceil_log2(capacity)
+    if depth_hint is None:
+        depth = jnp.float32(log2c)
+    else:
+        h = jnp.asarray(depth_hint, jnp.float32)
+        depth = jnp.where(h > 0, jnp.clip(h, 1.0, float(log2c)),
+                          jnp.float32(log2c))
+    est = safety_factor * delete_repair_row_products(n_affected, capacity,
+                                                     depth)
+    return est <= closure_row_products(capacity)
+
+
 def choose_scan_sharding(batch: int, capacity: int, n_devices: int) -> str:
     """Pick the sharded partial-scan schedule: "batch" or "frontier".
 
@@ -239,6 +288,7 @@ class CostModelPolicy:
     safety_factor: float = SAFETY_FACTOR
     ema_alpha: float = 0.25
     use_incremental: bool = True
+    use_delete_repair: bool = True
     fixed_method: Optional[str] = dataclasses.field(default=None, init=False)
 
     def prefer_partial(self, adj_packed: jax.Array, batch: int,
@@ -263,6 +313,19 @@ class CostModelPolicy:
             return jnp.asarray(False)
         return ~cache_dirty
 
+    def prefer_delete_repair(self, n_affected, capacity: int,
+                             depth_hint=None) -> jax.Array:
+        """The fourth arm: maintain a clean cache through a delete by
+        masked affected-row re-derivation iff the affected-row count beats
+        the full rebuild's C * log2(C) rows (sharpened by the measured
+        repair-depth EMA once seeded).  ``use_delete_repair=False`` opts
+        out — every adjacency-clearing delete then invalidates, the PR-4
+        behavior."""
+        if not self.use_delete_repair:
+            return jnp.asarray(False)
+        return prefer_delete_repair(n_affected, capacity, depth_hint,
+                                    self.safety_factor)
+
     def scan_sharding(self, batch: int, capacity: int,
                       n_devices: int) -> str:
         return choose_scan_sharding(batch, capacity, n_devices)
@@ -281,9 +344,16 @@ class CostModelPolicy:
 @dataclasses.dataclass(frozen=True)
 class FixedPolicy:
     """Pin one concrete algorithm: the paper's "closure" / "partial", or
-    the cache-backed "incremental" (`core/closure_cache.py`)."""
+    the cache-backed "incremental" (`core/closure_cache.py`).
+
+    ``use_delete_repair`` governs the "incremental" delete path only:
+    True (default) maintains the cache through deletes with the same cost
+    arm as `CostModelPolicy`; False pins the PR-4 invalidate+lazy-rebuild
+    behavior (the benchmark baseline the delete-heavy serve rows gate
+    against)."""
 
     method: str
+    use_delete_repair: bool = True
 
     def __post_init__(self):
         if self.method not in FIXED_METHODS:
@@ -299,6 +369,12 @@ class FixedPolicy:
                        depth_hint=None) -> jax.Array:
         del adj_packed, batch, depth_hint
         return jnp.asarray(self.method == "partial")
+
+    def prefer_delete_repair(self, n_affected, capacity: int,
+                             depth_hint=None) -> jax.Array:
+        if not self.use_delete_repair:
+            return jnp.asarray(False)
+        return prefer_delete_repair(n_affected, capacity, depth_hint)
 
     def scan_sharding(self, batch: int, capacity: int,
                       n_devices: int) -> str:

@@ -34,8 +34,18 @@ Design points:
   clean cache execute ZERO boolean matmul products (B^2 bit reads + a
   B x B candidate-hop closure) and fold accepted edges back in with one
   rank-B update (`kernels/closure_update.py` on TPU, row-sharded on the
-  mesh); deletes invalidate, and the next incremental check (or
-  `refresh_cache`) lazily rebuilds.
+  mesh).
+* **Every mutation commits a typed delta**: mutators emit a
+  `core/closure_cache.CacheDelta` (edges added, edges removed, vertex
+  columns cleared — adj-diff exact) applied through the single
+  `closure_cache.commit` entry point.  Deletes are MAINTAINED: the commit
+  re-derives only the affected rows (ancestors of each removed edge's
+  source, read off the packed closure's column bits) with a bounded
+  masked scan (`kernels/closure_delete.py` on TPU, row-sharded with zero
+  per-hop collectives on the mesh), so delete-heavy serving stays on the
+  zero-product fast path; the policy's fourth arm
+  (`prefer_delete_repair`) falls back to invalidate + lazy rebuild when
+  the affected region approaches the whole graph.
 * **The sharded backend routes through the same policy**: acyclic inserts
   dispatch closure-vs-partial exactly like the local backend, and the
   partial scan's schedule (B-sharded vs frontier-sharded,
@@ -136,6 +146,10 @@ class ReachStats(NamedTuple):
     `CostModelPolicy` folds into the engine's per-shard depth-EMA vector.
     ``n_incremental`` counts sub-batch checks the closure cache decided —
     with a clean cache those execute ZERO boolean matmul products.
+    ``n_repair`` counts the delete-repair commits of the call (masked
+    affected-row re-derivations that kept the cache clean through a
+    removal); their products/rows are included in ``n_products`` /
+    ``row_products``.
     """
 
     n_products: jax.Array      # int32: boolean matmuls executed
@@ -143,17 +157,18 @@ class ReachStats(NamedTuple):
     n_partial: jax.Array       # int32: sub-batch checks algorithm 2 decided
     n_incremental: jax.Array   # int32: sub-batch checks the cache decided
     deciding_depth: jax.Array  # int32[S]: last partial check's hop counts
+    n_repair: jax.Array        # int32: delete-repair commits of this call
 
     @classmethod
     def zeros(cls, n_shards: int = 1) -> "ReachStats":
         z = jnp.int32(0)
-        return cls(z, z, z, z, jnp.zeros((n_shards,), jnp.int32))
+        return cls(z, z, z, z, jnp.zeros((n_shards,), jnp.int32), z)
 
     @classmethod
     def from_raw(cls, stats: dict) -> "ReachStats":
         return cls(stats["n_products"], stats["row_products"],
                    stats["n_partial"], stats["n_incremental"],
-                   stats["deciding_depth"])
+                   stats["deciding_depth"], stats["n_repair"])
 
 
 class OpResult(NamedTuple):
@@ -187,6 +202,12 @@ class EngineConfig:
     # EQUAL (a baked-in closure would be compared by identity and defeat
     # jit cache reuse across engines)
     closure_update_impl: Optional[object] = None
+    # explicit delete-repair scan override (signature: (adj_after, closure,
+    # affected) -> (closure', n_products, row_products); e.g.
+    # `closure_cache.masked_delete_scan` with the fused
+    # `kernels/ops.closure_delete` hop on TPU).  None = derived like
+    # closure_update_impl: row-sharded on the mesh, the jnp scan locally
+    closure_delete_impl: Optional[object] = None
 
     @property
     def n_devices(self) -> int:
@@ -214,7 +235,8 @@ class DagEngine:
                method: str = "auto", subbatches: int = 1,
                matmul_impl: Optional[MatmulImpl] = None,
                policy: Optional[dispatch.DispatchPolicy] = None,
-               mesh=None, closure_update_impl=None) -> "DagEngine":
+               mesh=None, closure_update_impl=None,
+               closure_delete_impl=None) -> "DagEngine":
         """Create an empty engine.  ``policy`` overrides ``method``; with
         ``policy=None`` the method string resolves to `CostModelPolicy`
         ("auto", the default everywhere) or `FixedPolicy`
@@ -225,7 +247,10 @@ class DagEngine:
         `core/sharded.make_dag_mesh`) and routes partial scans and cache
         updates through the explicit collective schedules.
         ``closure_update_impl`` overrides the rank-B cache fold-in
-        (`repro.kernels.ops.closure_update` fuses it on TPU).
+        (`repro.kernels.ops.closure_update` fuses it on TPU);
+        ``closure_delete_impl`` overrides the delete-repair masked scan
+        (e.g. ``lambda adj, cl, aff: closure_cache.masked_delete_scan(
+        adj, cl, aff, hop_impl=kernels.ops.closure_delete)`` on TPU).
         """
         if backend not in BACKENDS:
             raise ValueError(
@@ -256,7 +281,8 @@ class DagEngine:
                               method=method, subbatches=subbatches,
                               matmul_impl=matmul_impl, policy=policy,
                               mesh=mesh,
-                              closure_update_impl=closure_update_impl)
+                              closure_update_impl=closure_update_impl,
+                              closure_delete_impl=closure_delete_impl)
         n_dev = config.n_devices
         return cls(state, jnp.zeros((n_dev,), jnp.float32), cache, config)
 
@@ -281,7 +307,8 @@ class DagEngine:
             self.cache.closure, self.cache.dirty, self.state.adj,
             self.config.matmul_impl)
         return DagEngine(self.state, self.depth_ema,
-                         ClosureCache(closure, jnp.asarray(False)),
+                         ClosureCache(closure, jnp.asarray(False),
+                                      self.cache.repair_ema),
                          self.config)
 
     def with_options(self, *, method: Optional[str] = None,
@@ -369,6 +396,57 @@ class DagEngine:
             return sharded_mod.closure_update_impl(cfg.mesh)
         return None
 
+    def _closure_delete_impl(self):
+        """The delete-repair masked scan for this call, derived exactly
+        like `_closure_update_impl`: config override, else the row-sharded
+        zero-collective schedule on the mesh, else None (the jnp
+        `closure_cache.masked_delete_scan` inside `commit`)."""
+        cfg = self.config
+        if cfg.closure_delete_impl is not None:
+            return cfg.closure_delete_impl
+        if cfg.backend == "sharded":
+            from repro.core import sharded as sharded_mod
+            return sharded_mod.closure_delete_impl(cfg.mesh)
+        return None
+
+    def _prefer_repair_fn(self):
+        """The policy's delete dispatch arm closed over the capacity:
+        (n_affected, repair-depth hint) -> traced bool.  None when the
+        policy has no arm — `commit` then uses the module default."""
+        policy = self.config.policy
+        hook = getattr(policy, "prefer_delete_repair", None)
+        if hook is None:
+            return None
+        capacity = self.config.capacity
+
+        def prefer(n_affected, depth_hint):
+            return hook(n_affected, capacity, depth_hint=depth_hint)
+
+        return prefer
+
+    def _commit_cache(self, state: DagState, delta):
+        """Apply a mutation's typed `CacheDelta` through the single
+        `closure_cache.commit` entry point -> (cache', ReachStats).
+
+        Configurations that never READ the cache (FixedPolicy closure/
+        partial, opted-out cost models) skip the commit machinery and
+        conservatively mark it stale — dirty is always sound, and a later
+        ``with_options(method="incremental")`` view simply lazy-rebuilds.
+        """
+        zeros = ReachStats.zeros(self.config.n_devices)
+        if not self._cache_aware(self.config.method):
+            return self.cache._replace(dirty=jnp.asarray(True)), zeros
+        cache, st = closure_cache.commit(
+            self.cache, delta, state.adj,
+            update_impl=self._closure_update_impl(),
+            delete_impl=self._closure_delete_impl(),
+            prefer_repair_fn=self._prefer_repair_fn(),
+            ema_alpha=getattr(self.config.policy, "ema_alpha", 0.25),
+            with_stats=True)
+        return cache, zeros._replace(n_products=st["n_products"],
+                                     row_products=st["row_products"],
+                                     n_repair=st["n_repair"])
+
     def _overflow_delta(self, state: DagState) -> jax.Array:
         return state.n_overflow - self.state.n_overflow
 
@@ -409,12 +487,16 @@ class DagEngine:
 
     def remove_vertices(self, keys, valid=None):
         """RemoveVertex batch (logical+physical removal, incident edges
-        cleared in-step) -> (engine, OpResult).  Deletes that clear edges
-        mark the closure cache dirty (lazy rebuild on the next check)."""
-        state, ok = dag_mod.remove_vertices(self.state, keys, valid=valid)
-        res = OpResult(ok, self._overflow_delta(state),
-                       ReachStats.zeros(self.config.n_devices))
-        return self._with_state(state, self._invalidated_cache(state)), res
+        cleared in-step) -> (engine, OpResult).  The removal commits a
+        typed `CacheDelta` (column clears, adj-diff exact): a clean cache
+        is MAINTAINED by re-deriving the removed slots' ancestor rows
+        (the repair's work shows up in ``result.stats``), unless the
+        policy's delete arm prefers invalidate + lazy rebuild."""
+        state, ok, delta = dag_mod.remove_vertices_delta(self.state, keys,
+                                                         valid=valid)
+        cache, stats = self._commit_cache(state, delta)
+        res = OpResult(ok, self._overflow_delta(state), stats)
+        return self._with_state(state, cache), res
 
     # -------------------------------------------------------- edge ops
 
@@ -448,10 +530,17 @@ class DagEngine:
         return self._with_state(state, cache, stats), res
 
     def remove_edges(self, us, vs, valid=None):
-        state, ok = dag_mod.remove_edges(self.state, us, vs, valid=valid)
-        res = OpResult(ok, self._overflow_delta(state),
-                       ReachStats.zeros(self.config.n_devices))
-        return self._with_state(state, self._invalidated_cache(state)), res
+        """RemoveEdge batch -> (engine, OpResult).  Commits a typed
+        `CacheDelta` whose mask is adj-diff exact (edges that actually
+        existed, deduplicated), so no-op and repeated removals leave a
+        clean cache clean at zero repair cost; real removals are
+        maintained by affected-row re-derivation per the policy's delete
+        arm."""
+        state, ok, delta = dag_mod.remove_edges_delta(self.state, us, vs,
+                                                      valid=valid)
+        cache, stats = self._commit_cache(state, delta)
+        res = OpResult(ok, self._overflow_delta(state), stats)
+        return self._with_state(state, cache), res
 
     # ------------------------------------------------- wait-free reads
 
@@ -552,6 +641,8 @@ class DagEngine:
             state, ok, cache, stats = dag_mod.apply_op_batch_impl(
                 self.state, batch.op, batch.a, batch.b, cache=self.cache,
                 closure_update_impl=self._closure_update_impl(),
+                closure_delete_impl=self._closure_delete_impl(),
+                prefer_repair_fn=self._prefer_repair_fn(),
                 prefer_incremental_fn=getattr(cfg.policy,
                                               "prefer_incremental", None),
                 **common)

@@ -8,11 +8,23 @@ one scheduling tick):
   begin(txn_ids)            -> AddVertex batch
   conflicts((t_i, t_j))     -> AcyclicAddEdge batch; a rejected edge means
                                the *requesting* transaction t_i must abort
+  retire_conflicts((i, j))  -> RemoveEdge batch (a predecessor committed or
+                               a speculative conflict was resolved)
   finish(txn_ids)           -> RemoveVertex batch (commit or abort retire);
                                incoming conflict edges are cleared in-step
 
 Aborted transactions are retired immediately inside the tick (their vertex
 and all incident edges leave the graph), matching SGT scheduler behaviour.
+
+Deletions dominate a real SGT steady state (every committed transaction
+retires its vertex and edges), so the engine's delete-maintained closure
+cache matters here: `retire_conflicts` and `finish` commit typed deltas
+that REPAIR the cache in place (affected-row re-derivation) instead of
+invalidating it, keeping the next tick's conflict checks on the
+zero-product fast path.  `churn_tick` is the scheduler-surface form of
+the delete-heavy tick shape (the `sgt_tick_delheavy_*` /
+`sgt_tick_mixed_*` benchmark rows drive the same shape through a raw
+`DagEngine` session, `launch/serve.serve_sgt_churn`).
 """
 from __future__ import annotations
 
@@ -97,6 +109,18 @@ def conflicts(state: SgtState, src: jax.Array, dst: jax.Array, valid=None,
         n_aborted=state.n_aborted + jnp.sum(rem.ok, dtype=jnp.int32)), ok
 
 
+def retire_conflicts(state: SgtState, src: jax.Array, dst: jax.Array,
+                     valid=None):
+    """Drop conflict edges src -> dst. Returns (state, ok[B]).
+
+    The delete-heavy serving primitive: a predecessor committed, or a
+    speculative conflict turned out not to bite.  Removals of edges that
+    never existed (or duplicated pairs) commit as exact no-op deltas —
+    the engine's closure cache stays clean at zero repair cost."""
+    eng, r = state.engine.remove_edges(src, dst, valid=valid)
+    return state._replace(engine=eng), r.ok
+
+
 def finish(state: SgtState, txn_ids: jax.Array, valid=None):
     eng, r = state.engine.remove_vertices(txn_ids, valid=valid)
     return state._replace(
@@ -113,3 +137,20 @@ def schedule_tick(state: SgtState, begin_ids, conf_src, conf_dst, finish_ids,
                                 subbatches=subbatches, method=method)
     state, finished = finish(state, finish_ids)
     return state, {"began": began, "accepted": accepted, "finished": finished}
+
+
+def churn_tick(state: SgtState, begin_ids, conf_src, conf_dst, drop_src,
+               drop_dst, finish_ids, subbatches: Optional[int] = None,
+               method: Optional[str] = None):
+    """One delete-heavy scheduling tick: begins, conflicts, conflict-edge
+    retirements, finishes — the scheduler-surface form of the churn tick
+    shape (`serve.serve_sgt_churn` benchmarks the same shape through a
+    raw engine session), where the delete-maintained closure cache keeps
+    every phase off the full-rebuild path."""
+    state, began = begin(state, begin_ids)
+    state, accepted = conflicts(state, conf_src, conf_dst,
+                                subbatches=subbatches, method=method)
+    state, dropped = retire_conflicts(state, drop_src, drop_dst)
+    state, finished = finish(state, finish_ids)
+    return state, {"began": began, "accepted": accepted, "dropped": dropped,
+                   "finished": finished}

@@ -58,13 +58,16 @@ def shard_state(state: DagState, mesh: Mesh) -> DagState:
 
 def shard_cache(cache, mesh: Mesh):
     """Place an incremental closure cache on the mesh: the packed closure
-    rows follow the adjacency's row sharding, the dirty flag replicates."""
+    rows follow the adjacency's row sharding, the scalars (dirty flag,
+    repair-depth EMA) replicate."""
     from repro.core.closure_cache import ClosureCache
 
+    rep = NamedSharding(mesh, P())
     return ClosureCache(
         closure=jax.device_put(cache.closure,
                                NamedSharding(mesh, P(AXIS, None))),
-        dirty=jax.device_put(cache.dirty, NamedSharding(mesh, P())),
+        dirty=jax.device_put(cache.dirty, rep),
+        repair_ema=jax.device_put(cache.repair_ema, rep),
     )
 
 
@@ -89,6 +92,53 @@ def closure_update_impl(mesh: Mesh):
             in_specs=(P(AXIS, None), P(AXIS, None), P(None, None)),
             out_specs=P(AXIS, None),
         )(closure, mask_packed, rows_packed)
+
+    return impl
+
+
+def closure_delete_impl(mesh: Mesh):
+    """Row-sharded delete-repair masked scan (the sharded realization of
+    `closure_cache.masked_delete_scan` — the delete side of the
+    delta-commit pipeline).
+
+    The hop matrix ``S = where(affected, adj_after, closure)`` is FIXED
+    for the whole scan, so it replicates into every device once (the only
+    data movement); each device then iterates its own (C/D, W) row block
+    ``R <- R | R @ S`` with its local affected mask — a purely local
+    boolean product per hop, ZERO per-hop collectives — and early-exits at
+    its *own* block's fixpoint rather than the global maximum depth
+    (unaffected blocks exit after one product).  One psum/pmax at the end
+    replicates the work counters.
+    """
+    from repro.core.reachability import bool_matmul_packed
+
+    def impl(adj_after, closure, affected):
+        s = jnp.where(affected[:, None], adj_after, closure)
+
+        def kernel(s_full, s_local, aff_local):
+            def cond(carry):
+                _, _, changed = carry
+                return changed
+
+            def body(carry):
+                r, i, _ = carry
+                prod = bool_matmul_packed(r, s_full)
+                rn = jnp.where(aff_local[:, None], r | prod, r)
+                return rn, i + 1, jnp.any(rn != r)
+
+            r, i, _ = jax.lax.while_loop(
+                cond, body, (s_local, jnp.int32(0), jnp.any(aff_local)))
+            n_aff = jnp.sum(aff_local, dtype=jnp.int32)
+            return (r, jax.lax.pmax(i, AXIS),
+                    jax.lax.psum(i * n_aff, AXIS))
+
+        # check_vma off: the data-dependent while_loop has no replication
+        # rule (same as reach_until_decided_batch_sharded)
+        return compat.shard_map(
+            kernel, mesh=mesh,
+            in_specs=(P(None, None), P(AXIS, None), P(AXIS)),
+            out_specs=(P(AXIS, None), P(), P()), check_vma=False,
+        )(s, s, affected)
 
     return impl
 

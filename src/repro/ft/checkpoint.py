@@ -105,8 +105,9 @@ def save_engine_checkpoint(directory: str, step: int, engine) -> str:
     The engine is a registered pytree whose dynamic leaves are the full
     session state — adjacency slab, key table, overflow counter, the
     per-shard deciding-depth EMA, and the incremental closure cache with
-    its dirty flag — so the generic atomic writer captures everything the
-    dispatch policy has learned, not just the graph."""
+    its dirty flag and measured repair-depth EMA (the delete dispatch
+    arm's learned depth estimate) — so the generic atomic writer captures
+    everything the dispatch policy has learned, not just the graph."""
     return save_checkpoint(directory, step, engine)
 
 

@@ -1,0 +1,88 @@
+"""Fused delete-repair hop: row-mask -> matmul -> OR-accumulate -> pack.
+
+The delete side of the delta-commit pipeline (`core/closure_cache.py`)
+re-derives only the *affected* rows of the cached closure — the ancestors
+of each removed edge's source — by iterating the masked fixpoint
+
+    out[w] = affected[w] ?  r[w] | OR over {x : r[w, x]} s[x]  :  r[w]
+
+where ``s`` is the scan's fixed hop matrix (new adjacency rows for
+affected vertices, still-exact closure rows — one-hop shortcuts — for
+unaffected ones).  The unfused jnp composition materializes an f32 (C, C)
+count matrix in HBM, thresholds it, and re-reads the old rows for the
+masked OR; this kernel keeps the (bm, bn) product tile in VMEM, applies
+the row mask and the OR in the matmul epilogue, and writes only packed
+uint32 words.  Row blocks containing NO affected row skip the matmul
+entirely (`pl.when`) and pass the old block through — the common case
+once the affected region is a small slice of the capacity.
+
+Layout: r (C, C/32) uint32, s (C, C/32) uint32, affected (1, C/32) uint32
+row mask -> out (C, C/32) uint32.  Blocking mirrors `bitmm.py`: full-K
+panels, grid over (C/bm, C/bn); bm stays a multiple of 32 so the packed
+row-mask blocks stay word-aligned.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# the in-kernel bit layout must match bitmm's exactly (LSB-first words) —
+# share its helpers rather than redeclare them
+from repro.kernels.bitmm import WORD, _pack_bool, _unpack_f32
+
+
+def _closure_delete_kernel(r_blk_ref, r_row_ref, s_ref, aff_ref, out_ref):
+    aff = _unpack_f32(aff_ref[...]).reshape(-1) > 0   # (bm,) row mask
+    old = r_blk_ref[...]                              # (bm, bwn) packed
+
+    @pl.when(jnp.any(aff))
+    def _():
+        lhs = _unpack_f32(r_row_ref[...])             # (bm, C)
+        rhs = _unpack_f32(s_ref[...])                 # (C, bn)
+        acc = jax.lax.dot_general(
+            lhs, rhs, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)       # (bm, bn) on the MXU
+        out_ref[...] = jnp.where(aff[:, None], old | _pack_bool(acc > 0),
+                                 old)
+
+    @pl.when(~jnp.any(aff))
+    def _():
+        out_ref[...] = old
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
+def closure_delete(r_packed: jax.Array, s_packed: jax.Array,
+                   affected_packed: jax.Array, *, bm: int = 128,
+                   bn: int = 256, interpret: bool = False) -> jax.Array:
+    """r (C, C/32) x s (C, C/32) masked by affected (C/32,) -> (C, C/32)."""
+    c, w = r_packed.shape
+    c2, w2 = s_packed.shape
+    assert c2 == c and w2 == w and w * WORD == c, (
+        r_packed.shape, s_packed.shape)
+    assert affected_packed.shape == (w,), affected_packed.shape
+    bm = min(bm, c)
+    bn = min(bn, w * WORD)
+    if c % bm != 0:
+        bm = c
+    if (w * WORD) % bn != 0:
+        bn = w * WORD  # capacities only guarantee 32-alignment, not 256
+    assert c % bm == 0 and (w * WORD) % bn == 0
+    assert bm % WORD == 0 and bn % WORD == 0
+    bwn = bn // WORD
+    grid = (c // bm, (w * WORD) // bn)
+    return pl.pallas_call(
+        _closure_delete_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bwn), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, w), lambda i, j: (i, 0)),
+            pl.BlockSpec((c, bwn), lambda i, j: (0, j)),
+            pl.BlockSpec((1, bm // WORD), lambda i, j: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((bm, bwn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((c, w), jnp.uint32),
+        interpret=interpret,
+    )(r_packed, r_packed, s_packed, affected_packed.reshape(1, w))

@@ -11,6 +11,7 @@ from __future__ import annotations
 import jax
 
 from repro.kernels import bitmm as _bitmm
+from repro.kernels import closure_delete as _closure_delete
 from repro.kernels import closure_update as _closure_update
 from repro.kernels import embbag as _embbag
 from repro.kernels import flashattn as _flash
@@ -46,6 +47,20 @@ def closure_update(closure_packed, mask_packed, rows_packed, *,
                                        rows_packed)
     return _closure_update.closure_update(
         closure_packed, mask_packed, rows_packed,
+        interpret=impl == "pallas_interpret")
+
+
+def closure_delete(r_packed, s_packed, affected_packed, *,
+                   impl: str = "auto"):
+    """Fused delete-repair hop (delta-commit delete hot spot):
+    out[w] = affected[w] ? r[w] | OR_{x: r[w, x]} s[x] : r[w], all packed
+    uint32 — the per-hop product of `closure_cache.masked_delete_scan`
+    (pass as its ``hop_impl``)."""
+    impl = _resolve(impl)
+    if impl == "ref":
+        return _ref.closure_delete_ref(r_packed, s_packed, affected_packed)
+    return _closure_delete.closure_delete(
+        r_packed, s_packed, affected_packed,
         interpret=impl == "pallas_interpret")
 
 

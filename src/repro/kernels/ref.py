@@ -29,6 +29,22 @@ def closure_update_ref(closure_packed: jax.Array, mask_packed: jax.Array,
     return closure_packed | bitmm_ref(mask_packed, rows_packed)
 
 
+def closure_delete_ref(r_packed: jax.Array, s_packed: jax.Array,
+                       affected_packed: jax.Array) -> jax.Array:
+    """One hop of the delete-repair masked scan:
+    out[w] = affected[w] ? r[w] | OR_{x: r[w,x]} s[x] : r[w].
+
+    r (C, C/32), s (C, C/32) — the fixed hop matrix mixing new adjacency
+    rows (affected) with still-exact closure rows (unaffected) —
+    affected_packed (C/32,) row mask -> (C, C/32).  The fused kernel skips
+    the matmul for row blocks with no affected row and writes only packed
+    words; this reference composes the same result from the unfused bitmm.
+    """
+    aff = bitset.unpack_bits(affected_packed)      # (C,)
+    prod = bitmm_ref(r_packed, s_packed)
+    return jnp.where(aff[:, None], r_packed | prod, r_packed)
+
+
 def embbag_ref(table: jax.Array, idx: jax.Array,
                weights: jax.Array) -> jax.Array:
     """Embedding bag: table (R, D), idx (B, K), weights (B, K) -> (B, D).

@@ -120,10 +120,15 @@ def _summarize(label: str, method: str, stats: dict, tick_times, batch: int,
                ticks: int, dt: float) -> dict:
     # throughput from the MEDIAN per-tick latency: robust against CPU
     # contention spikes on shared CI machines (the benchmark-regression
-    # gate compares serve rows at tight tolerances)
+    # gate compares serve rows at tight tolerances).  best_ops_per_s is
+    # the BEST tick — contention only ever adds time, so the minimum
+    # estimates the uncontended tick cost; the tight (10%) engine-façade
+    # gate compares that, since medians on a contended box swing far more
+    # than the tolerance.
     med = float(np.median(tick_times))
     out = {
         "ticks": ticks, "ops_per_s": batch / med,
+        "best_ops_per_s": batch / float(min(tick_times)),
         "abort_rate": float(stats["aborted"] / max(1, stats["begun"])),
         **stats,
     }
@@ -277,6 +282,137 @@ def serve_sgt_insert_heavy(capacity: int = 1024, batch: int = 256,
     return out
 
 
+def _sgt_churn_inputs(capacity: int, batch: int, ticks: int, seed: int,
+                      profile: str):
+    """Deterministic delete-heavy / mixed request streams.
+
+    Conflict edges are FORWARD-ordered over the txn pool (src key < dst
+    key), so no insert can close a cycle: every requested edge on live
+    endpoints commits, and a host-side mirror of the live edge set (kept
+    in sync with begins, accepted inserts, prior removals, and finishes'
+    incident-edge clears) lets the removal stream sample edges that
+    really exist — per-tick delete-repair work is well-defined and the
+    work counters identical across methods.  ``profile="delheavy"``:
+    deletions dominate the adjacency churn (3b/8 edge drops + b/8 vertex
+    finishes against 3b/8 edge inserts + b/8 begins per tick);
+    ``profile="mixed"``: balanced quarters.  Finished txns re-begin on a
+    later tick (the begin stream wraps the pool), so the graph churns
+    rather than drains.
+    """
+    rng = np.random.default_rng(seed)
+    pool = capacity // 2
+    if profile == "delheavy":
+        n_begin, n_ins = batch // 8, 3 * batch // 8
+        n_del, n_fin = 3 * batch // 8, batch // 8
+    elif profile == "mixed":
+        n_begin = n_ins = n_del = n_fin = batch // 4
+    else:
+        raise ValueError(f"unknown churn profile {profile!r}")
+    # host-side mirror of the live graph, so the removal stream targets
+    # edges that REALLY exist: an insert only enters the mirror when both
+    # endpoints are live (forward order + live endpoints -> accepted), and
+    # finishing a vertex prunes its incident edges like the engine's
+    # column clear does
+    live_keys: set = set()
+    edge_set: set = set()
+    inputs = []
+    for t in range(ticks):
+        begins = (np.arange(n_begin, dtype=np.int32) + t * n_begin) % pool
+        live_keys.update(int(k) for k in begins)
+        upper = max(2, min(pool, (t + 1) * n_begin))
+        lo = rng.integers(0, upper - 1, n_ins).astype(np.int32)
+        hi = rng.integers(lo + 1, upper).astype(np.int32)
+        for u, v in zip(lo.tolist(), hi.tolist()):
+            if u in live_keys and v in live_keys:
+                edge_set.add((u, v))
+        live_edges = sorted(edge_set)
+        n_real = min(n_del, len(live_edges))
+        pick = rng.choice(len(live_edges), n_real, replace=False)
+        del_src = np.full(n_del, -1, np.int32)
+        del_dst = np.full(n_del, -1, np.int32)
+        for k, idx in enumerate(pick.tolist()):
+            del_src[k], del_dst[k] = live_edges[idx]
+            edge_set.discard(live_edges[idx])
+        fins = rng.choice(upper, min(n_fin, upper), replace=False)
+        fins_full = np.full(n_fin, -1, np.int32)
+        fins_full[:len(fins)] = fins
+        for f in fins.tolist():
+            live_keys.discard(f)
+            edge_set = {(u, v) for (u, v) in edge_set if u != f and v != f}
+        inputs.append((jnp.asarray(begins), jnp.asarray(lo), jnp.asarray(hi),
+                       jnp.asarray(del_src), jnp.asarray(del_dst),
+                       jnp.asarray(fins_full)))
+    return inputs
+
+
+def serve_sgt_churn(capacity: int = 1024, batch: int = 256,
+                    ticks: int = 30, seed: int = 0,
+                    method: str = "incremental",
+                    profile: str = "delheavy") -> dict:
+    """Delete-heavy / mixed SGT serving through a raw `DagEngine` session:
+    begins + cycle-checked conflict inserts + conflict-edge retirements +
+    vertex finishes every tick, with the exact boolean-matmul row-products
+    (cycle checks, lazy rebuilds, AND delete repairs) accumulated
+    on-device — the deterministic work counters `benchmarks/compare.py`
+    gates (the delete-maintained cache must do strictly less than the
+    PR-4 invalidate+rebuild path).
+
+    ``method="incremental_rebuild"`` pins exactly that baseline:
+    `FixedPolicy("incremental", use_delete_repair=False)` — every
+    adjacency-clearing delete invalidates and the next check pays a full
+    rebuild."""
+    from repro.api import DagEngine, FixedPolicy
+
+    if method == "incremental_rebuild":
+        eng = DagEngine.create(
+            capacity,
+            policy=FixedPolicy("incremental", use_delete_repair=False))
+    else:
+        eng = DagEngine.create(capacity, method=method)
+    z = jnp.zeros((), jnp.int32)
+    carry0 = (eng, z, z, z)  # engine, n_accepted, row_products, n_repairs
+
+    def tick(carry, begins, src, dst, del_src, del_dst, fins):
+        eng, n_acc, rp, nr = carry
+        eng, _ = eng.add_vertices(begins)
+        eng, conf = eng.add_edges_acyclic(src, dst)
+        eng, rem = eng.remove_edges(del_src, del_dst)
+        eng, fin = eng.remove_vertices(fins)
+        rp = rp + conf.stats.row_products + rem.stats.row_products \
+            + fin.stats.row_products
+        nr = nr + rem.stats.n_repair + fin.stats.n_repair
+        return (eng, n_acc + jnp.sum(conf.ok, dtype=jnp.int32), rp, nr)
+
+    tick_fn = jax.jit(tick)
+
+    def step(carry, xs):
+        carry = tick_fn(carry, *xs)
+        jax.block_until_ready(carry[0].state.adj)
+        return carry
+
+    inputs = _sgt_churn_inputs(capacity, batch, ticks, seed, profile)
+    # untimed warmup on the first tick's shapes (compile only — starting
+    # from the fresh engine keeps the timed stream identical)
+    step(carry0, inputs[0])
+    tick_times = []
+    carry = carry0
+    for xs in inputs:
+        t1 = time.perf_counter()
+        carry = step(carry, xs)
+        tick_times.append(time.perf_counter() - t1)
+    eng, n_acc, rp, nr = carry
+    med = float(np.median(tick_times))
+    out = {"ticks": ticks, "ops_per_s": batch / med, "tick_us": med * 1e6,
+           "accepted": int(n_acc), "row_products": int(rp),
+           "n_repairs": int(nr),
+           "cache_clean": not bool(eng.cache.dirty)}
+    print(f"[serve-sgt-{profile}:{method}] {batch * ticks} ops -> "
+          f"{out['ops_per_s']:.0f} ops/s (median tick); "
+          f"accepted={out['accepted']} row_products={out['row_products']} "
+          f"repairs={out['n_repairs']} cache_clean={out['cache_clean']}")
+    return out
+
+
 def serve_lm(arch: str = "qwen2-1.5b", batch: int = 4, prompt_len: int = 64,
              gen: int = 32) -> dict:
     from repro.configs import registry
@@ -315,17 +451,39 @@ def main() -> int:
     p.add_argument("--batch", type=int, default=256)
     p.add_argument("--subbatches", type=int, default=1)
     from repro.core import METHODS
-    p.add_argument("--method", choices=list(METHODS), default="auto",
+    p.add_argument("--method", choices=list(METHODS) + ["incremental_rebuild"],
+                   default="auto",
                    help="conflict cycle-check algorithm (auto = cost-model "
-                        "dispatch, core/dispatch.py)")
+                        "dispatch, core/dispatch.py; incremental_rebuild = "
+                        "the delete-repair opt-out baseline, churn profiles "
+                        "only)")
     p.add_argument("--api", choices=["sgt", "engine"], default="sgt",
                    help="serving surface: the SGT scheduler wrapper or the "
                         "raw DagEngine session (repro.api)")
+    p.add_argument("--profile",
+                   choices=["steady", "insheavy", "delheavy", "mixed"],
+                   default="steady",
+                   help="sgt request stream: steady begin/conflict/finish "
+                        "ticks, insert-heavy (no retirements), or the "
+                        "delete-heavy / mixed churn streams the "
+                        "delete-maintained cache targets")
     args = p.parse_args()
+    if args.method == "incremental_rebuild" and \
+            args.profile not in ("delheavy", "mixed"):
+        p.error("--method incremental_rebuild is the delete-repair opt-out "
+                "baseline of the churn streams; use --profile delheavy or "
+                "mixed with it")
     if args.mode == "sgt":
-        serve_sgt(batch=args.batch, ticks=args.ticks,
-                  subbatches=args.subbatches, method=args.method,
-                  api=args.api)
+        if args.profile == "steady":
+            serve_sgt(batch=args.batch, ticks=args.ticks,
+                      subbatches=args.subbatches, method=args.method,
+                      api=args.api)
+        elif args.profile == "insheavy":
+            serve_sgt_insert_heavy(batch=args.batch, ticks=args.ticks,
+                                   method=args.method)
+        else:
+            serve_sgt_churn(batch=args.batch, ticks=args.ticks,
+                            method=args.method, profile=args.profile)
     else:
         serve_lm(args.arch, batch=max(2, args.batch % 16))
     return 0

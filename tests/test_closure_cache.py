@@ -1,5 +1,5 @@
 """Incremental transitive-closure cache tests (`core/closure_cache.py`,
-`method="incremental"`, the engine cache plumbing).
+`method="incremental"`, the engine's delta-commit pipeline).
 
 Pins the tentpole contracts:
   1. incremental decisions are IDENTICAL to the paper's two algorithms on
@@ -7,22 +7,26 @@ Pins the tentpole contracts:
      cache equals the from-scratch `transitive_closure` after every op;
   2. with a clean cache an acyclic insert batch executes ZERO boolean
      matmul products (the acceptance criterion, asserted via stats);
-  3. deletes mark the cache dirty and the next check lazily rebuilds —
-     charged as closure products — leaving a clean, exact cache;
+  3. deletes are MAINTAINED: every mutator commits a typed `CacheDelta`
+     through `closure_cache.commit`, whose delete side re-derives only the
+     affected rows (ancestors of the removal seeds) — the cache stays
+     clean and exact through edge and vertex removals, no-op/repeated
+     removals cost nothing, and `use_delete_repair=False` pins the PR-4
+     invalidate + lazy-rebuild behavior;
   4. `method="auto"` three-way dispatch: clean cache -> incremental,
      dirty cache -> the PR-2 closure-vs-partial cost model;
   5. `reachable` answers from the cache in O(1) reads when clean and falls
      back to the full scan when dirty (identical answers);
   6. engine-native checkpointing round-trips a whole session — slab,
-     per-shard depth EMA, closure cache and dirty flag.
+     per-shard depth EMA, closure cache with dirty flag and repair EMA.
 """
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.api import (ClosureCache, CostModelPolicy, DagEngine, FixedPolicy,
-                       OpBatch)
+from repro.api import (CacheDelta, ClosureCache, CostModelPolicy, DagEngine,
+                       FixedPolicy, OpBatch)
 from repro.core import bitset, closure_cache, dag, reachability
 from repro.core.oracle import SeqGraph, apply_op_batch_oracle
 
@@ -116,32 +120,160 @@ def test_clean_cache_executes_zero_products():
     _assert_cache_exact(eng)
 
 
-def test_delete_invalidates_and_check_lazily_rebuilds():
+def test_delete_maintains_cache_clean_and_exact():
+    """The tentpole: edge and vertex removals commit typed deltas that
+    REPAIR the cache in place (affected-row re-derivation) — the session
+    never leaves the zero-product fast path."""
     eng = DagEngine.create(CAP, method="incremental")
     eng, _ = eng.add_vertices(jnp.arange(8, dtype=jnp.int32))
     eng, _ = eng.add_edges_acyclic(arr([0, 1, 2]), arr([1, 2, 3]))
     assert not bool(eng.cache.dirty)
     eng, r = eng.remove_edges(arr([1]), arr([2]))
+    assert bool(r.ok[0])
+    assert not bool(eng.cache.dirty)       # maintained, not invalidated
+    assert int(r.stats.n_repair) == 1
+    assert int(r.stats.row_products) > 0   # the repair's masked rows
+    _assert_cache_exact(eng)
+    # the next check rides the repaired cache: zero products
+    eng, r = eng.add_edges_acyclic(arr([3]), arr([0]))
+    assert r.ok.tolist() == [True]  # 1->2 edge gone, no cycle anymore
+    assert int(r.stats.row_products) == 0
+    assert int(r.stats.n_incremental) == 1
+    _assert_cache_exact(eng)
+    # vertex removal (with incident edges) repairs too: its ancestors
+    # re-derive without the cleared column, its own row zeroes out
+    eng, r = eng.remove_vertices(arr([3]))
+    assert not bool(eng.cache.dirty) and int(r.stats.n_repair) == 1
+    _assert_cache_exact(eng)
+    # the repair-depth EMA learned from the measured scans
+    assert float(eng.cache.repair_ema) > 0
+
+
+def test_opt_out_restores_invalidate_plus_lazy_rebuild():
+    """`use_delete_repair=False` pins the PR-4 behavior: deletes
+    invalidate, the next incremental check pays one rebuild."""
+    eng = DagEngine.create(
+        CAP, policy=FixedPolicy("incremental", use_delete_repair=False))
+    eng, _ = eng.add_vertices(jnp.arange(8, dtype=jnp.int32))
+    eng, _ = eng.add_edges_acyclic(arr([0, 1, 2]), arr([1, 2, 3]))
+    assert not bool(eng.cache.dirty)
+    eng, r = eng.remove_edges(arr([1]), arr([2]))
     assert bool(r.ok[0]) and bool(eng.cache.dirty)
+    assert int(r.stats.n_repair) == 0 and int(r.stats.row_products) == 0
     # the next check pays one rebuild (charged as closure products) and
     # leaves the cache clean and exact
     eng, r = eng.add_edges_acyclic(arr([3]), arr([0]))
-    assert r.ok.tolist() == [True]  # 0->1 edge gone, no cycle anymore
+    assert r.ok.tolist() == [True]
     assert int(r.stats.n_products) > 0
     assert int(r.stats.n_incremental) == 1
     assert not bool(eng.cache.dirty)
     _assert_cache_exact(eng)
-    # vertex removal (with incident edges) also invalidates
-    eng, _ = eng.remove_vertices(arr([3]))
-    assert bool(eng.cache.dirty)
-    # ...but a no-op removal keeps a clean cache clean
-    eng = eng.refresh_cache()
+
+
+def test_noop_and_repeated_removals_leave_clean_cache_clean():
+    """Satellite regression: the edge-delete path is adj-diff exact like
+    the vertex path — removals that clear no bit (edge absent, duplicate
+    pair, repeated removal) commit as empty deltas: clean stays clean at
+    ZERO repair cost."""
+    eng = DagEngine.create(CAP, method="incremental")
+    eng, _ = eng.add_vertices(jnp.arange(8, dtype=jnp.int32))
+    eng, _ = eng.add_edges_acyclic(arr([0, 1]), arr([1, 2]))
+    assert not bool(eng.cache.dirty)
+    # edge never existed: ok is True (live endpoints) but no bit cleared
+    eng, r = eng.remove_edges(arr([4]), arr([5]))
+    assert bool(r.ok[0]) and not bool(eng.cache.dirty)
+    assert int(r.stats.n_repair) == 0 and int(r.stats.row_products) == 0
+    # duplicated pair in one batch: one repair, still exact
+    eng, r = eng.remove_edges(arr([0, 0]), arr([1, 1]))
+    assert int(r.stats.n_repair) == 1
+    assert not bool(eng.cache.dirty)
+    _assert_cache_exact(eng)
+    # removing it AGAIN is a no-op: zero cost, still clean
+    eng, r = eng.remove_edges(arr([0]), arr([1]))
+    assert int(r.stats.n_repair) == 0 and int(r.stats.row_products) == 0
+    assert not bool(eng.cache.dirty)
+    _assert_cache_exact(eng)
+    # no-op vertex removals stay free too
     eng, r = eng.remove_vertices(arr([42]))
     assert not bool(r.ok[0]) and not bool(eng.cache.dirty)
+    assert int(r.stats.n_repair) == 0
     # and removing an edge-free vertex does not touch adjacency either
     eng, _ = eng.add_vertices(arr([50]))
     eng, r = eng.remove_vertices(arr([50]))
     assert bool(r.ok[0]) and not bool(eng.cache.dirty)
+    assert int(r.stats.n_repair) == 0
+
+
+def test_delete_dispatch_arm_declines_when_affected_region_is_large():
+    """The fourth arm: when the removal's ancestor set approaches the
+    whole graph, repair would not beat a rebuild — the commit invalidates
+    instead (and the two routes stay decision-identical)."""
+    cap = 64
+    # a chain 0 -> 1 -> ... -> 47: removing the LAST edge makes every
+    # chain vertex an ancestor of the removal seed (n_aff = 47 > C/2)
+    eng = DagEngine.create(cap, method="incremental")
+    eng, _ = eng.add_vertices(jnp.arange(48, dtype=jnp.int32))
+    eng, _ = eng.add_edges_acyclic(arr(list(range(47))),
+                                   arr(list(range(1, 48))))
+    assert not bool(eng.cache.dirty)
+    eng, r = eng.remove_edges(arr([46]), arr([47]))
+    assert bool(eng.cache.dirty)            # repair declined
+    assert int(r.stats.n_repair) == 0
+    # the next check lazily rebuilds — decisions identical to a fresh
+    # closure engine on the same graph
+    eng, r = eng.add_edges_acyclic(arr([47]), arr([0]))
+    assert r.ok.tolist() == [True]          # chain is broken: no cycle
+    assert not bool(eng.cache.dirty)
+    _assert_cache_exact(eng)
+    # a shallow removal on the same session IS repaired
+    eng, r = eng.remove_edges(arr([0]), arr([1]))
+    assert not bool(eng.cache.dirty) and int(r.stats.n_repair) == 1
+    _assert_cache_exact(eng)
+
+
+def test_commit_is_the_single_entry_point():
+    """`closure_cache.commit` applies typed deltas directly: the add side
+    is the rank-B fold-in, the delete side the masked repair, an empty
+    delta is a no-op, and a dirty cache commits removals untouched."""
+    rng = np.random.default_rng(3)
+    a = np.triu(rng.random((CAP, CAP)) < 0.05, 1)
+    adj = bitset.pack_bits(jnp.asarray(a))
+    cache = closure_cache.rebuild_cache(adj)
+    # empty delta: no-op
+    out = closure_cache.commit(cache, CacheDelta.empty(), adj)
+    np.testing.assert_array_equal(np.asarray(out.closure),
+                                  np.asarray(cache.closure))
+    # add side == insert_update
+    u = arr(rng.integers(0, 32, 4))
+    v = arr(rng.integers(32, CAP, 4))
+    acc = jnp.asarray([True, True, False, True])
+    adj2 = bitset.scatter_set_bits(adj, u, v, acc)
+    got, st = closure_cache.commit(
+        cache, CacheDelta.edges_added(u, v, acc), adj2, with_stats=True)
+    want = closure_cache.insert_update(cache.closure, u, v, acc)
+    np.testing.assert_array_equal(np.asarray(got.closure), np.asarray(want))
+    assert int(st["n_repair"]) == 0
+    # delete side: repaired closure equals the from-scratch closure
+    us, vs = np.nonzero(a)
+    rem_u, rem_v = arr([int(us[0])]), arr([int(vs[0])])
+    adj3 = bitset.scatter_clear_bits(adj, rem_u, rem_v,
+                                     jnp.asarray([True]))
+    got, st = closure_cache.commit(
+        cache, CacheDelta.edges_removed(rem_u, rem_v, jnp.asarray([True])),
+        adj3, with_stats=True)
+    np.testing.assert_array_equal(
+        np.asarray(got.closure),
+        np.asarray(reachability.transitive_closure(adj3)))
+    assert not bool(got.dirty) and int(st["n_repair"]) == 1
+    assert int(st["row_products"]) > 0 and float(got.repair_ema) > 0
+    # a dirty cache commits removals as a no-op (nothing to maintain)
+    dirty = cache._replace(dirty=jnp.asarray(True))
+    out, st = closure_cache.commit(
+        dirty, CacheDelta.edges_removed(rem_u, rem_v, jnp.asarray([True])),
+        adj3, with_stats=True)
+    assert bool(out.dirty) and int(st["n_repair"]) == 0
+    np.testing.assert_array_equal(np.asarray(out.closure),
+                                  np.asarray(dirty.closure))
 
 
 def test_refresh_cache_is_idempotent_and_traced():
@@ -166,10 +298,23 @@ def test_auto_uses_cache_when_clean_and_cost_model_when_dirty():
     assert int(r.stats.n_incremental) == 1  # clean cache -> incremental
     assert int(r.stats.row_products) == 0
     _assert_cache_exact(eng)
-    eng, _ = eng.remove_edges(arr([0]), arr([1]))
-    assert bool(eng.cache.dirty)
+    # the default auto policy MAINTAINS the cache through the delete, so
+    # the session never leaves the incremental fast path
+    eng, r = eng.remove_edges(arr([0]), arr([1]))
+    assert not bool(eng.cache.dirty) and int(r.stats.n_repair) == 1
+    _assert_cache_exact(eng)
     eng, r = eng.add_edges_acyclic(arr([3]), arr([4]))
-    # dirty -> the PR-2 two-way cost model (auto does NOT pay a rebuild)
+    assert int(r.stats.n_incremental) == 1
+    assert int(r.stats.row_products) == 0
+    # with delete repair opted out, deletes dirty the cache and auto runs
+    # the PR-2 two-way cost model (auto does NOT pay a rebuild)
+    engd = DagEngine.create(CAP,
+                            policy=CostModelPolicy(use_delete_repair=False))
+    engd, _ = engd.add_vertices(jnp.arange(16, dtype=jnp.int32))
+    engd, _ = engd.add_edges_acyclic(arr([0, 1]), arr([1, 2]))
+    engd, _ = engd.remove_edges(arr([0]), arr([1]))
+    assert bool(engd.cache.dirty)
+    engd, r = engd.add_edges_acyclic(arr([3]), arr([4]))
     assert int(r.stats.n_incremental) == 0
     assert int(r.stats.n_partial) + int(r.stats.n_products) > 0
     # opting out pins the old behavior even with a clean cache
@@ -183,7 +328,10 @@ def test_auto_uses_cache_when_clean_and_cost_model_when_dirty():
 def test_closure_branch_opportunistically_refreshes_auto_cache():
     """An auto closure-branch check with zero rejects computes exactly the
     new committed graph's closure — the cache comes back clean for free."""
-    eng = DagEngine.create(CAP)
+    # delete repair opted out so the remove leaves a DIRTY cache (the
+    # default auto policy would maintain it and never hit this branch)
+    eng = DagEngine.create(CAP,
+                           policy=CostModelPolicy(use_delete_repair=False))
     eng, _ = eng.add_vertices(jnp.arange(48, dtype=jnp.int32))
     eng, r = eng.add_edges_acyclic(arr([0]), arr([1]))
     assert bool(r.ok[0]) and not bool(eng.cache.dirty)
@@ -212,11 +360,21 @@ def test_reachable_reads_cache_when_clean():
     want = reachability.path_exists(eng.state, f, t)
     np.testing.assert_array_equal(np.asarray(eng.reachable(f, t)),
                                   np.asarray(want))
-    # dirty cache falls back to the full scan — same answers
+    # a maintained delete keeps the O(1) read path live — same answers
     eng, _ = eng.remove_edges(arr([1]), arr([2]))
-    assert bool(eng.cache.dirty)
+    assert not bool(eng.cache.dirty)
     want = reachability.path_exists(eng.state, f, t)
     np.testing.assert_array_equal(np.asarray(eng.reachable(f, t)),
+                                  np.asarray(want))
+    # dirty cache (repair opted out) falls back to the full scan
+    engd = DagEngine.create(
+        CAP, policy=FixedPolicy("incremental", use_delete_repair=False))
+    engd, _ = engd.add_vertices(jnp.arange(8, dtype=jnp.int32))
+    engd, _ = engd.add_edges_acyclic(arr([0, 1, 2]), arr([1, 2, 3]))
+    engd, _ = engd.remove_edges(arr([1]), arr([2]))
+    assert bool(engd.cache.dirty)
+    want = reachability.path_exists(engd.state, f, t)
+    np.testing.assert_array_equal(np.asarray(engd.reachable(f, t)),
                                   np.asarray(want))
 
 
@@ -351,7 +509,9 @@ def test_engine_checkpoint_roundtrip(tmp_path):
     eng = DagEngine.create(CAP, method="incremental", subbatches=2)
     eng, _ = eng.add_vertices(jnp.arange(12, dtype=jnp.int32))
     eng, _ = eng.add_edges_acyclic(arr([0, 1, 2, 3]), arr([1, 2, 3, 4]))
-    eng, _ = eng.remove_edges(arr([1]), arr([2]))  # leave a DIRTY cache
+    eng, _ = eng.remove_edges(arr([1]), arr([2]))  # repaired: seeds the EMA
+    assert not bool(eng.cache.dirty)
+    assert float(eng.cache.repair_ema) > 0
     save_engine_checkpoint(str(tmp_path), 7, eng)
 
     template = DagEngine.create(CAP, method="incremental", subbatches=2)
@@ -366,8 +526,10 @@ def test_engine_checkpoint_roundtrip(tmp_path):
                                   np.asarray(eng.depth_ema))
     np.testing.assert_array_equal(np.asarray(got.cache.closure),
                                   np.asarray(eng.cache.closure))
-    assert bool(got.cache.dirty) == bool(eng.cache.dirty) is True
-    # the restored session continues identically (incl. the lazy rebuild)
+    assert bool(got.cache.dirty) == bool(eng.cache.dirty) is False
+    # the NEW cache field (measured repair-depth EMA) round-trips too
+    assert float(got.cache.repair_ema) == float(eng.cache.repair_ema)
+    # the restored session continues identically
     us = arr(rng.integers(0, 12, 4))
     vs = arr(rng.integers(0, 12, 4))
     eng2, r_a = eng.add_edges_acyclic(us, vs)
@@ -375,6 +537,22 @@ def test_engine_checkpoint_roundtrip(tmp_path):
     np.testing.assert_array_equal(np.asarray(r_a.ok), np.asarray(r_b.ok))
     np.testing.assert_array_equal(np.asarray(eng2.cache.closure),
                                   np.asarray(got2.cache.closure))
+    # a DIRTY cache (delete repair opted out) round-trips as dirty and the
+    # restored session still lazily rebuilds
+    engd = DagEngine.create(
+        CAP, policy=FixedPolicy("incremental", use_delete_repair=False))
+    engd, _ = engd.add_vertices(jnp.arange(12, dtype=jnp.int32))
+    engd, _ = engd.add_edges_acyclic(arr([0, 1]), arr([1, 2]))
+    engd, _ = engd.remove_edges(arr([1]), arr([2]))
+    assert bool(engd.cache.dirty)
+    save_engine_checkpoint(str(tmp_path), 8, engd)
+    template_d = DagEngine.create(
+        CAP, policy=FixedPolicy("incremental", use_delete_repair=False))
+    got_d = restore_engine_checkpoint(str(tmp_path), template_d, step=8)
+    assert bool(got_d.cache.dirty)
+    got_d2, r_d = got_d.add_edges_acyclic(arr([2]), arr([3]))
+    assert bool(r_d.ok[0]) and int(r_d.stats.n_products) > 0
+    assert not bool(got_d2.cache.dirty)
 
 
 # ------------------------------------------------- per-shard depth EMAs
@@ -404,35 +582,47 @@ def test_depth_ema_is_per_shard_vector():
 
 @pytest.mark.parametrize("seed", range(2))
 def test_randomized_insert_delete_query_equivalence(seed):
-    """Randomized session: after EVERY op batch the incremental engine
-    matches a closure-method engine bit for bit and its clean cache equals
-    the from-scratch closure (delete-triggered rebuilds included)."""
+    """Randomized session: after EVERY op batch the delete-maintained
+    incremental engine matches a closure-method engine AND the forced
+    invalidate+rebuild engine bit for bit, and its clean cache equals the
+    from-scratch closure (delete repairs included)."""
     rng = np.random.default_rng(7000 + seed)
     eng_i = DagEngine.create(CAP, method="incremental")
+    eng_r = DagEngine.create(
+        CAP, policy=FixedPolicy("incremental", use_delete_repair=False))
     eng_c = DagEngine.create(CAP, method="closure")
-    saw_rebuild = False
+    saw_repair = False
     for _ in range(10):
         batch = _rand_batch(rng, n=8, key_space=10)
         eng_i, r_i = eng_i.apply(batch)
+        eng_r, r_r = eng_r.apply(batch)
         eng_c, r_c = eng_c.apply(batch)
         np.testing.assert_array_equal(np.asarray(r_i.ok),
                                       np.asarray(r_c.ok))
+        # maintained vs forced-rebuild: decision-identical by construction
+        np.testing.assert_array_equal(np.asarray(r_i.ok),
+                                      np.asarray(r_r.ok))
         np.testing.assert_array_equal(np.asarray(eng_i.state.adj),
                                       np.asarray(eng_c.state.adj))
-        # products under fixed incremental == a delete-triggered lazy
-        # rebuild inside the AddEdge phase (post-call the cache is clean
-        # again — the rebuild is in-step by design)
-        saw_rebuild |= int(r_i.stats.n_products) > 0
+        saw_repair |= int(r_i.stats.n_repair) > 0
         assert not bool(eng_i.cache.dirty)
         _assert_cache_exact(eng_i)
+        _assert_cache_exact(eng_r)  # vacuous when dirty, exact when clean
         f = arr(rng.integers(0, 10, 6))
         t = arr(rng.integers(0, 10, 6))
         np.testing.assert_array_equal(np.asarray(eng_i.reachable(f, t)),
                                       np.asarray(eng_c.reachable(f, t)))
-    assert saw_rebuild  # the stream must actually exercise invalidation
+        np.testing.assert_array_equal(np.asarray(eng_i.reachable(f, t)),
+                                      np.asarray(eng_r.reachable(f, t)))
+    assert saw_repair  # the stream must actually exercise maintenance
 
 
 def test_hypothesis_cache_equivalence():
+    """Satellite property test: randomized mixed add/remove vertex+edge
+    batches through the delete-MAINTAINED cache vs the sequential oracle
+    AND vs a forced full rebuild of the post-batch graph — the maintained
+    closure must equal the rebuilt closure bit for bit after every
+    batch."""
     pytest.importorskip(
         "hypothesis",
         reason="property tests need the dev extra (pip install -e .[dev])")
@@ -459,7 +649,11 @@ def test_hypothesis_cache_equivalence():
                                          np.asarray(b), acyclic=True,
                                          method="partial")
             np.testing.assert_array_equal(np.asarray(r.ok), want)
-            _assert_cache_exact(eng)
+            # maintained cache == forced full rebuild, bit for bit
+            assert not bool(eng.cache.dirty)
+            rebuilt = closure_cache.rebuild_cache(eng.state.adj)
+            np.testing.assert_array_equal(np.asarray(eng.cache.closure),
+                                          np.asarray(rebuilt.closure))
         assert bool(eng.is_acyclic())
 
     run()

@@ -211,3 +211,29 @@ def test_sgt_scheduler_tick():
     st, ok = sgt.finish(st, arr([1, 2]))
     assert int(st.n_committed) == 2
     assert int(dag.live_vertex_count(st.graph)) == 1  # txn 4
+
+
+def test_sgt_churn_tick_retires_conflict_edges():
+    from repro.core import sgt
+    st = sgt.new_scheduler(CAP)  # method="auto": delete-maintained cache
+    st, out = sgt.churn_tick(
+        st, arr([1, 2, 3, 4]),           # begins
+        arr([1, 2, 3]), arr([2, 3, 4]),  # conflicts (chain, all accepted)
+        arr([1]), arr([2]),              # retire 1->2 (predecessor done)
+        arr([4]))                        # finish txn 4
+    assert bool(jnp.all(out["began"]))
+    assert out["accepted"].tolist() == [True, True, True]
+    assert out["dropped"].tolist() == [True]
+    assert out["finished"].tolist() == [True]
+    assert not bool(dag.contains_edges(st.graph, arr([1]), arr([2]))[0])
+    assert bool(dag.contains_edges(st.graph, arr([2]), arr([3]))[0])
+    assert int(dag.live_vertex_count(st.graph)) == 3
+    # the retirement + finish were MAINTAINED, not invalidated: the
+    # engine's cache is clean and exact after the churn tick
+    assert not bool(st.engine.cache.dirty)
+    from repro.core import closure_cache
+    assert bool(closure_cache.cache_matches_state(st.engine.cache,
+                                                  st.engine.state.adj))
+    # retiring an edge that never existed is an exact no-op
+    st, ok = sgt.retire_conflicts(st, arr([3]), arr([2]))
+    assert bool(ok[0]) and not bool(st.engine.cache.dirty)

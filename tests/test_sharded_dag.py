@@ -152,6 +152,49 @@ SCRIPT = textwrap.dedent("""
                                       np.asarray(eng_si.cache.closure))
     assert bool(closure_cache.cache_matches_state(eng_si.cache,
                                                   eng_si.state.adj))
+
+    # row-sharded delete-repair scan (closure_delete_impl: S replicated
+    # once, per-device local hops, ZERO per-hop collectives) == the local
+    # masked scan == the from-scratch closure of the post-delete graph
+    a_d = np.asarray(a)
+    closure_d = reachability.transitive_closure(adj)
+    us_d, vs_d = np.nonzero(a_d)
+    u0, v0 = int(us_d[2]), int(vs_d[2])
+    a_d2 = a_d.copy(); a_d2[u0, v0] = False
+    adj_d2 = bitset.pack_bits(jnp.asarray(a_d2))
+    aff_d = closure_cache.affected_rows(closure_d,
+                                        jnp.asarray([u0], jnp.int32),
+                                        jnp.asarray([True]))
+    cl_ref, n_ref, rows_ref = closure_cache.masked_delete_scan(
+        adj_d2, closure_d, aff_d)
+    cl_sh, n_sh, rows_sh = sharded.closure_delete_impl(mesh)(
+        adj_d2, closure_d, aff_d)
+    np.testing.assert_array_equal(np.asarray(cl_sh), np.asarray(cl_ref))
+    np.testing.assert_array_equal(
+        np.asarray(cl_sh),
+        np.asarray(reachability.transitive_closure(adj_d2)))
+    assert int(rows_sh) <= int(rows_ref)  # per-device early exit
+
+    # delete-maintained sharded engine == local engine through edge AND
+    # vertex removals (the closure_delete commit path on the mesh)
+    for k in range(3):
+        du = jnp.asarray(rng_i.integers(0, 24, 4), jnp.int32)
+        dv = jnp.asarray(rng_i.integers(0, 24, 4), jnp.int32)
+        eng_li, r_dl = eng_li.remove_edges(du, dv)
+        eng_si, r_ds = eng_si.remove_edges(du, dv)
+        np.testing.assert_array_equal(np.asarray(r_dl.ok),
+                                      np.asarray(r_ds.ok))
+        assert int(r_dl.stats.n_repair) == int(r_ds.stats.n_repair)
+        np.testing.assert_array_equal(np.asarray(eng_li.cache.closure),
+                                      np.asarray(eng_si.cache.closure))
+    fv = jnp.asarray([3], jnp.int32)
+    eng_li, _ = eng_li.remove_vertices(fv)
+    eng_si, _ = eng_si.remove_vertices(fv)
+    np.testing.assert_array_equal(np.asarray(eng_li.cache.closure),
+                                  np.asarray(eng_si.cache.closure))
+    assert not bool(eng_si.cache.dirty)
+    assert bool(closure_cache.cache_matches_state(eng_si.cache,
+                                                  eng_si.state.adj))
     print("SHARDED-OK")
 """)
 
