@@ -1,0 +1,266 @@
+"""Capacity-sweep benchmark family: memory and migration curves for the
+growable engine (C = 2^10 .. 2^16), the scale story behind
+`DagEngine.grow`.
+
+Three row kinds per capacity, all with deterministic derived counters so
+`benchmarks/compare.py` can gate them without trusting wall clocks:
+
+  capacity_sweep_C{c}_insert   incremental-engine insert ticks at capacity
+                               C: median tick time, the exact boolean-
+                               matmul row-products (0 — the cache stays
+                               clean end to end), and the packed closure's
+                               resident bytes (C^2/8 — the quadratic curve
+                               ROADMAP wants in CI, not folklore).
+  capacity_sweep_C{c}_churn    the mixed churn stream at capacity C
+                               (C <= 2^12: the delete-repair hop's jnp
+                               reference unpacks (C, C) floats, which this
+                               host-CPU sweep deliberately does not
+                               materialize at larger C — the fused-kernel
+                               TPU row family is future work, per ROADMAP).
+  capacity_sweep_C{c}_grow     the C/2 -> C migration: wall time of the
+                               one-step grow, plus two bit-for-bit
+                               equality verdicts computed in-run —
+                               ``decisions_match`` (the grown engine and a
+                               fresh engine created at C replay identical
+                               histories and agree on every accept bit,
+                               every slab word, and every closure word)
+                               and ``restore_match`` (a checkpoint saved
+                               at C/2 restored into a C-capacity template
+                               equals the grown engine leaf for leaf).
+
+Insert batches shrink as C grows (B = max(8, 2^18/C)) so the rank-B
+fold-in's C x B x C work stays CI-sized; the fold-in runs through
+`closure_cache.chunked_update_impl`, which bounds transient memory at
+O(block x C) floats instead of the jnp reference's (C, C) product
+(~17 GB at 2^16).
+
+Run:  PYTHONPATH=src python -m benchmarks.capacity_sweep [--quick] [--json PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import platform
+import tempfile
+import time
+
+CAPACITIES = tuple(2 ** k for k in range(10, 17))  # 2^10 .. 2^16
+CHURN_MAX_CAPACITY = 4096  # see module docstring: jnp delete-hop memory
+
+# closure-update fold-in block size: transient memory ~ block x C floats
+_BLOCK_ROWS = 1024
+
+
+def _insert_batch_size(capacity: int) -> int:
+    """Shrink the insert batch as C grows so the C x B x C fold-in work
+    stays bounded across the sweep (~2^19 row-column products per tick)."""
+    return max(8, min(64, (2 ** 18) // capacity))
+
+
+def _pool_size(capacity: int) -> int:
+    return min(capacity // 2, 2048)
+
+
+def _make_engine(capacity: int):
+    from repro.api import DagEngine
+    from repro.core import closure_cache
+
+    return DagEngine.create(
+        capacity, method="incremental",
+        closure_update_impl=closure_cache.chunked_update_impl(_BLOCK_ROWS))
+
+
+def _populate(eng, n: int):
+    """Add vertices 0..n-1 in bounded chunks (lookup_slots materializes a
+    (B, C) bool mask, so one huge batch would cost B x C bytes)."""
+    import jax.numpy as jnp
+
+    step = 1024
+    for lo in range(0, n, step):
+        keys = jnp.arange(lo, min(lo + step, n), dtype=jnp.int32)
+        eng, _ = eng.add_vertices(keys)
+    return eng
+
+
+def _forward_edges(rng, pool: int, n: int):
+    """Cycle-free candidate edges (src key < dst key) over the live pool."""
+    import numpy as np
+
+    lo = rng.integers(0, pool - 1, n).astype(np.int32)
+    hi = rng.integers(lo + 1, pool).astype(np.int32)
+    return lo, hi
+
+
+def _closure_bytes(eng) -> int:
+    return int(eng.cache.closure.nbytes)
+
+
+def insert_row(capacity: int, quick: bool):
+    """Insert ticks on an incremental engine at ``capacity``; the cache
+    stays clean, so the deterministic row_products counter is exactly 0."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    ticks = 2 if quick else 4
+    b = _insert_batch_size(capacity)
+    pool = _pool_size(capacity)
+    eng = _populate(_make_engine(capacity), pool)
+
+    def tick(carry, us, vs):
+        eng, rp = carry
+        eng, r = eng.add_edges_acyclic(us, vs)
+        return eng, rp + r.stats.row_products
+
+    tick_fn = jax.jit(tick)
+    rng = np.random.default_rng(7)
+    inputs = [tuple(jnp.asarray(x) for x in _forward_edges(rng, pool, b))
+              for _ in range(ticks + 1)]
+    carry = (eng, jnp.zeros((), jnp.int32))
+    carry = tick_fn(carry, *inputs[0])  # warmup: compile + first fold-in
+    jax.block_until_ready(carry[0].state.adj)
+    times = []
+    for us, vs in inputs[1:]:
+        t0 = time.perf_counter()
+        carry = tick_fn(carry, us, vs)
+        jax.block_until_ready(carry[0].state.adj)
+        times.append(time.perf_counter() - t0)
+    eng, rp = carry
+    med_us = float(np.median(times)) * 1e6
+    return (f"capacity_sweep_C{capacity}_insert", med_us,
+            f"row_products={int(rp)}"
+            f"_closure_bytes={_closure_bytes(eng)}"
+            f"_batch={b}_ticks={ticks}")
+
+
+def churn_row(capacity: int, quick: bool):
+    """The mixed churn stream at ``capacity`` (delete-maintained cache):
+    deterministic repair row_products vs C."""
+    from repro.launch.serve import serve_sgt_churn
+
+    ticks = 4 if quick else 10
+    out = serve_sgt_churn(capacity=capacity, batch=128, ticks=ticks,
+                          method="incremental", profile="mixed")
+    return (f"capacity_sweep_C{capacity}_churn", out["tick_us"],
+            f"row_products={out['row_products']}"
+            f"_repairs={out['n_repairs']}"
+            f"_closure_bytes={capacity * capacity // 8}"
+            f"_ticks={ticks}")
+
+
+def grow_row(capacity: int, quick: bool):
+    """Time the C/2 -> C migration and verify — bit for bit, in-run — that
+    the grown engine equals a fresh engine created at C, both directly and
+    across a checkpoint restore."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.ft import checkpoint as ckpt
+
+    half = capacity // 2
+    b = _insert_batch_size(capacity)
+    pool = _pool_size(half)
+    rng = np.random.default_rng(11)
+    pre_us, pre_vs = _forward_edges(rng, pool, b)
+
+    def build(eng):
+        eng = _populate(eng, pool)
+        eng, r = eng.add_edges_acyclic(jnp.asarray(pre_us),
+                                       jnp.asarray(pre_vs))
+        return eng, r
+
+    pre, _ = build(_make_engine(half))
+    jax.block_until_ready(pre.cache.closure)
+
+    t0 = time.perf_counter()
+    grown = pre.grow(capacity)
+    jax.block_until_ready((grown.state.adj, grown.cache.closure))
+    migrate_us = (time.perf_counter() - t0) * 1e6
+
+    # a fresh engine at C replaying the identical history
+    fresh, _ = build(_make_engine(capacity))
+
+    def leaves_equal(a, b):
+        la, _ = jax.tree_util.tree_flatten(a)
+        lb, _ = jax.tree_util.tree_flatten(b)
+        return all(np.array_equal(np.asarray(x), np.asarray(y))
+                   for x, y in zip(la, lb))
+
+    # checkpoint at C/2 -> restore into a C-capacity template == grown
+    with tempfile.TemporaryDirectory() as d:
+        ckpt.save_engine_checkpoint(d, 0, pre)
+        restored = ckpt.restore_engine_checkpoint(d, _make_engine(capacity))
+    restore_match = leaves_equal(restored, grown)
+
+    # post-grow decision batch: half new forward edges, half reversals of
+    # the pre-grow accepted edges (guaranteed rejects) — accept decisions
+    # and all state must agree bit for bit
+    n_new = max(4, b // 2)
+    new_us, new_vs = _forward_edges(rng, pool, n_new)
+    dec_us = jnp.asarray(np.concatenate([new_us, pre_vs[:n_new]]))
+    dec_vs = jnp.asarray(np.concatenate([new_vs, pre_us[:n_new]]))
+    grown2, r_g = grown.add_edges_acyclic(dec_us, dec_vs)
+    fresh2, r_f = fresh.add_edges_acyclic(dec_us, dec_vs)
+    decisions_match = (
+        bool(jnp.all(r_g.ok == r_f.ok))
+        and leaves_equal(grown2, fresh2))
+    row_products = int(r_g.stats.row_products)
+
+    return (f"capacity_sweep_C{capacity}_grow", migrate_us,
+            f"migrate_us={migrate_us:.0f}"
+            f"_row_products={row_products}"
+            f"_closure_bytes={_closure_bytes(grown)}"
+            f"_decisions_match={int(decisions_match)}"
+            f"_restore_match={int(restore_match)}")
+
+
+def all_rows(quick: bool = False):
+    rows = []
+    for c in CAPACITIES:
+        rows.append(insert_row(c, quick))
+        if c <= CHURN_MAX_CAPACITY:
+            rows.append(churn_row(c, quick))
+        else:
+            print(f"# capacity_sweep: churn row skipped at C={c} "
+                  f"(> {CHURN_MAX_CAPACITY}: jnp delete-repair hop would "
+                  f"materialize (C, C) floats on the host CPU)")
+        rows.append(grow_row(c, quick))
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write rows as JSON (benchmarks/compare.py "
+                         "input; gate with --only capacity_sweep)")
+    args = ap.parse_args()
+
+    rows = all_rows(quick=args.quick)
+
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+    if args.json:
+        import jax
+        payload = {
+            "meta": {
+                "quick": args.quick,
+                "jax": jax.__version__,
+                "backend": jax.default_backend(),
+                "python": platform.python_version(),
+                "family": "capacity_sweep",
+            },
+            "rows": [{"name": n, "us_per_call": us, "derived": d}
+                     for n, us, d in rows],
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+            f.write("\n")
+        print(f"# wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

@@ -22,6 +22,15 @@ What is compared, and why the checks differ in strictness:
   re-derivation) must come in strictly below the PR-4 invalidate+rebuild
   baseline (``*_incremental_rebuild``) on the same churn stream.
 
+* **Capacity-sweep gates** (``capacity_sweep_C{c}_*``) are within-run and
+  deterministic: resident closure bytes must equal the analytic ``C^2/8``;
+  the grow rows' bit-for-bit verdicts (``decisions_match`` /
+  ``restore_match`` — the grown engine vs a fresh engine created at C,
+  directly and across a checkpoint restore) must both be 1; and the
+  one-step migration must cost at most ``GROW_COST_TICKS`` same-capacity
+  insert ticks.  The standalone CI step gates this family alone via
+  ``--only capacity_sweep``.
+
 * **Absolute wall times do not transfer between machines**, so time checks
   are within-run or ratio-based:
     - auto-never-worse: for every ``algo*_B{n}`` triple *in the PR run*,
@@ -62,6 +71,10 @@ INSHEAVY_RE = re.compile(
 CHURN_RE = re.compile(
     r"^sgt_tick_(delheavy|mixed)_(b\d+)_"
     r"(closure|partial|incremental|incremental_rebuild)$")
+CAPACITY_RE = re.compile(r"^capacity_sweep_C(\d+)_(insert|churn|grow)$")
+CLOSURE_BYTES_RE = re.compile(r"closure_bytes=(\d+)")
+DECISIONS_RE = re.compile(r"decisions_match=(\d+)")
+RESTORE_RE = re.compile(r"restore_match=(\d+)")
 
 # absolute slack (us) added to within-run time comparisons so that
 # microsecond-scale rows don't trip the gate on timer noise alone
@@ -70,6 +83,19 @@ ABS_SLACK_US = 250.0
 # the DagEngine session façade must stay within this fraction of the
 # function-path SGT throughput on the same shape (within-run comparison)
 ENGINE_TOLERANCE = 0.10
+
+# the one-step C/2 -> C grow migration (a zero-pad re-embedding, pure
+# memory traffic over C^2/8 bytes) must cost no more than this many
+# same-capacity insert ticks, within-run...
+GROW_COST_TICKS = 4.0
+# ...plus this absolute allowance: the timed grow includes the one-shot
+# XLA compile of the pad/concat graph (~100ms on the CI box), which
+# dwarfs the actual memory traffic at small C.  Migration runs once per
+# doubling, so a fixed per-grow overhead is acceptable by construction —
+# the gate exists to catch accidental RECOMPUTATION (anything scaling
+# like a rebuild), which at C >= 2^14 exceeds this slack by orders of
+# magnitude.
+GROW_ABS_SLACK_US = 500_000.0
 
 
 def load_rows(path: str) -> dict:
@@ -99,7 +125,8 @@ def check(pr: dict, base: dict, tol: float, time_tol: float) -> list:
     # 1. coverage: every gated baseline row must still be produced
     for name in base:
         if (ALGO_B_RE.match(name) or SGT_RE.match(name)
-                or INSHEAVY_RE.match(name) or CHURN_RE.match(name)) \
+                or INSHEAVY_RE.match(name) or CHURN_RE.match(name)
+                or CAPACITY_RE.match(name)) \
                 and name not in pr:
             failures.append(f"missing row: {name} (present in baseline)")
 
@@ -250,6 +277,52 @@ def check(pr: dict, base: dict, tol: float, time_tol: float) -> list:
                 f"row_products {rwp_m} not strictly below the "
                 f"invalidate+rebuild baseline ({rwp_r})")
 
+    # 4e. within-run, deterministic: the capacity-sweep family.  Resident
+    # closure bytes are analytic (exactly C^2/8 for the packed uint32
+    # cache — any drift means the representation changed); the grow rows
+    # carry two bit-for-bit verdicts computed in-run (grown engine ==
+    # fresh engine at C on every accept decision and every state leaf,
+    # and checkpoint-at-C/2 restored into C == grown) that must both be
+    # 1; and the one-step migration must stay within GROW_COST_TICKS
+    # same-capacity insert ticks (it is a zero-pad re-embedding, not a
+    # rebuild).
+    cap_rows = {}
+    for name, row in pr.items():
+        m = CAPACITY_RE.match(name)
+        if m:
+            cap_rows.setdefault(int(m.group(1)), {})[m.group(2)] = row
+    for cap, by_kind in sorted(cap_rows.items()):
+        for kind, row in sorted(by_kind.items()):
+            m = CLOSURE_BYTES_RE.search(row["derived"])
+            if m is None or int(m.group(1)) != cap * cap // 8:
+                got = m.group(1) if m else "missing"
+                failures.append(
+                    f"capacity_sweep_C{cap}_{kind}: closure_bytes {got} != "
+                    f"C^2/8 = {cap * cap // 8} (packed cache representation "
+                    f"changed?)")
+        grow = by_kind.get("grow")
+        if grow is not None:
+            for label, regex in (("decisions_match", DECISIONS_RE),
+                                 ("restore_match", RESTORE_RE)):
+                m = regex.search(grow["derived"])
+                if m is None or int(m.group(1)) != 1:
+                    failures.append(
+                        f"capacity_sweep_C{cap}_grow: {label}="
+                        f"{m.group(1) if m else 'missing'} — the grown "
+                        f"engine is not bit-for-bit equal to a fresh "
+                        f"engine at C={cap}")
+            insert = by_kind.get("insert")
+            if insert is not None:
+                bound = (insert["us_per_call"] * GROW_COST_TICKS
+                         + GROW_ABS_SLACK_US)
+                if grow["us_per_call"] > bound:
+                    failures.append(
+                        f"capacity_sweep_C{cap}_grow: migration "
+                        f"{grow['us_per_call']:.0f}us exceeds "
+                        f"{GROW_COST_TICKS:.0f}x the same-capacity insert "
+                        f"tick ({insert['us_per_call']:.0f}us) + "
+                        f"{GROW_ABS_SLACK_US:.0f}us one-shot slack")
+
     # 5. ratio drift vs baseline: algo2/algo1 wall-time ratio
     for n_cand in batches:
         c_name, p_name = f"algo1_closure_B{n_cand}", f"algo2_partial_B{n_cand}"
@@ -280,9 +353,17 @@ def main() -> int:
     ap.add_argument("--time-tolerance", type=float, default=1.0,
                     help="max relative drift for wall-time ratio checks "
                          "(default 1.0 == 2x; loose — CI timers are noisy)")
+    ap.add_argument("--only", default=None, metavar="REGEX",
+                    help="gate only rows whose name matches REGEX "
+                         "(filters both PR and baseline; used by the "
+                         "standalone capacity-sweep CI step)")
     args = ap.parse_args()
 
     pr, base = load_rows(args.pr_json), load_rows(args.baseline_json)
+    if args.only:
+        only = re.compile(args.only)
+        pr = {n: r for n, r in pr.items() if only.search(n)}
+        base = {n: r for n, r in base.items() if only.search(n)}
     failures = check(pr, base, args.tolerance, args.time_tolerance)
     if failures:
         print(f"BENCH GATE: {len(failures)} regression(s)")

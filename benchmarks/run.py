@@ -22,6 +22,8 @@ def collect_rows(quick: bool):
         rows += kernel_bench.all_rows()
     from benchmarks import sgt_bench
     rows += sgt_bench.all_rows(quick=quick)
+    from benchmarks import capacity_sweep
+    rows += capacity_sweep.all_rows(quick=quick)
     return rows
 
 

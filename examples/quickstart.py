@@ -90,6 +90,29 @@ def run_session(backend: str):
     print("reachable 1~>3, 3~>1:",
           eng_i.reachable(arr([1, 3]), arr([3, 1])).tolist())
 
+    # --- growable capacity: one-step migration, zero rebuilds ---
+    # grow() re-embeds every leaf (slab, packed closure, depth EMAs) at
+    # the larger capacity in one jit-compatible zero-pad step; slots keep
+    # their indices, so the session is bit-for-bit the one a fresh
+    # C'-capacity engine would have reached on the same history — and the
+    # clean closure cache STAYS clean (no warm-up rebuild after growing)
+    eng_g = eng_i.grow(4096)
+    print("grow 1024 -> 4096: capacity =", eng_g.capacity,
+          "| cache still clean:", not bool(eng_g.cache.dirty))
+    eng_g, r = eng_g.add_edges_acyclic(arr([5]), arr([6]))
+    print("post-grow insert:", r.ok.tolist(),
+          "| row-products:", int(r.stats.row_products), "(still cached)")
+
+    # auto_grow=True turns overflow backpressure into growth on eager
+    # calls: a full engine doubles until the batch fits, then retries it
+    # (under jit, shapes are static — grow between ticks via sgt.maybe_grow
+    # or serve.py --auto-grow instead).  Local backend here: 32 slots
+    # would break the sharded alignment rule (multiples of 32 x n_devices)
+    tiny = DagEngine.create(32, auto_grow=True)
+    tiny, r = tiny.add_vertices(arr(list(range(50))))
+    print("auto_grow: 50 vertices into a 32-slot engine -> capacity",
+          tiny.capacity, "| all landed:", bool(r.ok.all()))
+
 
 def main():
     # the SAME session code serves both engines: "local" places the

@@ -20,6 +20,7 @@ The SGT scheduler application (`SgtState` & friends) and the low-level
 """
 from repro.core.engine import (  # noqa: F401
     BACKENDS, DagEngine, EngineConfig, OpBatch, OpResult, ReachStats,
+    validate_capacity,
 )
 from repro.core.closure_cache import CacheDelta, ClosureCache  # noqa: F401
 from repro.core.dispatch import (  # noqa: F401

@@ -67,14 +67,24 @@ def _dedupe_enabled(rows: jax.Array, cols: jax.Array, enable: jax.Array,
                     capacity: int) -> jax.Array:
     """First-occurrence mask over enabled (row, col) pairs.
 
-    Disabled entries get unique sentinel keys so they never suppress an
-    enabled duplicate.
+    Sorts lexicographically on (enable, row, col) rather than on the
+    composed key ``row * capacity + col`` — the composed form overflows
+    int32 once capacity reaches 2^16 (keys span [0, C^2)).  Disabled
+    entries sort into their own group with unique per-index keys, so they
+    never suppress an enabled duplicate.
     """
     b = rows.shape[0]
-    key = rows * capacity + cols
-    sentinel = capacity * capacity + jnp.arange(b, dtype=key.dtype)
-    key = jnp.where(enable, key, sentinel)
-    return _first_occurrence(key)
+    idx = jnp.arange(b, dtype=rows.dtype)
+    en = enable.astype(rows.dtype)
+    k_row = jnp.where(enable, rows, idx)
+    k_col = jnp.where(enable, cols, jnp.zeros_like(cols))
+    order = jnp.lexsort((k_col, k_row, en))
+    sk_e, sk_r, sk_c = en[order], k_row[order], k_col[order]
+    first_sorted = jnp.concatenate([
+        jnp.ones((1,), bool),
+        (sk_e[1:] != sk_e[:-1]) | (sk_r[1:] != sk_r[:-1])
+        | (sk_c[1:] != sk_c[:-1])])
+    return jnp.zeros_like(first_sorted).at[order].set(first_sorted)
 
 
 def scatter_set_bits(packed: jax.Array, rows: jax.Array, cols: jax.Array,

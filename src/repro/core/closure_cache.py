@@ -111,6 +111,27 @@ def empty_cache(capacity: int, dirty: bool = False) -> ClosureCache:
                         jnp.asarray(dirty), jnp.zeros((), jnp.float32))
 
 
+def grow_cache(cache: ClosureCache, new_capacity: int) -> ClosureCache:
+    """Re-embed the cache at a larger capacity in one jit-compatible step.
+
+    `dag.grow_state` keeps slot indices, so the grown graph is the old graph
+    plus isolated free slots — its strict closure is exactly the old closure
+    zero-padded.  The clean/dirty status and the measured repair-depth EMA
+    therefore carry over unchanged: a clean cache stays clean through a grow
+    (no spurious rebuild follows), and a dirty one stays merely dirty.
+    """
+    c, w = cache.closure.shape
+    if new_capacity == c:
+        return cache
+    if new_capacity < c:
+        raise ValueError(
+            f"cannot shrink: new capacity {new_capacity} < current {c}")
+    w_new = bitset.n_words(new_capacity)
+    return ClosureCache(
+        jnp.pad(cache.closure, ((0, new_capacity - c), (0, w_new - w))),
+        cache.dirty, cache.repair_ema)
+
+
 def rebuild_cache(adj_packed: jax.Array,
                   matmul_impl: Optional[MatmulImpl] = None) -> ClosureCache:
     """From-scratch rebuild: the lazy-revalidation (and test-oracle) path."""
@@ -378,6 +399,38 @@ def _default_update_impl(closure: jax.Array, mask_packed: jax.Array,
     from repro.core.reachability import bool_matmul_packed
 
     return closure | bool_matmul_packed(mask_packed, rows_packed)
+
+
+def chunked_update_impl(block_rows: int = 1024) -> ClosureUpdateImpl:
+    """Memory-bounded jnp realization of the rank-B update.
+
+    The reference `_default_update_impl` unpacks both operands and
+    materializes the full (C, C) float product — ~17 GB at C = 2^16 — so it
+    cannot run large capacities on a host CPU.  This variant streams the
+    closure in ``block_rows``-row blocks via `lax.map`: per block it is a
+    (R, B) x (B, C) float product packed straight back to words, bounding
+    transient memory at O(block_rows * C) floats while computing the
+    identical result.  `benchmarks/capacity_sweep.py` wires it as the
+    engine's ``closure_update_impl`` for the large-capacity rows.
+    """
+    def impl(closure: jax.Array, mask_packed: jax.Array,
+             rows_packed: jax.Array) -> jax.Array:
+        c = closure.shape[0]
+        r = min(block_rows, c)
+        if c % r != 0:  # fall back rather than pad the row axis
+            return _default_update_impl(closure, mask_packed, rows_packed)
+        rows = bitset.unpack_bits(rows_packed).astype(jnp.float32)  # (B, C)
+
+        def block(args):
+            cl_blk, mask_blk = args
+            m = bitset.unpack_bits(mask_blk).astype(jnp.float32)  # (R, B)
+            return cl_blk | bitset.pack_bits((m @ rows) > 0)
+
+        out = jax.lax.map(block, (closure.reshape(c // r, r, -1),
+                                  mask_packed.reshape(c // r, r, -1)))
+        return out.reshape(c, -1)
+
+    return impl
 
 
 def insert_update(closure: jax.Array, u_slots: jax.Array,

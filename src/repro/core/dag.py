@@ -52,6 +52,36 @@ def new_state(capacity: int) -> DagState:
     )
 
 
+def grow_state(state: DagState, new_capacity: int) -> DagState:
+    """Re-embed the slab at a larger capacity in one jit-compatible step.
+
+    Slots keep their indices, so growth is pure zero-padding: new key slots
+    are EMPTY_KEY (free-list candidates), new alive bits are False, and the
+    adjacency pads with zero rows and zero high words — no bit moves, and
+    the strict closure of the padded graph IS the padded closure (which is
+    what lets `closure_cache.grow_cache` carry a clean cache through a grow
+    without a rebuild).  ``n_overflow`` rides through unchanged: it is a
+    cumulative drop counter and the engine reasons in deltas.
+    """
+    c = state.capacity
+    if new_capacity == c:
+        return state
+    if new_capacity < c:
+        raise ValueError(
+            f"cannot shrink: new capacity {new_capacity} < current {c}")
+    w = state.adj.shape[1]
+    w_new = bitset.n_words(new_capacity)
+    return DagState(
+        keys=jnp.concatenate([
+            state.keys,
+            jnp.full((new_capacity - c,), EMPTY_KEY, jnp.int32)]),
+        alive=jnp.concatenate([
+            state.alive, jnp.zeros((new_capacity - c,), bool)]),
+        adj=jnp.pad(state.adj, ((0, new_capacity - c), (0, w_new - w))),
+        n_overflow=state.n_overflow,
+    )
+
+
 def lookup_slots(state: DagState, keys: jax.Array):
     """keys int32[B] -> (slot int32[B], found bool[B])."""
     m = state.alive[None, :] & (state.keys[None, :] == keys[:, None])

@@ -61,7 +61,7 @@ cost model).
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple, Optional
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -208,10 +208,46 @@ class EngineConfig:
     # `kernels/ops.closure_delete` hop on TPU).  None = derived like
     # closure_update_impl: row-sharded on the mesh, the jnp scan locally
     closure_delete_impl: Optional[object] = None
+    # eager-call backpressure reaction: when a mutating call reports
+    # ``n_overflow > 0``, double capacity (via `DagEngine.grow`) until the
+    # dropped adds fit and transparently re-run the call.  Host-side only —
+    # under jit shapes are static, so traced calls keep the report-and-drop
+    # contract and the controller grows between ticks (`launch/serve.py`)
+    auto_grow: bool = False
 
     @property
     def n_devices(self) -> int:
         return int(self.mesh.devices.size) if self.mesh is not None else 1
+
+
+def _capacity_alignment(backend: str, n_dev: int) -> Tuple[int, str]:
+    """(required multiple, human reason) for a backend's capacity grid."""
+    if backend == "sharded":
+        return (bitset.WORD * n_dev,
+                f"32 bits x {n_dev} devices")
+    return bitset.WORD, "32-bit packed words"
+
+
+def validate_capacity(capacity: int, *, backend: str = "local",
+                      n_dev: int = 1, what: str = "capacity") -> None:
+    """Raise ValueError unless ``capacity`` sits on the backend's grid
+    (local: a multiple of WORD; sharded: of WORD * n_dev), naming the
+    nearest valid capacity in the message.  Shared by `DagEngine.create`
+    and `DagEngine.grow` so the error fires up front, not post-hoc from
+    deep inside `bitset.n_words` or a mesh reshape."""
+    align, why = _capacity_alignment(backend, n_dev)
+    if capacity <= 0:
+        raise ValueError(f"{what} must be positive, got {capacity}")
+    if capacity % align != 0:
+        down = (capacity // align) * align
+        up = down + align
+        # ties round UP: the request is a floor (a grow that suggests the
+        # current capacity back would be no suggestion at all)
+        nearest = up if (down == 0 or capacity - down >= up - capacity) \
+            else down
+        raise ValueError(
+            f"{backend} {what} must be a multiple of {align} ({why}), got "
+            f"{capacity}; nearest valid capacity is {nearest}")
 
 
 @jax.tree_util.register_pytree_node_class
@@ -236,7 +272,8 @@ class DagEngine:
                matmul_impl: Optional[MatmulImpl] = None,
                policy: Optional[dispatch.DispatchPolicy] = None,
                mesh=None, closure_update_impl=None,
-               closure_delete_impl=None) -> "DagEngine":
+               closure_delete_impl=None,
+               auto_grow: bool = False) -> "DagEngine":
         """Create an empty engine.  ``policy`` overrides ``method``; with
         ``policy=None`` the method string resolves to `CostModelPolicy`
         ("auto", the default everywhere) or `FixedPolicy`
@@ -251,12 +288,23 @@ class DagEngine:
         ``closure_delete_impl`` overrides the delete-repair masked scan
         (e.g. ``lambda adj, cl, aff: closure_cache.masked_delete_scan(
         adj, cl, aff, hop_impl=kernels.ops.closure_delete)`` on TPU).
+        ``auto_grow=True`` makes eager mutating calls react to the
+        ``n_overflow`` backpressure signal by doubling capacity (via
+        `grow`) and re-running the call instead of dropping adds.
         """
         if backend not in BACKENDS:
             raise ValueError(
                 f"backend must be one of {BACKENDS}, got {backend!r}")
         if subbatches < 1:
             raise ValueError(f"subbatches must be >= 1, got {subbatches}")
+        if backend == "sharded":
+            from repro.core import sharded as sharded_mod
+            mesh = mesh if mesh is not None else sharded_mod.make_dag_mesh()
+            validate_capacity(capacity, backend="sharded",
+                              n_dev=int(mesh.devices.size))
+        else:
+            mesh = None
+            validate_capacity(capacity, backend="local")
         policy = dispatch.policy_for_method(method, policy)
         method = dispatch.method_name(policy)
         state = dag_mod.new_state(capacity)
@@ -265,24 +313,15 @@ class DagEngine:
         # the first tick)
         cache = closure_cache.empty_cache(capacity)
         if backend == "sharded":
-            from repro.core import sharded as sharded_mod
-            mesh = mesh if mesh is not None else sharded_mod.make_dag_mesh()
-            n_dev = int(mesh.devices.size)
-            if capacity % (bitset.WORD * n_dev) != 0:
-                raise ValueError(
-                    f"sharded capacity must be a multiple of "
-                    f"{bitset.WORD * n_dev} (32 bits x {n_dev} devices), "
-                    f"got {capacity}")
             state = sharded_mod.shard_state(state, mesh)
             cache = sharded_mod.shard_cache(cache, mesh)
-        else:
-            mesh = None
         config = EngineConfig(capacity=capacity, backend=backend,
                               method=method, subbatches=subbatches,
                               matmul_impl=matmul_impl, policy=policy,
                               mesh=mesh,
                               closure_update_impl=closure_update_impl,
-                              closure_delete_impl=closure_delete_impl)
+                              closure_delete_impl=closure_delete_impl,
+                              auto_grow=auto_grow)
         n_dev = config.n_devices
         return cls(state, jnp.zeros((n_dev,), jnp.float32), cache, config)
 
@@ -328,6 +367,64 @@ class DagEngine:
             if matmul_impl is dataclasses.MISSING else matmul_impl,
             policy=policy)
         return DagEngine(self.state, self.depth_ema, self.cache, new)
+
+    # --------------------------------------------------------------- growth
+
+    def grow(self, new_capacity: int) -> "DagEngine":
+        """Re-embed the whole session at a larger capacity in one
+        jit-compatible migration step -> a new engine at ``new_capacity``.
+
+        Slots keep their indices, so the migration is pure zero-padding:
+        the `DagState` slab pads with free slots, the packed closure cache
+        pads with zero rows/words — preserving its clean/dirty status and
+        the measured repair-depth EMA, so no spurious rebuild follows a
+        grow — and the per-shard deciding-depth EMA rides through
+        unchanged.  The `EngineConfig` is re-derived at ``new_capacity``;
+        on the sharded backend the grown slab and cache are re-placed
+        row-sharded over the same mesh (``new_capacity`` must stay a
+        multiple of WORD * n_devices — validated up front, with the
+        nearest valid capacity named in the error).
+
+        The grown engine is decision-identical to a fresh engine created
+        at ``new_capacity`` and replayed (pinned by tests/test_grow.py and
+        gated in CI by `benchmarks/capacity_sweep.py`); ``grow`` to the
+        current capacity is the identity.
+        """
+        cfg = self.config
+        validate_capacity(new_capacity, backend=cfg.backend,
+                          n_dev=cfg.n_devices, what="grown capacity")
+        if new_capacity < cfg.capacity:
+            raise ValueError(
+                f"cannot shrink: grown capacity {new_capacity} < current "
+                f"{cfg.capacity}")
+        if new_capacity == cfg.capacity:
+            return self
+        state = dag_mod.grow_state(self.state, new_capacity)
+        cache = closure_cache.grow_cache(self.cache, new_capacity)
+        if cfg.backend == "sharded":
+            from repro.core import sharded as sharded_mod
+            state = sharded_mod.shard_state(state, cfg.mesh)
+            cache = sharded_mod.shard_cache(cache, cfg.mesh)
+        config = dataclasses.replace(cfg, capacity=new_capacity)
+        return DagEngine(state, self.depth_ema, cache, config)
+
+    def _grown_for_overflow(self, result: "OpResult") -> Optional["DagEngine"]:
+        """Under ``auto_grow``, the PRE-call engine doubled until the adds
+        ``result`` dropped would fit — or None when no growth applies.
+        Host-side by design: a traced ``n_overflow`` (static shapes under
+        jit) defers to the between-ticks controller, preserving the
+        report-and-drop contract for compiled callers."""
+        if not self.config.auto_grow:
+            return None
+        if isinstance(result.n_overflow, jax.core.Tracer):
+            return None
+        need = int(result.n_overflow)
+        if need <= 0:
+            return None
+        new_cap = self.config.capacity
+        while new_cap - self.config.capacity < need:
+            new_cap *= 2
+        return self.grow(new_cap)
 
     # ------------------------------------------------------------- pytree
 
@@ -478,10 +575,17 @@ class DagEngine:
 
     def add_vertices(self, keys, valid=None):
         """AddVertex batch -> (engine, OpResult); overflowed adds report
-        ok=False and count into ``result.n_overflow``."""
+        ok=False and count into ``result.n_overflow`` (unless ``auto_grow``
+        and the call is eager, in which case capacity doubles until the
+        batch fits and the call transparently re-runs)."""
         state, ok = dag_mod.add_vertices(self.state, keys, valid=valid)
         res = OpResult(ok, self._overflow_delta(state),
                        ReachStats.zeros(self.config.n_devices))
+        grown = self._grown_for_overflow(res)
+        if grown is not None:
+            # immutability makes the retry exact: re-apply the original
+            # batch to the grown PRE-call engine
+            return grown.add_vertices(keys, valid=valid)
         # vertex adds never touch adjacency: a clean cache stays clean
         return self._with_state(state, self.cache), res
 
@@ -652,5 +756,9 @@ class DagEngine:
             cache = self._invalidated_cache(state)
         res = OpResult(ok, self._overflow_delta(state),
                        ReachStats.from_raw(stats))
+        grown = self._grown_for_overflow(res)
+        if grown is not None:
+            # re-apply the original batch to the grown PRE-call engine
+            return grown.apply(batch, acyclic=acyclic)
         return self._with_state(state, cache,
                                 stats if acyclic else None), res

@@ -51,14 +51,41 @@ class SgtState(NamedTuple):
 
 def new_scheduler(capacity: int, *, backend: str = "local",
                   method: str = "auto", subbatches: int = 1,
-                  matmul_impl=None, policy=None, mesh=None) -> SgtState:
+                  matmul_impl=None, policy=None, mesh=None,
+                  auto_grow: bool = False) -> SgtState:
     """Scheduler over a fresh engine session; the keyword options mirror
-    `DagEngine.create` (default: local backend, adaptive dispatch)."""
+    `DagEngine.create` (default: local backend, adaptive dispatch).
+    ``auto_grow`` reacts to capacity backpressure on EAGER calls; jitted
+    tick loops grow between ticks instead (`grow` / `maybe_grow`)."""
     z = jnp.zeros((), jnp.int32)
     eng = DagEngine.create(capacity, backend=backend, method=method,
                            subbatches=subbatches, matmul_impl=matmul_impl,
-                           policy=policy, mesh=mesh)
+                           policy=policy, mesh=mesh, auto_grow=auto_grow)
     return SgtState(eng, z, z, z)
+
+
+def grow(state: SgtState, new_capacity: int) -> SgtState:
+    """Re-embed the scheduler's conflict graph at a larger capacity (one
+    `DagEngine.grow` migration step: slab, closure cache, and dispatch
+    EMAs carry over; transaction counters are untouched)."""
+    return state._replace(engine=state.engine.grow(new_capacity))
+
+
+def maybe_grow(state: SgtState, overflow_handled: int = 0,
+               factor: int = 2):
+    """Between-ticks backpressure hook (host-side, for jitted tick loops
+    whose static shapes cannot grow mid-tick): if the engine dropped
+    begins for capacity since ``overflow_handled`` drops were last
+    accounted, grow by ``factor`` and return the new high-water mark.
+
+    Returns ``(state', overflow_handled')`` — callers thread the mark
+    through their tick loop (`launch/serve.py` does; dropped begins stay
+    dropped, but the NEXT tick has room).
+    """
+    seen = int(state.engine.state.n_overflow)
+    if seen > overflow_handled:
+        state = grow(state, state.engine.capacity * factor)
+    return state, seen
 
 
 def begin(state: SgtState, txn_ids: jax.Array, valid=None):

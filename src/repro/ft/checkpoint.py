@@ -111,6 +111,22 @@ def save_engine_checkpoint(directory: str, step: int, engine) -> str:
     return save_checkpoint(directory, step, engine)
 
 
+def _saved_capacity(directory: str, step: Optional[int]) -> Optional[int]:
+    """Capacity a checkpoint was saved at: leaf 0 of the engine pytree is
+    ``state.keys`` (int32[C]), so the manifest's first shape names it."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            return None
+    path = os.path.join(directory, f"step_{step:08d}", "manifest.json")
+    try:
+        with open(path) as f:
+            manifest = json.load(f)
+        return int(manifest["shapes"][0][0])
+    except (OSError, KeyError, IndexError, ValueError):
+        return None
+
+
 def restore_engine_checkpoint(directory: str, like, step: Optional[int] = None,
                               shardings: Any = None):
     """Restore a `DagEngine` session into the structure of ``like`` (an
@@ -119,10 +135,36 @@ def restore_engine_checkpoint(directory: str, like, step: Optional[int] = None,
     different mesh, exactly like `restore_checkpoint`; on the sharded
     backend pass the sharding tree of the target engine.
 
+    A checkpoint saved at capacity ``C`` also restores into a ``like``
+    engine grown to ``C' >= C``: the leaves are restored at the saved
+    capacity and migrated up through `DagEngine.grow` — bit-for-bit
+    identical to growing before the save (pinned in tests/test_grow.py).
+
     Returns the restored engine; a session resumed from it continues
     identically — including the closure cache, so no warm-up rebuild is
     paid after restart (round-trip pinned in tests/test_closure_cache.py).
     """
+    like_capacity = getattr(like, "capacity", None)
+    saved = _saved_capacity(directory, step)
+    if like_capacity is not None and saved is not None \
+            and saved != like_capacity:
+        if saved > like_capacity:
+            raise ValueError(
+                f"checkpoint capacity {saved} exceeds the target engine's "
+                f"{like_capacity}; restore into an engine of capacity >= "
+                f"{saved}")
+        import dataclasses
+
+        from repro.core import closure_cache as cc_mod
+        from repro.core import dag as dag_mod
+        small_cfg = dataclasses.replace(like.config, capacity=saved)
+        small = type(like)(dag_mod.new_state(saved), like.depth_ema,
+                           cc_mod.empty_cache(saved), small_cfg)
+        restored = restore_checkpoint(directory, small, step=step)
+        grown = restored.grow(like_capacity)
+        if shardings is not None:
+            grown = jax.tree.map(jax.device_put, grown, shardings)
+        return grown
     return restore_checkpoint(directory, like, step=step,
                               shardings=shardings)
 

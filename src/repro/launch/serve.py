@@ -44,18 +44,29 @@ def _sgt_tick_inputs(capacity: int, batch: int, ticks: int, seed: int):
     return inputs
 
 
-def _sgt_driver(capacity: int, subbatches: int, method: str):
-    """(carry0, step, finalize) for the `core/sgt.schedule_tick` surface."""
+def _sgt_driver(capacity: int, subbatches: int, method: str,
+                auto_grow: bool = False):
+    """(carry0, step, finalize) for the `core/sgt.schedule_tick` surface.
+
+    ``auto_grow`` turns the engine's ``n_overflow`` backpressure signal
+    into between-ticks capacity growth (`core/sgt.maybe_grow`): a jitted
+    tick has static shapes and must report-and-drop, but the host loop
+    doubles the conflict graph before the next tick, so sustained load
+    stops silently dropping begins.  Growth recompiles the tick for the
+    new capacity — amortized by doubling."""
     from repro.core import sgt
 
     carry0 = sgt.new_scheduler(capacity, method=method,
                                subbatches=subbatches)
     tick_fn = jax.jit(lambda st, b, cs, cd, f: sgt.schedule_tick(
         st, b, cs, cd, f)[0])
+    overflow_mark = [0]
 
     def step(st, xs):
         st = tick_fn(st, *xs)
         jax.block_until_ready(st.graph.adj)
+        if auto_grow:
+            st, overflow_mark[0] = sgt.maybe_grow(st, overflow_mark[0])
         return st
 
     def finalize(st):
@@ -66,11 +77,14 @@ def _sgt_driver(capacity: int, subbatches: int, method: str):
     return carry0, step, finalize
 
 
-def _engine_driver(capacity: int, subbatches: int, method: str):
+def _engine_driver(capacity: int, subbatches: int, method: str,
+                   auto_grow: bool = False):
     """(carry0, step, finalize) for the raw `DagEngine` session surface:
     one jitted tick = one typed engine transaction (begins,
     policy-dispatched cycle-checked conflicts with abort-retire, finishes),
-    abort/commit counters carried on-device alongside the engine pytree."""
+    abort/commit counters carried on-device alongside the engine pytree.
+    ``auto_grow`` doubles capacity between ticks when a tick reported
+    overflow, like `_sgt_driver`."""
     from repro.api import DagEngine
 
     eng = DagEngine.create(capacity, method=method, subbatches=subbatches)
@@ -90,10 +104,17 @@ def _engine_driver(capacity: int, subbatches: int, method: str):
                 n_aborted + jnp.sum(rem.ok, dtype=jnp.int32))
 
     tick_fn = jax.jit(tick)
+    overflow_mark = [0]
 
     def step(carry, xs):
         carry = tick_fn(carry, *xs)
         jax.block_until_ready(carry[0].state.adj)
+        if auto_grow:
+            eng = carry[0]
+            seen = int(eng.state.n_overflow)
+            if seen > overflow_mark[0]:
+                carry = (eng.grow(eng.capacity * 2),) + carry[1:]
+                overflow_mark[0] = seen
         return carry
 
     def finalize(carry):
@@ -142,7 +163,8 @@ def _summarize(label: str, method: str, stats: dict, tick_times, batch: int,
 
 def serve_sgt(capacity: int = 1024, batch: int = 256, ticks: int = 50,
               subbatches: int = 1, seed: int = 0,
-              method: str = "auto", api: str = "sgt") -> dict:
+              method: str = "auto", api: str = "sgt",
+              auto_grow: bool = False) -> dict:
     """``method`` picks the conflict cycle-check: "closure" / "partial" /
     "auto" (default — the dispatch policy decides per tick, sharpened by
     the measured-depth EMA; flipped from "closure" on the strength of the
@@ -152,10 +174,16 @@ def serve_sgt(capacity: int = 1024, batch: int = 256, ticks: int = 50,
     `core/sgt.schedule_tick`; "engine" drives a raw `DagEngine` session
     (`repro.api`) with the same SGT semantics — `serve_sgt_paired` measures
     the two tick-interleaved for the ``sgt_tick_*_engine`` gate.
+
+    ``auto_grow=True`` doubles the conflict-graph capacity between ticks
+    whenever a tick's ``n_overflow`` backpressure signal fired, instead of
+    silently dropping begins under sustained load (off for the benchmark
+    rows, whose capacities are part of the workload definition).
     """
     driver = _engine_driver if api == "engine" else _sgt_driver
     label = "serve-sgt-engine" if api == "engine" else "serve-sgt"
-    carry, step, finalize = driver(capacity, subbatches, method)
+    carry, step, finalize = driver(capacity, subbatches, method,
+                                   auto_grow=auto_grow)
     inputs = _sgt_tick_inputs(capacity, batch, ticks, seed)
     _warmup(step, carry, batch)
     tick_times = []
@@ -460,6 +488,10 @@ def main() -> int:
     p.add_argument("--api", choices=["sgt", "engine"], default="sgt",
                    help="serving surface: the SGT scheduler wrapper or the "
                         "raw DagEngine session (repro.api)")
+    p.add_argument("--auto-grow", action="store_true",
+                   help="double the conflict-graph capacity between ticks "
+                        "when the engine reports capacity overflow, instead "
+                        "of silently dropping begins (steady profile)")
     p.add_argument("--profile",
                    choices=["steady", "insheavy", "delheavy", "mixed"],
                    default="steady",
@@ -477,7 +509,7 @@ def main() -> int:
         if args.profile == "steady":
             serve_sgt(batch=args.batch, ticks=args.ticks,
                       subbatches=args.subbatches, method=args.method,
-                      api=args.api)
+                      api=args.api, auto_grow=args.auto_grow)
         elif args.profile == "insheavy":
             serve_sgt_insert_heavy(batch=args.batch, ticks=args.ticks,
                                    method=args.method)

@@ -1,0 +1,20 @@
+"""Pytest bootstrap: disable the XLA:CPU thunk runtime for the suite.
+
+jaxlib 0.4.36's CPU thunk runtime intermittently segfaults inside
+``backend_compile`` once a single process has accumulated a few hundred
+compilations: the full tier-1 suite dies in whichever test happens to
+compile next (a grad-of-scan in the gnn models, a plain scatter in the
+engine tests — the site moves with test order), while every small
+subset passes.  The documented upstream workaround is
+``--xla_cpu_use_thunk_runtime=false``; set it here, before jax
+initialises, so one pytest process can run the whole suite.  Flags the
+caller already exported are kept (subprocess tests re-export their own
+``XLA_FLAGS`` for fake-device meshes and drop this one — they only
+compile a handful of programs, far below the crash threshold).
+"""
+import os
+
+_FLAG = "--xla_cpu_use_thunk_runtime=false"
+if _FLAG not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = \
+        (os.environ.get("XLA_FLAGS", "") + " " + _FLAG).strip()

@@ -1,0 +1,276 @@
+"""Growable-engine tests: `DagEngine.grow` one-step migration.
+
+The acceptance bar is bit-for-bit: an engine grown from C to C' must be
+indistinguishable — every accept decision, every slab word, every packed
+closure word — from a fresh engine created at C' that replayed the same
+history.  Checked here deterministically, across a checkpoint save-at-C /
+restore-into-C' round trip, on the sharded backend (8 fake host devices,
+subprocess), and on the auto_grow backpressure path; the randomized
+mixed-op-batch sweep lives in `test_grow_properties.py` (hypothesis).
+"""
+import os
+import subprocess
+import sys
+import tempfile
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import DagEngine, OpBatch, validate_capacity
+from repro.core import closure_cache, sgt
+from repro.ft import checkpoint as ckpt
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def leaves_equal(a, b):
+    la, ta = jax.tree_util.tree_flatten(a)
+    lb, tb = jax.tree_util.tree_flatten(b)
+    return ta == tb and all(
+        np.array_equal(np.asarray(x), np.asarray(y))
+        for x, y in zip(la, lb))
+
+
+def edges(*pairs):
+    us, vs = zip(*pairs)
+    return jnp.asarray(us, jnp.int32), jnp.asarray(vs, jnp.int32)
+
+
+# ---------------------------------------------------------------- basics
+
+
+def test_grow_pads_and_preserves():
+    eng = DagEngine.create(64, method="incremental")
+    eng, _ = eng.add_vertices(jnp.arange(10, dtype=jnp.int32))
+    eng, r = eng.add_edges_acyclic(*edges((0, 1), (1, 2), (2, 3)))
+    assert bool(jnp.all(r.ok))
+
+    grown = eng.grow(256)
+    assert grown.capacity == 256
+    assert grown.config.capacity == 256
+    # live prefix identical, pad region empty
+    assert np.array_equal(np.asarray(grown.state.keys[:64]),
+                          np.asarray(eng.state.keys))
+    assert not np.asarray(grown.state.alive[64:]).any()
+    # closure cache carried over clean: no spurious rebuild
+    assert not bool(grown.cache.dirty)
+    assert bool(closure_cache.cache_matches_state(grown.cache,
+                                                  grown.state.adj))
+    # depth EMA and overflow counter ride through
+    assert np.array_equal(np.asarray(grown.depth_ema),
+                          np.asarray(eng.depth_ema))
+    assert int(grown.state.n_overflow) == int(eng.state.n_overflow)
+
+
+def test_grow_same_capacity_is_identity():
+    eng = DagEngine.create(64)
+    assert eng.grow(64) is eng
+
+
+def test_grow_validation_messages():
+    eng = DagEngine.create(64)
+    with pytest.raises(ValueError, match="cannot shrink"):
+        eng.grow(32)
+    with pytest.raises(ValueError,
+                       match=r"nearest valid capacity is 96"):
+        eng.grow(100)
+    with pytest.raises(ValueError, match="must be positive"):
+        validate_capacity(0)
+    # the local-backend odd-capacity path in create
+    with pytest.raises(ValueError,
+                       match=r"local capacity must be a multiple of 32.*"
+                             r"got 33; nearest valid capacity is 32"):
+        DagEngine.create(33)
+
+
+def test_grown_equals_fresh_simple():
+    """Grown engine == fresh engine at C' after identical further history."""
+    # the second batch's 3->0 closes the cycle 0->1->2->3 and must reject
+    history = [edges((0, 1), (1, 2)), edges((2, 3), (3, 0))]
+    small = DagEngine.create(64, method="incremental")
+    big = DagEngine.create(128, method="incremental")
+    small, _ = small.add_vertices(jnp.arange(8, dtype=jnp.int32))
+    big, _ = big.add_vertices(jnp.arange(8, dtype=jnp.int32))
+    small, r_s = small.add_edges_acyclic(*history[0])
+    big, r_b = big.add_edges_acyclic(*history[0])
+
+    grown = small.grow(128)
+    g2, r_g = grown.add_edges_acyclic(*history[1])
+    b2, r_f = big.add_edges_acyclic(*history[1])
+    assert np.array_equal(np.asarray(r_g.ok), np.asarray(r_f.ok))
+    # the cycle-closing edge 3->0 is rejected by both
+    assert not bool(r_g.ok[1])
+    assert leaves_equal(g2, b2)
+
+
+# ------------------------------------------------------------ checkpoint
+
+
+def test_checkpoint_restore_into_grown():
+    eng = DagEngine.create(64, method="incremental")
+    eng, _ = eng.add_vertices(jnp.arange(20, dtype=jnp.int32))
+    eng, _ = eng.add_edges_acyclic(*edges((0, 1), (1, 2), (5, 9), (9, 12)))
+    eng, _ = eng.remove_vertices(jnp.asarray([2], jnp.int32))
+
+    with tempfile.TemporaryDirectory() as d:
+        ckpt.save_engine_checkpoint(d, 0, eng)
+        restored = ckpt.restore_engine_checkpoint(
+            d, DagEngine.create(256, method="incremental"))
+        # bit-for-bit equal to growing the live engine
+        assert leaves_equal(restored, eng.grow(256))
+        # shrinking restore refuses
+        with pytest.raises(ValueError, match="exceeds"):
+            ckpt.restore_engine_checkpoint(d, DagEngine.create(32))
+
+    # the restored session keeps serving identically to the grown one
+    nxt = edges((12, 15), (15, 5))  # second closes 5->9->12->15->5
+    r1 = restored.add_edges_acyclic(*nxt)[1]
+    r2 = eng.grow(256).add_edges_acyclic(*nxt)[1]
+    assert np.array_equal(np.asarray(r1.ok), np.asarray(r2.ok))
+    assert not bool(r1.ok[1])
+
+
+# -------------------------------------------------------------- auto_grow
+
+
+def test_auto_grow_on_vertex_overflow():
+    eng = DagEngine.create(32, method="incremental", auto_grow=True)
+    assert eng.config.auto_grow
+    eng, r = eng.add_vertices(jnp.arange(50, dtype=jnp.int32))
+    # the engine doubled and the retried batch landed every vertex
+    assert eng.capacity == 64
+    assert bool(jnp.all(r.ok))
+    assert int(jnp.sum(eng.state.alive)) == 50
+    assert int(r.n_overflow) == 0
+
+
+def test_auto_grow_via_apply_doubles_until_fit():
+    eng = DagEngine.create(32, auto_grow=True)
+    batch = OpBatch.add_vertices(jnp.arange(100, dtype=jnp.int32))
+    eng, r = eng.apply(batch)
+    assert eng.capacity == 128
+    assert bool(jnp.all(r.ok))
+
+
+def test_auto_grow_off_by_default_reports_overflow():
+    eng = DagEngine.create(32)
+    eng, r = eng.add_vertices(jnp.arange(50, dtype=jnp.int32))
+    assert eng.capacity == 32
+    assert int(r.n_overflow) > 0
+    assert not bool(jnp.all(r.ok))
+
+
+def test_auto_grow_noop_under_jit():
+    """Inside jit shapes are static: auto_grow must not fire (and must not
+    crash) under trace; the overflow is reported for a between-ticks grow."""
+    eng = DagEngine.create(32, auto_grow=True)
+
+    @jax.jit
+    def tick(e, keys):
+        e, r = e.add_vertices(keys)
+        return e, r.n_overflow
+
+    eng2, dropped = tick(eng, jnp.arange(50, dtype=jnp.int32))
+    assert eng2.capacity == 32
+    assert int(dropped) > 0
+
+
+def test_sgt_maybe_grow_between_ticks():
+    st_ = sgt.new_scheduler(32, method="incremental")
+    st_, ok = sgt.begin(st_, jnp.arange(40, dtype=jnp.int32))
+    assert not bool(jnp.all(ok))
+    st_, mark = sgt.maybe_grow(st_)
+    assert st_.engine.capacity == 64
+    assert mark == int(st_.engine.state.n_overflow)
+    # idempotent once the mark is threaded back
+    st_, mark2 = sgt.maybe_grow(st_, mark)
+    assert st_.engine.capacity == 64 and mark2 == mark
+
+
+# ---------------------------------------------------------------- sharded
+
+SHARDED_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.api import DagEngine
+    from repro.core import closure_cache
+
+    assert len(jax.devices()) == 8, jax.devices()
+
+    def leaves_equal(a, b):
+        la, ta = jax.tree_util.tree_flatten(a)
+        lb, tb = jax.tree_util.tree_flatten(b)
+        return ta == tb and all(
+            np.array_equal(np.asarray(x), np.asarray(y))
+            for x, y in zip(la, lb))
+
+    # sharded alignment: capacity must be a multiple of 32 * 8 = 256
+    eng = DagEngine.create(256, backend="sharded", method="incremental")
+    try:
+        eng.grow(384)
+        raise SystemExit("expected ValueError for 384 on 8 devices")
+    except ValueError as e:
+        assert "nearest valid capacity is 512" in str(e), e
+
+    eng, _ = eng.add_vertices(jnp.arange(30, dtype=jnp.int32))
+    us = jnp.asarray([0, 1, 2, 5], jnp.int32)
+    vs = jnp.asarray([1, 2, 3, 9], jnp.int32)
+    eng, r = eng.add_edges_acyclic(us, vs)
+    assert bool(jnp.all(r.ok))
+
+    grown = eng.grow(512)
+    assert grown.capacity == 512
+    # grown leaves keep a row sharding over the 8-device mesh
+    shd = grown.state.adj.sharding
+    assert getattr(shd, "mesh", None) is not None \\
+        and shd.mesh.devices.size == 8, shd
+
+    fresh = DagEngine.create(512, backend="sharded", method="incremental")
+    fresh, _ = fresh.add_vertices(jnp.arange(30, dtype=jnp.int32))
+    fresh, _ = fresh.add_edges_acyclic(us, vs)
+
+    nxt_us = jnp.asarray([9, 3], jnp.int32)
+    nxt_vs = jnp.asarray([12, 0], jnp.int32)  # 3->0 closes a cycle
+    g2, rg = grown.add_edges_acyclic(nxt_us, nxt_vs)
+    f2, rf = fresh.add_edges_acyclic(nxt_us, nxt_vs)
+    assert np.array_equal(np.asarray(rg.ok), np.asarray(rf.ok))
+    assert not bool(rg.ok[1])
+    assert leaves_equal(g2, f2)
+    assert bool(closure_cache.cache_matches_state(g2.cache, g2.state.adj))
+    print("SHARDED-GROW-OK")
+""")
+
+
+def test_sharded_grow_subprocess():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env.pop("XLA_FLAGS", None)
+    res = subprocess.run([sys.executable, "-c", SHARDED_SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert res.returncode == 0, res.stdout + "\n" + res.stderr
+    assert "SHARDED-GROW-OK" in res.stdout
+
+
+# ------------------------------------------------- dedupe overflow (C=2^16)
+
+
+def test_bitset_dedupe_no_overflow_at_64k():
+    """Regression: the (row, col) dedupe used composed keys row*C + col,
+    which overflow int32 at C = 2^16 (the capacity sweep's top point)."""
+    from repro.core import bitset
+
+    rows = jnp.asarray([1, 1, 40000, 65535, 1], jnp.int32)
+    cols = jnp.asarray([5, 5, 12345, 65535, 5], jnp.int32)
+    en = jnp.asarray([True, True, True, True, False])
+    first = jax.jit(bitset._dedupe_enabled, static_argnums=3)(
+        rows, cols, en, 65536)
+    got = np.asarray(first & en)
+    # only the first enabled occurrence of (1, 5) survives; the disabled
+    # duplicate never suppresses anything
+    np.testing.assert_array_equal(got, [True, False, True, True, False])
