@@ -46,6 +46,12 @@ What is compared, and why the checks differ in strictness:
       of the interleaved run both agree, since a real façade cost shows
       in every statistic while shared-box contention corrupts each
       differently;
+    - replicated-read guard: the ``sgt_read_*_replicas{N}`` rows
+      (snapshot readers, PR-7 writer/reader split) must carry
+      ``row_products=0`` (frozen-closure bit lookups — deterministic, no
+      tolerance) and must not trail the ``sgt_read_*_engine``
+      single-engine baseline by more than ``ENGINE_TOLERANCE`` under the
+      same median+best agreement rule;
     - algo2/algo1 time *ratio* drift vs baseline uses ``--time-tolerance``
       (default 1.0 == 2x), loose enough to absorb CI timer noise on
       microsecond rows while still catching an order-of-magnitude loss of
@@ -66,6 +72,7 @@ BEST_OPS_RE = re.compile(r"best_ops_per_s=(\d+)")
 ALGO_B_RE = re.compile(
     r"^algo(?:1_closure|2_partial|_auto|_incremental)_B(\d+)$")
 SGT_RE = re.compile(r"^sgt_tick_(b\d+_K\d+)_(closure|auto|engine)$")
+READ_RE = re.compile(r"^sgt_read_(b\d+)_(engine|replicas\d+)$")
 INSHEAVY_RE = re.compile(
     r"^sgt_tick_insheavy_(b\d+)_(closure|partial|incremental)$")
 CHURN_RE = re.compile(
@@ -125,8 +132,8 @@ def check(pr: dict, base: dict, tol: float, time_tol: float) -> list:
     # 1. coverage: every gated baseline row must still be produced
     for name in base:
         if (ALGO_B_RE.match(name) or SGT_RE.match(name)
-                or INSHEAVY_RE.match(name) or CHURN_RE.match(name)
-                or CAPACITY_RE.match(name)) \
+                or READ_RE.match(name) or INSHEAVY_RE.match(name)
+                or CHURN_RE.match(name) or CAPACITY_RE.match(name)) \
                 and name not in pr:
             failures.append(f"missing row: {name} (present in baseline)")
 
@@ -212,6 +219,52 @@ def check(pr: dict, base: dict, tol: float, time_tol: float) -> list:
                 f"{100 * ENGINE_TOLERANCE:.0f}% on every reported "
                 f"statistic (median{' + best' if best is not None else ''}"
                 f" tick)")
+
+    # 4b2. within-run: replicated snapshot reads must not trail the
+    # single-engine read baseline on the same writer stream (the PR-7
+    # writer/reader-split acceptance bar), judged with the same
+    # median+best agreement rule as the engine-façade gate; and the
+    # replica rows' row_products counter must be exactly 0 — snapshot
+    # reads are frozen-closure bit lookups, any boolean-matmul work on
+    # the read path is a regression (deterministic, no tolerance).
+    read_shapes = {}
+    for name, row in pr.items():
+        m = READ_RE.match(name)
+        if m:
+            read_shapes.setdefault(m.group(1), {})[m.group(2)] = row
+    for shape, by_path in sorted(read_shapes.items()):
+        for path_name, row in sorted(by_path.items()):
+            if not path_name.startswith("replicas"):
+                continue
+            rwp = row_products(row)
+            if rwp is None or rwp > 0:
+                failures.append(
+                    f"sgt_read_{shape}_{path_name}: row_products "
+                    f"{'missing' if rwp is None else rwp} (snapshot reads "
+                    f"must do exactly 0 boolean-matmul row-products)")
+        if "engine" not in by_path:
+            continue
+        for path_name, row in sorted(by_path.items()):
+            if not path_name.startswith("replicas"):
+                continue
+
+            def trails(get):
+                e, r = get(by_path["engine"]), get(row)
+                if not (e and r):
+                    return None
+                return (e, r) if r < e / (1 + ENGINE_TOLERANCE) else False
+
+            med = trails(ops_per_s)
+            best = trails(best_ops_per_s)
+            verdicts = [v for v in (med, best) if v is not None]
+            if verdicts and all(verdicts):
+                ops_e, ops_r = verdicts[0]
+                failures.append(
+                    f"sgt_read_{shape}_{path_name}: replicated "
+                    f"{ops_r:.0f} reads/s trails the single-engine "
+                    f"baseline {ops_e:.0f} reads/s by more than "
+                    f"{100 * ENGINE_TOLERANCE:.0f}% on every reported "
+                    f"statistic")
 
     # 4c. within-run, deterministic: the incremental closure cache must do
     # STRICTLY fewer boolean-matmul row-products than the better fixed

@@ -18,6 +18,17 @@ cache stays clean the whole run, so its rows do ZERO C-row products while
 closure pays O(C log C) and partial O(B·depth) per tick —
 `benchmarks/compare.py` gates that ordering strictly.
 
+The ``sgt_read_*`` rows benchmark the PR-7 writer/reader split: one
+writer applies the steady tick stream (untimed) while the timed region
+serves reachability reads — from the live engine (``_engine``, the
+single-engine baseline) or from 1/2/4 `EngineSnapshot` replicas
+(``_replicas{N}``, frozen-closure bit lookups; each replica serves its
+own stream, so ops/s is aggregate reader throughput).  The replica rows
+carry ``row_products=0`` (snapshot reads do zero boolean-matmul work —
+asserted in-run) and `benchmarks/compare.py` gates that replicated
+serving does not trail the single-engine baseline (median + best
+agreement, like the engine-façade gate).
+
 The ``sgt_tick_delheavy_*`` / ``sgt_tick_mixed_*`` rows run the churn
 streams (conflict-edge retirements + vertex finishes every tick — the
 regime the paper's micro-benchmarks stress) under each pinned method plus
@@ -32,8 +43,25 @@ from __future__ import annotations
 
 def all_rows(quick: bool = False):
     from repro.launch.serve import (serve_sgt, serve_sgt_churn,
-                                    serve_sgt_insert_heavy, serve_sgt_paired)
+                                    serve_sgt_insert_heavy, serve_sgt_paired,
+                                    serve_sgt_replicated)
     rows = []
+    # writer/reader split: snapshot-replica read throughput vs the
+    # single-engine baseline on the same writer stream.  The replica rows
+    # must carry row_products=0 (frozen-closure bit lookups) and must not
+    # trail the engine baseline — compare.py gates both.
+    read_ticks = 12 if quick else 24
+    for replicas in (0, 1, 2, 4):
+        out = serve_sgt_replicated(capacity=1024, batch=256,
+                                   ticks=read_ticks, replicas=replicas,
+                                   reads=512)
+        name = (f"sgt_read_b512_replicas{replicas}" if replicas
+                else "sgt_read_b512_engine")
+        derived = (f"ops_per_s={out['ops_per_s']:.0f}"
+                   f"_best_ops_per_s={out['best_ops_per_s']:.0f}")
+        if out["row_products"] is not None:
+            derived += f"_row_products={out['row_products']}"
+        rows.append((name, out["tick_us"], derived))
     # delete-heavy / mixed churn streams: the delete-maintained cache's
     # target regime.  row_products counts cycle checks + lazy rebuilds +
     # delete repairs — compare.py requires the maintained row strictly

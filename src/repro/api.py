@@ -1,31 +1,66 @@
 """`repro.api` — the one import for users of the concurrent DAG.
 
+The surface is centered on the paper's writer/reader split (upgraded to
+the wait-free-snapshot semantics of the authors' follow-up): ONE writer
+mutates, N readers answer off immutable versioned views and never block
+on — or are blocked by — the writer.
+
+**The writer** is a `DagEngine` session (immutable pytree; every mutation
+returns a new engine and bumps its ``epoch`` leaf):
+
     from repro.api import DagEngine, OpBatch
 
     eng = DagEngine.create(1024)                  # or backend="sharded"
     eng, r = eng.add_vertices(keys)
     eng, r = eng.add_edges_acyclic(us, vs)        # cycle-checked, policy-
-    hit    = eng.reachable(from_keys, to_keys)    #   dispatched (auto)
-    eng, r = eng.apply(OpBatch.concat(
+    eng, r = eng.apply(OpBatch.concat(            #   dispatched (auto)
         OpBatch.add_vertices(new_keys), OpBatch.add_edges(us2, vs2)))
 
-Everything is an immutable pytree: sessions jit, `lax.scan`, shard, and
-checkpoint end-to-end.  Switch ``backend="local"`` -> ``"sharded"`` with no
-other changes; dispatch between the paper's two reachability algorithms —
-and between the sharded partial-scan schedules — is a pluggable
-`DispatchPolicy` (`CostModelPolicy` by default, `FixedPolicy` to pin one).
+**Same-process readers** take `EngineSnapshot`s — frozen zero-copy views
+(epoch + slab + clean packed closure) whose ``reachable``/``contains``
+are O(1) bit reads with zero boolean-matmul products:
 
-The SGT scheduler application (`SgtState` & friends) and the low-level
-`DagState` slab functions remain importable from `repro.core`.
+    snap = eng.snapshot()                         # view at eng.epoch
+    hit  = snap.reachable(from_keys, to_keys)     # wait-free, no matmul
+
+**Remote readers** are `Replica`s converged by delta shipping: a
+`Primary` wraps the writer and records every mutation's `CacheDelta`
+(the PR-5 commit log) as `LogEntry`s; a replica replays them with the
+same closure kernels — no reader-side cycle checks — and crash recovery
+is an `ft/checkpoint` base image plus the serialized log tail
+(`save_delta_log` / `load_delta_log` / `recover_replica`):
+
+    from repro.api import Primary, Replica
+
+    pri = Primary.create(1024)                    # writer + delta log
+    pri.add_edges_acyclic(us, vs)
+    rep = Replica.from_engine(pri.engine)         # or recover_replica(...)
+    rep = rep.replay(pri.log)                     # bit-for-bit convergent
+    hit = rep.reachable_slots(u_slots, v_slots)
+
+Everything is an immutable pytree: sessions jit, `lax.scan`, shard, and
+checkpoint end-to-end.  Switch ``backend="local"`` -> ``"sharded"`` with
+no other changes; dispatch between the paper's two reachability
+algorithms — and between the sharded partial-scan schedules — is a
+pluggable `DispatchPolicy` (`CostModelPolicy` by default, `FixedPolicy`
+to pin one).
+
+The SGT scheduler application (`SgtState` & friends) rides on top; the
+low-level `DagState` slab functions remain importable from `repro.core`.
 """
 from repro.core.engine import (  # noqa: F401
     BACKENDS, DagEngine, EngineConfig, OpBatch, OpResult, ReachStats,
     validate_capacity,
 )
+from repro.core.snapshot_view import EngineSnapshot  # noqa: F401
+from repro.replica import (  # noqa: F401
+    LogEntry, Primary, Replica, load_delta_log, recover_replica,
+    save_delta_log,
+)
 from repro.core.closure_cache import CacheDelta, ClosureCache  # noqa: F401
 from repro.core.dispatch import (  # noqa: F401
     METHODS, DispatchPolicy, CostModelPolicy, FixedPolicy,
-    choose_method, choose_scan_sharding, prefer_partial,
+    choose_method, choose_scan_sharding, prefer_partial, validate_method,
 )
 from repro.core.dag import (  # noqa: F401
     ADD_EDGE, ADD_VERTEX, CONTAINS_EDGE, CONTAINS_VERTEX, REMOVE_EDGE,
@@ -35,3 +70,25 @@ from repro.core.reachability import MatmulImpl  # noqa: F401
 from repro.core.sgt import (  # noqa: F401
     SgtState, begin, conflicts, finish, new_scheduler, schedule_tick,
 )
+
+# The public surface, pinned by tests/test_api_surface.py: additions and
+# removals here are deliberate, reviewed API changes.
+__all__ = [
+    # writer: the mutating session
+    "BACKENDS", "DagEngine", "EngineConfig", "OpBatch", "OpResult",
+    "ReachStats", "validate_capacity", "validate_method",
+    # readers: versioned snapshots + delta-shipped replicas
+    "EngineSnapshot", "LogEntry", "Primary", "Replica", "load_delta_log",
+    "recover_replica", "save_delta_log",
+    # the delta/cache types the log ships
+    "CacheDelta", "ClosureCache",
+    # dispatch policies
+    "METHODS", "DispatchPolicy", "CostModelPolicy", "FixedPolicy",
+    "choose_method", "choose_scan_sharding", "prefer_partial",
+    # slab types and op codes
+    "DagState", "MatmulImpl", "ADD_EDGE", "ADD_VERTEX", "CONTAINS_EDGE",
+    "CONTAINS_VERTEX", "REMOVE_EDGE", "REMOVE_VERTEX",
+    # the SGT scheduler application
+    "SgtState", "begin", "conflicts", "finish", "new_scheduler",
+    "schedule_tick",
+]

@@ -1,45 +1,51 @@
 """Core library: the paper's non-blocking concurrent DAG, TPU-native.
 
 Session API (preferred — see `core/engine.py` and `repro.api`):
-  DagEngine / EngineConfig / OpBatch / OpResult / ReachStats
+  DagEngine / EngineConfig / OpBatch / OpResult / ReachStats (the writer)
+  EngineSnapshot (`DagEngine.snapshot()` — the versioned wait-free read
+                     view: epoch + slab view + clean packed closure)
   DispatchPolicy / CostModelPolicy / FixedPolicy (pluggable dispatch)
 
-Building blocks and legacy surface:
+Building blocks:
   DagState / new_state / add_vertices / remove_vertices / add_edges /
   remove_edges / contains_vertices / contains_edges
-  apply_op_batch (deprecated shim -> DagEngine.apply)
-  acyclic_add_edges (deprecated shim -> DagEngine.add_edges_acyclic;
-                     method="closure"|"partial"|"auto" picks algorithm 1,
-                     algorithm 2, or cost-model dispatch between them)
   choose_method / prefer_partial (the "auto" cost model, core/dispatch.py)
-  CacheDelta / commit / affected_rows / masked_delete_scan (the closure
-                     cache's delta-commit pipeline, core/closure_cache.py)
+  CacheDelta / commit / apply_delta / affected_rows / masked_delete_scan
+                     (the closure cache's delta-commit pipeline,
+                     core/closure_cache.py; `apply_delta` is the
+                     reader-side replay `repro/replica.py` converges with)
   path_exists / reach_sets / transitive_closure / is_acyclic (algorithm 1)
   reach_until_decided / partial_cycle_check / path_exists_partial
                      (algorithm 2: partial-snapshot scoped scans)
   SgtState / new_scheduler / begin / conflicts / finish (SGT application,
                      engine-backed)
+
+The PR-3 deprecated shims (`apply_op_batch`, `acyclic_add_edges`) are
+gone: call `DagEngine.apply` / `DagEngine.add_edges_acyclic`, or the
+keyword-rich module-level `apply_op_batch_impl` /
+`acyclic_add_edges_impl` when driving the slab directly.
 """
 from repro.core.dag import (  # noqa: F401
     DagState, new_state, add_vertices, remove_vertices, add_edges,
-    remove_edges, contains_vertices, contains_edges, apply_op_batch,
+    remove_edges, contains_vertices, contains_edges,
     apply_op_sequential, live_vertex_count, edge_count,
     REMOVE_VERTEX, ADD_VERTEX, REMOVE_EDGE, ADD_EDGE,
     CONTAINS_VERTEX, CONTAINS_EDGE,
 )
-from repro.core.acyclic import acyclic_add_edges, METHODS  # noqa: F401
+from repro.core.acyclic import METHODS  # noqa: F401
 from repro.core.closure_cache import (  # noqa: F401
-    CacheDelta, ClosureCache, affected_rows, cache_matches_state, commit,
-    empty_cache, incremental_cycle_check, insert_update, masked_delete_scan,
-    rebuild_cache,
+    CacheDelta, ClosureCache, affected_rows, apply_delta,
+    cache_matches_state, commit, empty_cache, incremental_cycle_check,
+    insert_update, masked_delete_scan, rebuild_cache,
 )
 from repro.core.dispatch import (  # noqa: F401
-    choose_method, choose_scan_sharding, prefer_partial,
+    choose_method, choose_scan_sharding, prefer_partial, validate_method,
     DispatchPolicy, CostModelPolicy, FixedPolicy,
 )
 from repro.core.engine import (  # noqa: F401
     DagEngine, EngineConfig, OpBatch, OpResult, ReachStats,
 )
+from repro.core.snapshot_view import EngineSnapshot  # noqa: F401
 from repro.core.reachability import (  # noqa: F401
     path_exists, reach_sets, transitive_closure, is_acyclic,
     bool_matmul_packed, expand_frontier,

@@ -41,7 +41,6 @@ trade-off is benchmarked in `benchmarks/paper_workloads.py`.
 """
 from __future__ import annotations
 
-import warnings
 from typing import Callable, Optional
 
 import jax
@@ -61,23 +60,6 @@ CHOSE_CLOSURE, CHOSE_PARTIAL, CHOSE_INCREMENTAL = 0, 1, 2
 # size) -> traced bool scalar.  `core/engine.py` closes a DispatchPolicy
 # (plus its measured-depth EMA) over this hook.
 PreferPartialFn = Callable[[jax.Array, int], jax.Array]
-
-
-def acyclic_add_edges(state: DagState, us: jax.Array, vs: jax.Array,
-                      valid=None, subbatches: int = 1,
-                      matmul_impl: Optional[MatmulImpl] = None,
-                      method: str = "closure", with_stats: bool = False):
-    """Deprecated module-level shim — use `repro.core.engine.DagEngine`
-    (``DagEngine.create(capacity).add_edges_acyclic(us, vs)``), which
-    defaults to ``method="auto"`` and returns typed results.  Delegates
-    unchanged (identical results to the pre-engine function)."""
-    warnings.warn(
-        "acyclic.acyclic_add_edges is deprecated; use "
-        "repro.core.engine.DagEngine.add_edges_acyclic (method defaults to "
-        '"auto" there)', DeprecationWarning, stacklevel=2)
-    return acyclic_add_edges_impl(
-        state, us, vs, valid=valid, subbatches=subbatches,
-        matmul_impl=matmul_impl, method=method, with_stats=with_stats)
 
 
 def acyclic_add_edges_impl(

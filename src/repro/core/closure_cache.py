@@ -344,6 +344,39 @@ def commit(cache: ClosureCache, delta: CacheDelta, adj_after: jax.Array, *,
     return out
 
 
+def apply_delta(closure: jax.Array, adj_after: jax.Array, delta: CacheDelta,
+                *, update_impl: Optional[ClosureUpdateImpl] = None,
+                delete_impl: Optional[DeleteScanImpl] = None) -> jax.Array:
+    """Reader-side (replica) application of one shipped `CacheDelta`.
+
+    Unlike `commit`, there is no dispatch arm, no dirty flag, and no cycle
+    check: the primary already decided every accept/reject (the delta's
+    masks ARE those decisions), so a replica applies the delta with the
+    same two kernels unconditionally — removals repair by affected-row
+    re-derivation against the post-delta adjacency mirror, adds fold in
+    with the rank-B update.  Replaying an already-applied delta is a
+    no-op: the add fold is an OR and the repair re-derives the affected
+    rows from ``adj_after``, which already reflects the delta — the
+    idempotence `repro/replica.py`'s checkpoint-tail recovery leans on.
+
+    Returns the new closure (delete side first, matching the commit
+    linearization).
+    """
+    seeds, smask = delta.removal_seeds()
+    if seeds.shape[0]:
+        affected = affected_rows(closure, seeds, smask)
+        scan = delete_impl if delete_impl is not None else masked_delete_scan
+        closure, _, _ = scan(adj_after, closure, affected)
+    if delta.add_u.shape[0]:
+        def fold(cl):
+            return insert_update(cl, delta.add_u, delta.add_v,
+                                 delta.add_mask, update_impl)
+
+        closure = jax.lax.cond(~jnp.any(delta.add_mask),
+                               lambda cl: cl, fold, closure)
+    return closure
+
+
 # --------------------------------------------------- candidate hop graph
 
 def _closure_bool_small(a: jax.Array, strict: bool = True) -> jax.Array:

@@ -231,25 +231,6 @@ def contains_edges(state: DagState, us: jax.Array, vs: jax.Array) -> jax.Array:
 
 # ------------------------------------------------- mixed-op workloads
 
-def apply_op_batch(state: DagState, op: jax.Array, a: jax.Array, b: jax.Array,
-                   acyclic: bool = False, subbatches: int = 1,
-                   method: str = "closure", matmul_impl=None,
-                   with_stats: bool = False):
-    """Deprecated module-level shim — use `repro.core.engine.DagEngine`
-    (``DagEngine.create(capacity).apply(OpBatch(op, a, b))``), which defaults
-    to ``method="auto"`` and returns a typed `OpResult` (ok bits, overflow
-    count, cycle-check stats).  Delegates unchanged."""
-    import warnings
-
-    warnings.warn(
-        "dag.apply_op_batch is deprecated; use "
-        "repro.core.engine.DagEngine.apply (method defaults to "
-        '"auto" there)', DeprecationWarning, stacklevel=2)
-    return apply_op_batch_impl(
-        state, op, a, b, acyclic=acyclic, subbatches=subbatches,
-        method=method, matmul_impl=matmul_impl, with_stats=with_stats)
-
-
 def apply_op_batch_impl(state: DagState, op: jax.Array, a: jax.Array,
                         b: jax.Array, acyclic: bool = False,
                         subbatches: int = 1, method: str = "closure",

@@ -183,8 +183,8 @@ def prefer_partial_from_adj(adj_packed: jax.Array, batch: int) -> jax.Array:
 def choose_method(batch: int, capacity: int, out_degree: float) -> str:
     """Concrete (host-side) dispatch: "partial" or "closure".
 
-    The same formula `acyclic_add_edges(method="auto")` traces; use this for
-    tests, logging, and offline threshold tuning.
+    The same formula `acyclic_add_edges_impl(method="auto")` traces; use
+    this for tests, logging, and offline threshold tuning.
     """
     return "partial" if bool(prefer_partial(batch, capacity, out_degree)) \
         else "closure"
@@ -392,15 +392,29 @@ def method_name(policy: DispatchPolicy) -> str:
     return getattr(policy, "fixed_method", None) or "auto"
 
 
+def validate_method(method: str, what: str = "method") -> None:
+    """Raise ValueError unless ``method`` is one of the exported `METHODS`,
+    naming the nearest valid method in the message (mirroring
+    `engine.validate_capacity`'s nearest-valid-capacity hint) — so a typo'd
+    ``EngineConfig``/``with_options`` method fails at configuration time
+    with a suggestion, not deep inside dispatch."""
+    if method in METHODS:
+        return
+    import difflib
+    near = difflib.get_close_matches(str(method), METHODS, n=1, cutoff=0.4)
+    hint = f"; nearest valid method is {near[0]!r}" if near else ""
+    raise ValueError(
+        f"{what} must be one of {METHODS}, got {method!r}{hint}")
+
+
 def policy_for_method(method: str,
                       policy: Optional[DispatchPolicy] = None):
     """Resolve the (method, policy) pair of `DagEngine.create`: an explicit
     policy wins; otherwise "auto" gets the cost model and a fixed method
-    gets pinned."""
+    gets pinned (unknown names fail with the nearest valid one named)."""
     if policy is not None:
         return policy
-    if method not in METHODS:
-        raise ValueError(f"method must be one of {METHODS}, got {method!r}")
+    validate_method(method)
     if method == "auto":
         return CostModelPolicy()
     return FixedPolicy(method)

@@ -69,6 +69,7 @@ import jax.numpy as jnp
 from repro.core import bitset, closure_cache, dispatch, reachability, snapshot
 from repro.core import acyclic as acyclic_mod
 from repro.core import dag as dag_mod
+from repro.core import snapshot_view
 from repro.core.closure_cache import ClosureCache
 from repro.core.dag import (
     ADD_EDGE, ADD_VERTEX, CONTAINS_EDGE, CONTAINS_VERTEX, DagState,
@@ -255,14 +256,22 @@ class DagEngine:
     """The unified concurrent-DAG session object.  Immutable: every
     mutating call returns a new engine sharing the static config."""
 
-    __slots__ = ("state", "depth_ema", "cache", "config")
+    __slots__ = ("state", "depth_ema", "cache", "config", "epoch")
 
     def __init__(self, state: DagState, depth_ema: jax.Array,
-                 cache: ClosureCache, config: EngineConfig):
+                 cache: ClosureCache, config: EngineConfig, epoch=None):
         self.state = state
         self.depth_ema = depth_ema  # float32[S]: per-shard deciding-depth EMA
         self.cache = cache          # incremental transitive-closure cache
         self.config = config
+        # version counter: bumped by every mutation commit (not by views,
+        # refresh, or grow — growth is a re-embedding of the SAME graph
+        # version, which keeps grown-vs-fresh replay equality leaf-exact).
+        # The counter names snapshots (`EngineSnapshot.epoch`) and orders
+        # the replication log (`repro/replica.py`); it is a dynamic leaf,
+        # so checkpoints capture it and crash recovery knows where the
+        # delta-log tail starts.
+        self.epoch = jnp.zeros((), jnp.int32) if epoch is None else epoch
 
     # ------------------------------------------------------- construction
 
@@ -327,16 +336,18 @@ class DagEngine:
 
     @classmethod
     def wrap(cls, state: DagState, config: EngineConfig,
-             depth_ema=None, cache=None) -> "DagEngine":
+             depth_ema=None, cache=None, epoch=None) -> "DagEngine":
         """Wrap an existing `DagState` slab (e.g. a legacy session) in an
         engine without copying.  Without an explicit ``cache`` the closure
         cache starts DIRTY (the slab's closure is unknown); the first
-        incremental check lazily rebuilds it, or call `refresh_cache`."""
+        incremental check lazily rebuilds it, or call `refresh_cache`.
+        Pass the source session's ``epoch`` to keep the version counter
+        monotone across a re-wrap (`core/sgt.py` does)."""
         ema = jnp.zeros((config.n_devices,), jnp.float32) \
             if depth_ema is None else depth_ema
         if cache is None:
             cache = closure_cache.empty_cache(config.capacity, dirty=True)
-        return cls(state, ema, cache, config)
+        return cls(state, ema, cache, config, epoch)
 
     def refresh_cache(self) -> "DagEngine":
         """Rebuild the closure cache from the committed graph iff dirty
@@ -348,7 +359,24 @@ class DagEngine:
         return DagEngine(self.state, self.depth_ema,
                          ClosureCache(closure, jnp.asarray(False),
                                       self.cache.repair_ema),
-                         self.config)
+                         self.config, self.epoch)
+
+    def snapshot(self) -> "snapshot_view.EngineSnapshot":
+        """The versioned wait-free read view of this session — a frozen
+        `core/snapshot_view.EngineSnapshot` (epoch + slab view + clean
+        packed closure) whose ``reachable``/``contains`` answers are O(1)
+        bit reads with ZERO boolean-matmul row products.
+
+        The snapshot shares the engine's immutable arrays (no copy) and
+        never blocks on — or is invalidated by — later writer mutations:
+        those produce NEW engines.  A dirty closure cache is re-cleaned
+        lazily here (a traced ``lax.cond`` rebuild, exactly
+        `refresh_cache`); call `refresh_cache` first to also keep the
+        rebuilt cache on the writer's side."""
+        closure, _ = closure_cache.refresh_closure(
+            self.cache.closure, self.cache.dirty, self.state.adj,
+            self.config.matmul_impl)
+        return snapshot_view.EngineSnapshot(self.epoch, self.state, closure)
 
     def with_options(self, *, method: Optional[str] = None,
                      subbatches: Optional[int] = None,
@@ -366,7 +394,8 @@ class DagEngine:
             matmul_impl=cfg.matmul_impl
             if matmul_impl is dataclasses.MISSING else matmul_impl,
             policy=policy)
-        return DagEngine(self.state, self.depth_ema, self.cache, new)
+        return DagEngine(self.state, self.depth_ema, self.cache, new,
+                         self.epoch)
 
     # --------------------------------------------------------------- growth
 
@@ -406,7 +435,8 @@ class DagEngine:
             state = sharded_mod.shard_state(state, cfg.mesh)
             cache = sharded_mod.shard_cache(cache, cfg.mesh)
         config = dataclasses.replace(cfg, capacity=new_capacity)
-        return DagEngine(state, self.depth_ema, cache, config)
+        # the epoch rides through: growth re-embeds the SAME graph version
+        return DagEngine(state, self.depth_ema, cache, config, self.epoch)
 
     def _grown_for_overflow(self, result: "OpResult") -> Optional["DagEngine"]:
         """Under ``auto_grow``, the PRE-call engine doubled until the adds
@@ -429,12 +459,15 @@ class DagEngine:
     # ------------------------------------------------------------- pytree
 
     def tree_flatten(self):
-        return (self.state, self.depth_ema, self.cache), self.config
+        # epoch is ordered LAST so leaf 0 stays ``state.keys`` — the
+        # capacity probe `ft/checkpoint._saved_capacity` reads it by index
+        return (self.state, self.depth_ema, self.cache, self.epoch), \
+            self.config
 
     @classmethod
     def tree_unflatten(cls, config, children):
-        state, depth_ema, cache = children
-        return cls(state, depth_ema, cache, config)
+        state, depth_ema, cache, epoch = children
+        return cls(state, depth_ema, cache, config, epoch)
 
     def __repr__(self):
         c = self.config
@@ -455,7 +488,9 @@ class DagEngine:
             if update is not None:
                 # per-shard elementwise fold: measured (S,) into EMA (S,)
                 ema = update(ema, stats["deciding_depth"])
-        return DagEngine(state, ema, cache, self.config)
+        # every mutation commit bumps the session epoch (all mutators
+        # return through here), versioning the snapshots it obsoletes
+        return DagEngine(state, ema, cache, self.config, self.epoch + 1)
 
     def _invalidated_cache(self, state: DagState) -> ClosureCache:
         """Cache after a mutation that bypassed the incremental fold-in:

@@ -130,7 +130,8 @@ def conflicts(state: SgtState, src: jax.Array, dst: jax.Array, valid=None,
     # and a stable config keeps SgtState a fixed pytree structure for
     # lax.scan
     eng = DagEngine.wrap(eng.state, state.engine.config,
-                         depth_ema=eng.depth_ema, cache=eng.cache)
+                         depth_ema=eng.depth_ema, cache=eng.cache,
+                         epoch=eng.epoch)
     return state._replace(
         engine=eng,
         n_aborted=state.n_aborted + jnp.sum(rem.ok, dtype=jnp.int32)), ok

@@ -71,6 +71,36 @@ def shard_cache(cache, mesh: Mesh):
     )
 
 
+def replicate_snapshot(mesh: Mesh, snap):
+    """Replicated snapshot placement: every leaf of an `EngineSnapshot`
+    (or any read-only pytree view) device_put fully REPLICATED over the
+    mesh.  Snapshot reads are O(1) closure bit lookups with no contraction
+    dimension to shard, so one full copy per device lets every device
+    answer its local read batch with zero cross-device traffic — the
+    N-wait-free-readers placement `launch/serve.py --replicas` models
+    (the writer's row-sharded state stays row-sharded; only the frozen
+    view fans out)."""
+    rep = NamedSharding(mesh, P())
+    return jax.tree.map(lambda x: jax.device_put(x, rep), snap)
+
+
+def shard_replica(mesh: Mesh, replica):
+    """Row-sharded replica placement: the adjacency mirror and closure
+    follow the writer's row sharding, and the delta-apply kernels become
+    the zero-collective sharded schedules (`closure_update_impl` /
+    `closure_delete_impl`) — so a replica co-located with a mesh replays
+    the log with the same distributed kernels the primary commits with
+    (equality pinned by the 8-device test in tests/test_replica.py)."""
+    from repro.replica import Replica
+
+    row = NamedSharding(mesh, P(AXIS, None))
+    rep = NamedSharding(mesh, P())
+    return Replica(jax.device_put(replica.epoch, rep),
+                   jax.device_put(replica.adj, row),
+                   jax.device_put(replica.closure, row),
+                   closure_update_impl(mesh), closure_delete_impl(mesh))
+
+
 def closure_update_impl(mesh: Mesh):
     """Row-sharded rank-B closure-cache fold-in.
 

@@ -104,10 +104,14 @@ def save_engine_checkpoint(directory: str, step: int, engine) -> str:
 
     The engine is a registered pytree whose dynamic leaves are the full
     session state — adjacency slab, key table, overflow counter, the
-    per-shard deciding-depth EMA, and the incremental closure cache with
+    per-shard deciding-depth EMA, the incremental closure cache with
     its dirty flag and measured repair-depth EMA (the delete dispatch
-    arm's learned depth estimate) — so the generic atomic writer captures
-    everything the dispatch policy has learned, not just the graph."""
+    arm's learned depth estimate), and the mutation epoch counter — so
+    the generic atomic writer captures everything the dispatch policy has
+    learned, not just the graph.  The epoch leaf makes the checkpoint a
+    self-describing replication base image: `repro.replica.recover_replica`
+    restores it and replays the `CacheDelta` log tail from the saved
+    epoch onward."""
     return save_checkpoint(directory, step, engine)
 
 

@@ -441,6 +441,120 @@ def serve_sgt_churn(capacity: int = 1024, batch: int = 256,
     return out
 
 
+def serve_sgt_replicated(capacity: int = 1024, batch: int = 256,
+                         ticks: int = 20, seed: int = 0,
+                         replicas: int = 0, reads: int = 512,
+                         method: str = "incremental") -> dict:
+    """Read-serving throughput under the writer/reader split (PR-7 API).
+
+    One writer applies the steady SGT tick stream (begins, cycle-checked
+    conflicts, finishes) — UNTIMED, it is the same on every row.  The
+    timed region per tick is the read path only:
+
+      ``replicas=0``  one `DagEngine.reachable` batch of ``reads`` queries
+                      against the live engine — the single-engine baseline;
+      ``replicas=N``  one `DagEngine.snapshot()` take + N independent
+                      read batches of ``reads`` queries each answered by
+                      `EngineSnapshot.reachable` (frozen closure bit
+                      lookups, zero boolean-matmul row-products — asserted
+                      via ``with_stats`` at the end of the run).
+
+    Each replica serves its OWN request stream, so a tick serves
+    ``N * reads`` queries; ops/s therefore measures aggregate reader
+    throughput, the quantity the ``sgt_read_*`` benchmark gate compares
+    (replicated must not trail the single-engine baseline).  The writer
+    runs method-pinned "incremental" so the delete-maintained closure
+    cache stays clean across ticks and the snapshot take commits a
+    no-op refresh — the serving regime the replication design targets."""
+    from repro.api import DagEngine
+
+    eng = DagEngine.create(capacity, method=method)
+
+    def mutate(e, begins, src, dst, fins):
+        e, _ = e.add_vertices(begins)
+        e, conf = e.add_edges_acyclic(src, dst)
+        live = e.contains(src) & e.contains(dst)
+        e, _ = e.remove_vertices(src, valid=live & ~conf.ok)
+        e, _ = e.remove_vertices(fins)
+        return e
+
+    mutate_fn = jax.jit(mutate)
+    snap_fn = jax.jit(lambda e: e.snapshot())
+    eng_read = jax.jit(lambda e, f, t: e.reachable(f, t))
+    snap_read = jax.jit(lambda s, f, t: s.reachable(f, t))
+
+    inputs = _sgt_tick_inputs(capacity, batch, ticks, seed)
+    # per-tick read streams: one independent stream per replica (the
+    # baseline serves stream 0), keys drawn from the txn range begun so
+    # far — misses on finished txns answer False on both paths
+    rng = np.random.default_rng(seed + 7919)
+    n_streams = max(1, replicas)
+    read_batches = []
+    for t in range(ticks):
+        hi = max(2, (t + 1) * (batch // 4))
+        fs = jnp.asarray(rng.integers(0, hi, (n_streams, reads)), jnp.int32)
+        ts = jnp.asarray(rng.integers(0, hi, (n_streams, reads)), jnp.int32)
+        read_batches.append((fs, ts))
+
+    # untimed compile warmup for every jitted piece of the timed region
+    zf = jnp.zeros(reads, jnp.int32)
+    mutate_fn(eng, jnp.zeros(batch // 4, jnp.int32),
+              jnp.zeros(batch // 2, jnp.int32),
+              jnp.zeros(batch // 2, jnp.int32),
+              jnp.full(batch // 4, -1, jnp.int32))
+    warm_snap = snap_fn(eng)
+    jax.block_until_ready(snap_read(warm_snap, zf, zf))
+    jax.block_until_ready(eng_read(eng, zf, zf))
+
+    tick_times = []
+    snap = None
+    last_hits = None
+    t0 = time.perf_counter()
+    for xs, (fs, ts) in zip(inputs, read_batches):
+        eng = mutate_fn(eng, *xs)
+        jax.block_until_ready(eng.state.adj)  # writer commit — untimed
+        t1 = time.perf_counter()
+        if replicas == 0:
+            last_hits = eng_read(eng, fs[0], ts[0])
+            jax.block_until_ready(last_hits)
+        else:
+            snap = snap_fn(eng)
+            last_hits = [snap_read(snap, fs[i], ts[i])
+                         for i in range(replicas)]
+            jax.block_until_ready(last_hits)
+        tick_times.append(time.perf_counter() - t1)
+    dt = time.perf_counter() - t0
+
+    row_products = None
+    fs, ts = read_batches[-1]
+    if replicas > 0:
+        # the zero-matmul acceptance bar: snapshot reads are closure bit
+        # lookups, and they agree with the live engine they were taken from
+        hit, stats = snap.reachable(fs[0], ts[0], with_stats=True)
+        row_products = int(stats.row_products)
+        assert row_products == 0, \
+            f"snapshot reads did {row_products} row-products (want 0)"
+        assert bool(jnp.all(hit == last_hits[0])), \
+            "snapshot reads disagree with the engine they were taken from"
+        assert bool(jnp.all(hit == eng.reachable(fs[0], ts[0]))), \
+            "snapshot reads disagree with the live engine"
+    ops_per_tick = reads * n_streams
+    med = float(np.median(tick_times))
+    label = f"replicas{replicas}" if replicas else "engine"
+    out = {"ticks": ticks, "replicas": replicas, "reads": reads,
+           "ops_per_s": ops_per_tick / med,
+           "best_ops_per_s": ops_per_tick / float(min(tick_times)),
+           "tick_us": med * 1e6, "row_products": row_products,
+           "epoch": int(eng.epoch)}
+    print(f"[serve-sgt-read:{label}] {ops_per_tick * ticks} reads in "
+          f"{dt:.2f}s -> {out['ops_per_s']:.0f} reads/s (median tick); "
+          f"best {out['best_ops_per_s']:.0f}"
+          + (f" row_products={row_products}" if row_products is not None
+             else "")
+          + f" epoch={out['epoch']}")
+    return out
+
+
 def serve_lm(arch: str = "qwen2-1.5b", batch: int = 4, prompt_len: int = 64,
              gen: int = 32) -> dict:
     from repro.configs import registry
@@ -493,12 +607,22 @@ def main() -> int:
                         "when the engine reports capacity overflow, instead "
                         "of silently dropping begins (steady profile)")
     p.add_argument("--profile",
-                   choices=["steady", "insheavy", "delheavy", "mixed"],
+                   choices=["steady", "insheavy", "delheavy", "mixed",
+                            "read"],
                    default="steady",
                    help="sgt request stream: steady begin/conflict/finish "
-                        "ticks, insert-heavy (no retirements), or the "
+                        "ticks, insert-heavy (no retirements), the "
                         "delete-heavy / mixed churn streams the "
-                        "delete-maintained cache targets")
+                        "delete-maintained cache targets, or the "
+                        "read-serving profile (writer + snapshot readers; "
+                        "see --replicas)")
+    p.add_argument("--replicas", type=int, default=0,
+                   help="read profile: serve reads from this many "
+                        "EngineSnapshot replicas (0 = single-engine "
+                        "baseline, reads answered by the live engine)")
+    p.add_argument("--reads", type=int, default=512,
+                   help="read profile: reachability queries per replica "
+                        "per tick")
     args = p.parse_args()
     if args.method == "incremental_rebuild" and \
             args.profile not in ("delheavy", "mixed"):
@@ -513,6 +637,9 @@ def main() -> int:
         elif args.profile == "insheavy":
             serve_sgt_insert_heavy(batch=args.batch, ticks=args.ticks,
                                    method=args.method)
+        elif args.profile == "read":
+            serve_sgt_replicated(batch=args.batch, ticks=args.ticks,
+                                 replicas=args.replicas, reads=args.reads)
         else:
             serve_sgt_churn(batch=args.batch, ticks=args.ticks,
                             method=args.method, profile=args.profile)

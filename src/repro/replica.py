@@ -1,0 +1,331 @@
+"""CacheDelta replication: one writer, N wait-free read replicas.
+
+PR 5 made every mutation commit a typed, adjacency-diff-exact
+`core/closure_cache.CacheDelta` — a write-ahead log in all but name.  This
+module ships it:
+
+  * `Primary` — the single writer: a `DagEngine` session plus the
+    append-only delta log.  Every mutator delegates to the engine and
+    records ``LogEntry(epoch, grow_to, delta)``, where the delta's masks
+    ARE the primary's accept decisions (an accepted insert batch, the
+    edges a removal actually cleared, the slots a vertex retire cleared).
+  * `Replica` — a reader: holds the (adjacency, packed closure) pair of
+    one engine version and converges to the primary by replaying the log
+    with the SAME kernels the writer uses (`closure_cache.insert_update`
+    rank-B fold, `closure_cache.masked_delete_scan` affected-row repair —
+    or their fused/sharded realizations) and NO reader-side cycle checks:
+    the primary already decided every accept/reject.  Reads are O(1)
+    closure bit lookups — zero boolean-matmul row products.
+  * crash recovery = base image + tail: `ft/checkpoint` checkpoints the
+    engine (the epoch is a pytree leaf, so the base image knows its own
+    version) and `recover_replica` replays every log entry at or past the
+    base epoch.  Replaying the boundary entry twice is safe — the add
+    fold is an OR and the repair re-derives affected rows from the
+    post-delta adjacency (`closure_cache.apply_delta` idempotence).
+
+Replicas are slot-addressed on purpose: the log carries closure/adjacency
+deltas, not key-table traffic, so a replica answers
+``reachable_slots(u, v)`` — the paper's reachability read surface.
+Same-process versioned reads with the full key-addressed API go through
+`DagEngine.snapshot()` (`core/snapshot_view.EngineSnapshot`) instead.
+
+Bit-for-bit convergence (checkpoint + replay == the primary's packed
+closure, through randomized mixed insert/delete/grow streams, local and
+sharded) is property-tested in tests/test_replica.py.
+"""
+from __future__ import annotations
+
+import os
+from typing import List, NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bitset, closure_cache
+from repro.core import dag as dag_mod
+from repro.core.closure_cache import CacheDelta
+from repro.core.engine import DagEngine, OpResult
+
+
+class LogEntry(NamedTuple):
+    """One shipped mutation: the engine epoch AFTER the commit, a grow
+    marker (``grow_to > 0`` re-embeds the replica at that capacity before
+    the delta applies; growth itself does not bump the epoch), and the
+    typed delta.  Vertex adds ship an empty delta — adjacency and closure
+    are untouched, but the entry keeps replica epochs in lockstep."""
+
+    epoch: int
+    grow_to: int
+    delta: CacheDelta
+
+
+def _host_delta(delta: CacheDelta) -> CacheDelta:
+    """Device -> host copy, so the log survives the arrays it was cut
+    from and serializes without touching the device."""
+    return CacheDelta(*[np.asarray(x) for x in delta])
+
+
+# ------------------------------------------------------------------ writer
+
+class Primary:
+    """The single writer: a `DagEngine` plus its replication log.
+
+    Mutators mirror the engine's and return the `OpResult`; the engine
+    itself advances in place (``primary.engine`` is always the latest
+    version — hand it to `ft/checkpoint.save_engine_checkpoint` for the
+    base image).  Only the four single-op mutators and `grow` record log
+    entries; route mixed `OpBatch` traffic through them (the engine's
+    ``apply`` fuses phases and does not expose per-phase deltas).
+    """
+
+    def __init__(self, engine: DagEngine,
+                 log: Optional[List[LogEntry]] = None):
+        self.engine = engine
+        self.log: List[LogEntry] = list(log) if log is not None else []
+
+    @classmethod
+    def create(cls, capacity: int, **options) -> "Primary":
+        """A fresh writer; ``options`` mirror `DagEngine.create`."""
+        return cls(DagEngine.create(capacity, **options))
+
+    @property
+    def epoch(self) -> int:
+        return int(self.engine.epoch)
+
+    def _record(self, delta: CacheDelta, grow_to: int = 0) -> None:
+        self.log.append(LogEntry(self.epoch, grow_to, _host_delta(delta)))
+
+    # ------------------------------------------------------- mutators
+
+    def add_vertices(self, keys, valid=None) -> OpResult:
+        cap_before = self.engine.capacity
+        self.engine, res = self.engine.add_vertices(keys, valid=valid)
+        # auto_grow may have re-run the call on a grown engine; ship the
+        # capacity so the replica's slab grows in the same place
+        grow_to = self.engine.capacity \
+            if self.engine.capacity != cap_before else 0
+        self._record(CacheDelta.empty(), grow_to=grow_to)
+        return res
+
+    def add_edges_acyclic(self, us, vs, valid=None) -> OpResult:
+        self.engine, res = self.engine.add_edges_acyclic(us, vs, valid=valid)
+        # the delta's mask IS the accept decision: ok rows exist in the
+        # post-graph (folding an already-present edge is an exact no-op)
+        u_slot, _ = dag_mod.lookup_slots(self.engine.state, us)
+        v_slot, _ = dag_mod.lookup_slots(self.engine.state, vs)
+        self._record(CacheDelta.edges_added(u_slot, v_slot, res.ok))
+        return res
+
+    def remove_edges(self, us, vs, valid=None) -> OpResult:
+        # derive the adj-diff-exact delta the engine commits internally
+        # (same pure function on the same pre-state)
+        _, _, delta = dag_mod.remove_edges_delta(self.engine.state, us, vs,
+                                                 valid=valid)
+        self.engine, res = self.engine.remove_edges(us, vs, valid=valid)
+        self._record(delta)
+        return res
+
+    def remove_vertices(self, keys, valid=None) -> OpResult:
+        _, _, delta = dag_mod.remove_vertices_delta(self.engine.state, keys,
+                                                    valid=valid)
+        self.engine, res = self.engine.remove_vertices(keys, valid=valid)
+        self._record(delta)
+        return res
+
+    def grow(self, new_capacity: int) -> None:
+        self.engine = self.engine.grow(new_capacity)
+        self._record(CacheDelta.empty(), grow_to=new_capacity)
+
+    # ---------------------------------------------------------- reads
+
+    def snapshot(self):
+        """The latest `EngineSnapshot` (see `DagEngine.snapshot`)."""
+        return self.engine.snapshot()
+
+    def checkpoint(self, directory: str, step: Optional[int] = None) -> str:
+        """Write the base image (atomic engine checkpoint; the epoch leaf
+        rides along, naming where the log tail starts).  Default step:
+        the current epoch."""
+        from repro.ft import checkpoint as ckpt
+        return ckpt.save_engine_checkpoint(
+            directory, self.epoch if step is None else step, self.engine)
+
+
+# ------------------------------------------------------------------ reader
+
+@jax.tree_util.register_pytree_node_class
+class Replica:
+    """A wait-free read replica: (epoch, adjacency mirror, packed closure).
+
+    Immutable — `apply` returns a new replica; reads are closure bit
+    lookups.  ``update_impl``/``delete_impl`` plug the same kernel
+    overrides the engine takes (fused Pallas on TPU,
+    `core/sharded.closure_update_impl`/`closure_delete_impl` on a mesh)
+    and ride as static aux data.
+    """
+
+    __slots__ = ("epoch", "adj", "closure", "update_impl", "delete_impl")
+
+    def __init__(self, epoch, adj, closure, update_impl=None,
+                 delete_impl=None):
+        self.epoch = epoch      # int32 scalar: version this replica is at
+        self.adj = adj          # uint32[C, W]: adjacency mirror
+        self.closure = closure  # uint32[C, W]: strict closure mirror
+        self.update_impl = update_impl
+        self.delete_impl = delete_impl
+
+    def tree_flatten(self):
+        return (self.epoch, self.adj, self.closure), \
+            (self.update_impl, self.delete_impl)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, *aux)
+
+    def __repr__(self):
+        return f"Replica(epoch={self.epoch}, capacity={self.capacity})"
+
+    @property
+    def capacity(self) -> int:
+        return self.adj.shape[0]
+
+    # --------------------------------------------------- construction
+
+    @classmethod
+    def from_snapshot(cls, snap, update_impl=None,
+                      delete_impl=None) -> "Replica":
+        """Start from an `EngineSnapshot` (shares its arrays)."""
+        return cls(snap.epoch, snap.state.adj, snap.closure,
+                   update_impl, delete_impl)
+
+    @classmethod
+    def from_engine(cls, engine: DagEngine, update_impl=None,
+                    delete_impl=None) -> "Replica":
+        """Start from a live (or just-restored) engine — e.g. the base
+        image of a crash recovery."""
+        return cls.from_snapshot(engine.snapshot(), update_impl,
+                                 delete_impl)
+
+    # ----------------------------------------------------- delta apply
+
+    def _grown(self, new_capacity: int) -> "Replica":
+        c, w = self.adj.shape
+        if new_capacity <= c:
+            return self
+        w_new = bitset.n_words(new_capacity)
+        pad = ((0, new_capacity - c), (0, w_new - w))
+        return Replica(self.epoch, jnp.pad(self.adj, pad),
+                       jnp.pad(self.closure, pad), self.update_impl,
+                       self.delete_impl)
+
+    def _adj_after(self, delta: CacheDelta) -> jax.Array:
+        """The adjacency mirror after ``delta`` (removes, vertex clears,
+        then adds — the commit linearization)."""
+        adj = self.adj
+        c = adj.shape[0]
+        if delta.rem_u.shape[0]:
+            adj = bitset.scatter_clear_bits(adj, delta.rem_u, delta.rem_v,
+                                            delta.rem_mask)
+        if delta.clear_slots.shape[0]:
+            slots = delta.clear_slots
+            cleared = jnp.zeros((c,), bool).at[
+                jnp.where(delta.clear_mask, slots, c)
+            ].set(True, mode="drop")
+            adj = jnp.where(cleared[:, None], jnp.uint32(0), adj)
+            adj = adj & ~bitset.pack_bits(cleared)[None, :]
+        if delta.add_u.shape[0]:
+            adj = bitset.scatter_set_bits(adj, delta.add_u, delta.add_v,
+                                          delta.add_mask)
+        return adj
+
+    def apply(self, entry: LogEntry) -> "Replica":
+        """Apply one log entry -> the replica at ``entry.epoch``.
+
+        No cycle check, no dispatch: the delta's masks carry the
+        primary's decisions; the closure advances through
+        `closure_cache.apply_delta` (the same two kernels the writer
+        commits with).  Idempotent for an already-applied entry.
+        """
+        rep = self._grown(entry.grow_to) if entry.grow_to else self
+        delta = jax.tree.map(jnp.asarray, entry.delta)
+        adj = rep._adj_after(delta)
+        closure = closure_cache.apply_delta(
+            rep.closure, adj, delta, update_impl=rep.update_impl,
+            delete_impl=rep.delete_impl)
+        return Replica(jnp.asarray(entry.epoch, jnp.int32), adj, closure,
+                       rep.update_impl, rep.delete_impl)
+
+    def replay(self, entries: Sequence[LogEntry]) -> "Replica":
+        """Replay a log tail, skipping entries already reflected here
+        (``entry.epoch < self.epoch``; the boundary entry re-applies
+        harmlessly — see `closure_cache.apply_delta`)."""
+        rep = self
+        base = int(self.epoch)
+        for e in entries:
+            if e.epoch < base:
+                continue
+            rep = rep.apply(e)
+        return rep
+
+    # ---------------------------------------------------------- reads
+
+    def reachable_slots(self, u_slots, v_slots) -> jax.Array:
+        """Batch PathExists over slots — one closure bit read per query,
+        zero matmul products (the paper's wait-free read, served off the
+        replicated closure)."""
+        return bitset.bit_get(self.closure, jnp.asarray(u_slots, jnp.int32),
+                              jnp.asarray(v_slots, jnp.int32))
+
+    def converged_with(self, engine: DagEngine) -> bool:
+        """True iff this replica's adjacency AND closure equal the
+        primary engine's, bit for bit (the engine's cache is re-cleaned
+        first so the comparison is against trusted bits)."""
+        eng = engine.refresh_cache()
+        return bool(jnp.all(self.adj == eng.state.adj)
+                    & jnp.all(self.closure == eng.cache.closure))
+
+
+# ------------------------------------------------------------ log on disk
+
+def save_delta_log(path: str, entries: Sequence[LogEntry]) -> str:
+    """Serialize a delta log (npz, atomic rename) — the incremental tail
+    next to the checkpoint base image."""
+    arrays = {"n_entries": np.asarray(len(entries), np.int64)}
+    for i, e in enumerate(entries):
+        arrays[f"e{i}_meta"] = np.asarray([e.epoch, e.grow_to], np.int64)
+        for name, v in zip(CacheDelta._fields, e.delta):
+            arrays[f"e{i}_{name}"] = np.asarray(v)
+    tmp = path + ".tmp"
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(tmp, "wb") as f:
+        np.savez(f, **arrays)
+    os.replace(tmp, path)
+    return path
+
+
+def load_delta_log(path: str) -> List[LogEntry]:
+    data = np.load(path)
+    out = []
+    for i in range(int(data["n_entries"])):
+        epoch, grow_to = (int(x) for x in data[f"e{i}_meta"])
+        delta = CacheDelta(*[data[f"e{i}_{name}"]
+                             for name in CacheDelta._fields])
+        out.append(LogEntry(epoch, grow_to, delta))
+    return out
+
+
+def recover_replica(checkpoint_dir: str, like: DagEngine,
+                    entries: Sequence[LogEntry],
+                    step: Optional[int] = None, update_impl=None,
+                    delete_impl=None) -> "Replica":
+    """Crash recovery: restore the base image into the structure of
+    ``like`` (`ft/checkpoint.restore_engine_checkpoint` — a base saved at
+    a smaller capacity grows forward), then replay the log tail from the
+    base's own epoch (a leaf of the checkpointed pytree).  Returns a
+    replica bit-for-bit converged with the primary that wrote the log."""
+    from repro.ft import checkpoint as ckpt
+    base = ckpt.restore_engine_checkpoint(checkpoint_dir, like, step=step)
+    rep = Replica.from_engine(base, update_impl=update_impl,
+                              delete_impl=delete_impl)
+    return rep.replay(entries)

@@ -1,0 +1,48 @@
+"""Pin the public API surface of `repro.api`.
+
+The writer/reader redesign (PR 7) made `repro.api` an explicit contract:
+``__all__`` names exactly what downstream code may import, split into the
+writer session, the versioned-read surface, and the SGT application.
+This test freezes that list — adding a name is a conscious one-line diff
+here, and removing one fails loudly instead of silently breaking users
+(the PR-3 shims' deprecation cycle ended by deleting them; anything that
+remains is supported).
+"""
+import repro.api as api
+
+EXPECTED = {
+    # writer: the mutating session
+    "BACKENDS", "DagEngine", "EngineConfig", "OpBatch", "OpResult",
+    "ReachStats", "validate_capacity", "validate_method",
+    # readers: versioned snapshots + delta-shipped replicas
+    "EngineSnapshot", "LogEntry", "Primary", "Replica", "load_delta_log",
+    "recover_replica", "save_delta_log",
+    # the delta/cache types the log ships
+    "CacheDelta", "ClosureCache",
+    # dispatch policies
+    "METHODS", "DispatchPolicy", "CostModelPolicy", "FixedPolicy",
+    "choose_method", "choose_scan_sharding", "prefer_partial",
+    # slab types and op codes
+    "DagState", "MatmulImpl", "ADD_EDGE", "ADD_VERTEX", "CONTAINS_EDGE",
+    "CONTAINS_VERTEX", "REMOVE_EDGE", "REMOVE_VERTEX",
+    # the SGT scheduler application
+    "SgtState", "begin", "conflicts", "finish", "new_scheduler",
+    "schedule_tick",
+}
+
+
+def test_all_is_exactly_the_contract():
+    assert set(api.__all__) == EXPECTED
+    assert len(api.__all__) == len(set(api.__all__)), "duplicate in __all__"
+
+
+def test_every_name_resolves():
+    missing = [n for n in api.__all__ if not hasattr(api, n)]
+    assert not missing, f"__all__ names that do not resolve: {missing}"
+
+
+def test_removed_shims_stay_removed():
+    """The PR-3 deprecation cycle is closed: the legacy free functions
+    must not reappear on the api module."""
+    for name in ("apply_op_batch", "acyclic_add_edges"):
+        assert not hasattr(api, name)

@@ -7,10 +7,11 @@ Pins the tentpole contracts:
      tests/test_sharded_dag.py);
   3. the engine is a real pytree: flatten/unflatten round-trips, sessions
      jit, and a scanned 50-tick SGT session compiles exactly once;
-  4. the deprecated module-level shims (`dag.apply_op_batch`,
-     `acyclic.acyclic_add_edges`) warn and delegate with identical results;
-  5. measured deciding depths feed the cost model: the EMA seeds
-     `CostModelPolicy`'s depth estimate and can flip its decision.
+  4. measured deciding depths feed the cost model: the EMA seeds
+     `CostModelPolicy`'s depth estimate and can flip its decision;
+  5. the mutation epoch leaf versions every commit (bumped by mutators,
+     preserved by grow/views) and unknown methods fail at configuration
+     time with the nearest valid name.
 """
 import dataclasses
 
@@ -190,31 +191,31 @@ def test_scanned_sgt_session_compiles_once():
     assert bool(reachability.is_acyclic(final.graph.adj))
 
 
-# ----------------------------------------------------- deprecated shims
+# -------------------------------------------- retired shims stay retired
 
-def test_shims_warn_and_delegate_identically():
-    rng = np.random.default_rng(37)
-    st = dag.new_state(CAP)
-    st, _ = dag.add_vertices(st, jnp.arange(12, dtype=jnp.int32))
-    us = jnp.asarray(rng.integers(0, 12, 6), jnp.int32)
-    vs = jnp.asarray(rng.integers(0, 12, 6), jnp.int32)
-    with pytest.deprecated_call():
-        st_shim, ok_shim = acyclic.acyclic_add_edges(st, us, vs)
-    st_impl, ok_impl = acyclic.acyclic_add_edges_impl(st, us, vs)
-    np.testing.assert_array_equal(np.asarray(ok_shim), np.asarray(ok_impl))
-    np.testing.assert_array_equal(np.asarray(st_shim.adj),
-                                  np.asarray(st_impl.adj))
+def test_deprecated_shims_are_gone():
+    """PR-3's deprecated module-level shims were removed: the engine (or
+    the explicit `*_impl` functions) is the only way in, and nothing
+    under `repro.core` raises DeprecationWarning anymore (CI greps)."""
+    assert not hasattr(dag, "apply_op_batch")
+    assert not hasattr(acyclic, "acyclic_add_edges")
+    import repro.core as core
+    assert not hasattr(core, "apply_op_batch")
+    assert not hasattr(core, "acyclic_add_edges")
 
-    batch = _rand_batch(rng)
-    with pytest.deprecated_call():
-        st2_shim, r_shim = dag.apply_op_batch(st, batch.op, batch.a, batch.b,
-                                              acyclic=True, method="auto")
-    st2_impl, r_impl = dag.apply_op_batch_impl(st, batch.op, batch.a,
-                                               batch.b, acyclic=True,
-                                               method="auto")
-    np.testing.assert_array_equal(np.asarray(r_shim), np.asarray(r_impl))
-    np.testing.assert_array_equal(np.asarray(st2_shim.adj),
-                                  np.asarray(st2_impl.adj))
+
+def test_method_validation_names_nearest():
+    """Unknown method names fail at configuration time with the nearest
+    valid method named (mirrors validate_capacity's message shape)."""
+    with pytest.raises(ValueError, match=r"nearest valid method is "
+                                         r"'incremental'"):
+        DagEngine.create(CAP, method="incrmental")
+    eng = DagEngine.create(CAP)
+    with pytest.raises(ValueError, match="nearest valid method is 'auto'"):
+        eng.with_options(method="atuo")
+    with pytest.raises(ValueError, match="must be one of"):
+        dispatch.validate_method("bogus")
+    dispatch.validate_method("closure")  # valid names pass silently
 
 
 def test_apply_op_batch_plumbs_matmul_impl_and_stats():

@@ -3,8 +3,8 @@
 Pins three levels of agreement, all with deterministic numpy randomness (no
 dev-extra dependency):
   1. the scoped scan answers == the full reach-set answers,
-  2. `acyclic_add_edges(method="partial")` == `method="closure"` (same ok
-     bits, same post-state) on random candidate batches,
+  2. `acyclic_add_edges_impl(method="partial")` == `method="closure"`
+     (same ok bits, same post-state) on random candidate batches,
   3. the partial engine == the sequential oracle's partial spec on random
      mixed-op workloads (linearization + relaxed joint-abort semantics),
 plus the cost claim: fewer boolean-matmul row-products than the closure for

@@ -1,0 +1,130 @@
+"""Versioned snapshot reads (`DagEngine.snapshot` / `EngineSnapshot`).
+
+Pins the PR-7 reader contract:
+  * the epoch leaf: every commit bumps it by exactly one; growth, cache
+    refreshes, and config views preserve it (they re-embed the SAME graph
+    version);
+  * a snapshot is a frozen view — it answers the version it was taken at,
+    bit-for-bit, no matter how far the writer advances;
+  * snapshot reads agree with the live engine's read path on the version
+    they share, and do ZERO boolean-matmul row-products (``with_stats``);
+  * a snapshot taken off a dirty closure cache re-cleans lazily and still
+    answers exactly.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api import DagEngine, EngineSnapshot
+
+CAP = 64
+
+
+def arr(xs, dtype=jnp.int32):
+    return jnp.asarray(xs, dtype)
+
+
+def _mixed_engine(method="incremental", n=24, seed=3):
+    rng = np.random.default_rng(seed)
+    eng = DagEngine.create(CAP, method=method)
+    eng, _ = eng.add_vertices(jnp.arange(n, dtype=jnp.int32))
+    lo = rng.integers(0, n - 1, 40).astype(np.int32)
+    hi = rng.integers(lo + 1, n).astype(np.int32)  # forward: all accepted
+    eng, _ = eng.add_edges_acyclic(jnp.asarray(lo), jnp.asarray(hi))
+    return eng, rng
+
+
+def test_epoch_bumps_once_per_commit():
+    eng = DagEngine.create(CAP)
+    assert int(eng.epoch) == 0
+    eng, _ = eng.add_vertices(arr([1, 2, 3]))
+    assert int(eng.epoch) == 1
+    eng, _ = eng.add_edges_acyclic(arr([1]), arr([2]))
+    assert int(eng.epoch) == 2
+    eng, _ = eng.remove_edges(arr([1]), arr([2]))
+    assert int(eng.epoch) == 3
+    eng, _ = eng.remove_vertices(arr([3]))
+    assert int(eng.epoch) == 4
+    # non-commits preserve the version: views, refreshes, growth
+    assert int(eng.with_options(method="closure").epoch) == 4
+    assert int(eng.refresh_cache().epoch) == 4
+    assert int(eng.grow(2 * CAP).epoch) == 4
+    assert int(eng.snapshot().epoch) == 4
+
+
+def test_snapshot_matches_engine_reads():
+    eng, rng = _mixed_engine()
+    snap = eng.snapshot()
+    assert isinstance(snap, EngineSnapshot)
+    assert snap.capacity == CAP
+    f = jnp.asarray(rng.integers(0, 30, 64), jnp.int32)  # some dead keys
+    t = jnp.asarray(rng.integers(0, 30, 64), jnp.int32)
+    np.testing.assert_array_equal(np.asarray(snap.reachable(f, t)),
+                                  np.asarray(eng.reachable(f, t)))
+    np.testing.assert_array_equal(np.asarray(snap.contains(f)),
+                                  np.asarray(eng.contains(f)))
+    np.testing.assert_array_equal(np.asarray(snap.contains_edges(f, t)),
+                                  np.asarray(eng.contains_edges(f, t)))
+    assert bool(snap.is_acyclic())
+
+
+def test_snapshot_reads_do_zero_matmul_work():
+    eng, rng = _mixed_engine()
+    snap = eng.snapshot()
+    f = jnp.asarray(rng.integers(0, 30, 32), jnp.int32)
+    t = jnp.asarray(rng.integers(0, 30, 32), jnp.int32)
+    hit, stats = snap.reachable(f, t, with_stats=True)
+    np.testing.assert_array_equal(np.asarray(hit),
+                                  np.asarray(eng.reachable(f, t)))
+    assert int(stats.row_products) == 0
+
+
+def test_snapshot_is_frozen_against_later_commits():
+    eng, rng = _mixed_engine()
+    old = eng.snapshot()
+    old_epoch = int(old.epoch)
+    f = jnp.asarray(rng.integers(0, 24, 48), jnp.int32)
+    t = jnp.asarray(rng.integers(0, 24, 48), jnp.int32)
+    before = np.asarray(old.reachable(f, t))
+    # the writer advances: retire vertices, drop edges
+    eng, _ = eng.remove_vertices(arr([0, 1, 2, 3, 4, 5]))
+    eng, _ = eng.add_vertices(arr([50, 51]))
+    eng, _ = eng.add_edges_acyclic(arr([50]), arr([51]))
+    new = eng.snapshot()
+    assert int(new.epoch) == old_epoch + 3
+    assert int(old.epoch) == old_epoch
+    # the old version still answers the old version
+    np.testing.assert_array_equal(np.asarray(old.reachable(f, t)), before)
+    assert int(old.live_vertex_count()) == int(new.live_vertex_count()) + 4
+    assert not bool(new.contains(arr([0]))[0])
+    assert bool(old.contains(arr([0]))[0])
+
+
+def test_snapshot_recleans_a_dirty_cache():
+    """Under a fixed "closure" policy the engine never maintains the
+    incremental cache (it goes dirty on the first commit); `snapshot()`
+    must pay the lazy re-clean and still answer exactly."""
+    eng, rng = _mixed_engine(method="closure")
+    assert bool(eng.cache.dirty)
+    snap = eng.snapshot()
+    f = jnp.asarray(rng.integers(0, 24, 48), jnp.int32)
+    t = jnp.asarray(rng.integers(0, 24, 48), jnp.int32)
+    np.testing.assert_array_equal(np.asarray(snap.reachable(f, t)),
+                                  np.asarray(eng.reachable(f, t)))
+    hit, stats = snap.reachable(f, t, with_stats=True)
+    assert int(stats.row_products) == 0  # the re-clean happened at take
+
+
+def test_snapshot_take_and_reads_jit():
+    """The serving path jits both the take and the read (a snapshot is a
+    registered pytree)."""
+    eng, rng = _mixed_engine()
+    take = jax.jit(lambda e: e.snapshot())
+    read = jax.jit(lambda s, f, t: s.reachable(f, t))
+    snap = take(eng)
+    f = jnp.asarray(rng.integers(0, 24, 16), jnp.int32)
+    t = jnp.asarray(rng.integers(0, 24, 16), jnp.int32)
+    np.testing.assert_array_equal(np.asarray(read(snap, f, t)),
+                                  np.asarray(eng.reachable(f, t)))
+    assert int(snap.epoch) == int(eng.epoch)
+    assert int(snap.edge_count()) == int(eng.snapshot().edge_count())
