@@ -1,0 +1,104 @@
+"""Open-loop serving-latency benchmark family: ``sgt_openloop_*`` rows.
+
+The closed-loop ``sgt_tick_*``/``sgt_read_*`` families measure
+throughput with the next batch waiting on the last — they can never see
+queueing delay.  This family drives the serving front-end
+(`repro.serve`) at fixed OFFERED loads on a Poisson arrival schedule and
+reports the client-observed latency distribution:
+
+  sgt_openloop_l{load}_engine      reader="snapshot": reads answered off
+                                   one frozen per-tick `EngineSnapshot`.
+  sgt_openloop_l{load}_replicas{N} reader="replica": the tick's coalesced
+                                   `LogEntry` replayed into N `Replica`s,
+                                   reads rotated across them.
+
+``us_per_call`` is the p50 latency; the derived string carries
+``p50_us`` / ``p99_us`` / achieved ``ops_per_s`` plus two deterministic
+counters `benchmarks/compare.py` gates without trusting wall clocks:
+``row_products`` (reader-side boolean-matmul products — asserted 0
+in-run by `run_openloop`, the PR-7 zero-matmul read contract) and
+``shed`` (429 count — 0 at these operating points, the loads are chosen
+below the knee).  The latency gate itself is within-run (replicas vs
+engine at the same load) under the PR-5 agreement rule: fail only when
+p50 AND p99 both trail, since a real replication cost shows in every
+quantile while box contention corrupts each differently.
+
+Run:  PYTHONPATH=src python -m benchmarks.openloop [--quick] [--json PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import platform
+
+# offered loads (requests/s): below and near the coalescer's knee at the
+# serving shape below — both must keep up (no shedding) so the rows
+# compare latency, not loss
+LOADS = (800, 2400)
+CAPACITY = 512
+BATCH = 64
+MAX_WAIT_S = 0.002
+REPLICAS = 2
+
+
+def _row(load: int, reader: str, duration_s: float, seed: int = 0):
+    from repro.serve.openloop import run_openloop
+
+    res = run_openloop(load, duration_s, capacity=CAPACITY, batch=BATCH,
+                       max_wait_s=MAX_WAIT_S, reader=reader,
+                       replicas=REPLICAS, seed=seed)
+    label = "engine" if reader == "snapshot" else f"replicas{REPLICAS}"
+    derived = (f"p50_us={res.p50_us:.0f}"
+               f"_p99_us={res.p99_us:.0f}"
+               f"_ops_per_s={res.ops_per_s:.0f}"
+               f"_row_products={res.row_products}"
+               f"_served={res.n_served}"
+               f"_shed={res.n_shed}"
+               f"_ticks={res.ticks}")
+    return (f"sgt_openloop_l{load}_{label}", res.p50_us, derived)
+
+
+def all_rows(quick: bool = False):
+    duration_s = 1.0 if quick else 2.0
+    rows = []
+    for load in LOADS:
+        for reader in ("snapshot", "replica"):
+            rows.append(_row(load, reader, duration_s))
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write rows as JSON (benchmarks/compare.py "
+                         "input; gate with --only sgt_openloop)")
+    args = ap.parse_args()
+
+    rows = all_rows(quick=args.quick)
+
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+    if args.json:
+        import jax
+        payload = {
+            "meta": {
+                "quick": args.quick,
+                "jax": jax.__version__,
+                "backend": jax.default_backend(),
+                "python": platform.python_version(),
+                "family": "sgt_openloop",
+            },
+            "rows": [{"name": n, "us_per_call": us, "derived": d}
+                     for n, us, d in rows],
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+            f.write("\n")
+        print(f"# wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

@@ -24,6 +24,8 @@ def collect_rows(quick: bool):
     rows += sgt_bench.all_rows(quick=quick)
     from benchmarks import capacity_sweep
     rows += capacity_sweep.all_rows(quick=quick)
+    from benchmarks import openloop
+    rows += openloop.all_rows(quick=quick)
     return rows
 
 

@@ -38,6 +38,18 @@ is an `ft/checkpoint` base image plus the serialized log tail
     rep = rep.replay(pri.log)                     # bit-for-bit convergent
     hit = rep.reachable_slots(u_slots, v_slots)
 
+**Concurrent clients** go through the asyncio serving front-end
+(`repro.serve`), which coalesces many tenant streams into the engine's
+batch dimension — deficit-round-robin fairness on batch slots, admission
+control off the engine's overflow backpressure, reads routed to
+snapshots or replicas:
+
+    from repro.api import Frontend, FrontendConfig
+
+    fe = Frontend.create(1024, FrontendConfig(batch_size=64))
+    async with fe:
+        resp = await fe.submit("add_edge", 3, 7, tenant="alice")
+
 Everything is an immutable pytree: sessions jit, `lax.scan`, shard, and
 checkpoint end-to-end.  Switch ``backend="local"`` -> ``"sharded"`` with
 no other changes; dispatch between the paper's two reachability
@@ -70,6 +82,10 @@ from repro.core.reachability import MatmulImpl  # noqa: F401
 from repro.core.sgt import (  # noqa: F401
     SgtState, begin, conflicts, finish, new_scheduler, schedule_tick,
 )
+from repro.serve import (  # noqa: F401
+    AdmissionController, DeficitRoundRobin, Frontend, FrontendConfig,
+    Response, run_openloop,
+)
 
 # The public surface, pinned by tests/test_api_surface.py: additions and
 # removals here are deliberate, reviewed API changes.
@@ -91,4 +107,7 @@ __all__ = [
     # the SGT scheduler application
     "SgtState", "begin", "conflicts", "finish", "new_scheduler",
     "schedule_tick",
+    # the multi-tenant serving front-end
+    "AdmissionController", "DeficitRoundRobin", "Frontend",
+    "FrontendConfig", "Response", "run_openloop",
 ]

@@ -392,19 +392,31 @@ def method_name(policy: DispatchPolicy) -> str:
     return getattr(policy, "fixed_method", None) or "auto"
 
 
-def validate_method(method: str, what: str = "method") -> None:
-    """Raise ValueError unless ``method`` is one of the exported `METHODS`,
-    naming the nearest valid method in the message (mirroring
-    `engine.validate_capacity`'s nearest-valid-capacity hint) — so a typo'd
-    ``EngineConfig``/``with_options`` method fails at configuration time
-    with a suggestion, not deep inside dispatch."""
-    if method in METHODS:
+def validate_choice(value: str, valid, what: str = "value") -> None:
+    """Raise ValueError unless ``value`` is one of ``valid``, naming the
+    nearest valid name in the message (mirroring
+    `engine.validate_capacity`'s nearest-valid-capacity hint) — the shared
+    spell-checker behind `validate_method`, the serve CLI's profile/api
+    flags, and the serving front-end's policy knobs.  A typo'd name fails
+    at configuration time with a suggestion, not by silently falling
+    through to a default."""
+    valid = tuple(valid)
+    if value in valid:
         return
     import difflib
-    near = difflib.get_close_matches(str(method), METHODS, n=1, cutoff=0.4)
-    hint = f"; nearest valid method is {near[0]!r}" if near else ""
+    near = difflib.get_close_matches(str(value), [str(v) for v in valid],
+                                     n=1, cutoff=0.4)
+    hint = f"; nearest valid {what} is {near[0]!r}" if near else ""
     raise ValueError(
-        f"{what} must be one of {METHODS}, got {method!r}{hint}")
+        f"{what} must be one of {valid}, got {value!r}{hint}")
+
+
+def validate_method(method: str, what: str = "method") -> None:
+    """Raise ValueError unless ``method`` is one of the exported `METHODS`,
+    with the nearest valid method named — so a typo'd
+    ``EngineConfig``/``with_options`` method fails at configuration time
+    with a suggestion, not deep inside dispatch."""
+    validate_choice(method, METHODS, what=what)
 
 
 def policy_for_method(method: str,

@@ -180,6 +180,11 @@ def serve_sgt(capacity: int = 1024, batch: int = 256, ticks: int = 50,
     silently dropping begins under sustained load (off for the benchmark
     rows, whose capacities are part of the workload definition).
     """
+    from repro.core.dispatch import validate_choice
+
+    # reject typos up front: the old `api == "engine" else _sgt_driver`
+    # fall-through silently served api="enigne" on the sgt path
+    validate_choice(api, ("sgt", "engine"), what="api")
     driver = _engine_driver if api == "engine" else _sgt_driver
     label = "serve-sgt-engine" if api == "engine" else "serve-sgt"
     carry, step, finalize = driver(capacity, subbatches, method,
@@ -327,15 +332,16 @@ def _sgt_churn_inputs(capacity: int, batch: int, ticks: int, seed: int,
     later tick (the begin stream wraps the pool), so the graph churns
     rather than drains.
     """
+    from repro.core.dispatch import validate_choice
+
+    validate_choice(profile, ("delheavy", "mixed"), what="churn profile")
     rng = np.random.default_rng(seed)
     pool = capacity // 2
     if profile == "delheavy":
         n_begin, n_ins = batch // 8, 3 * batch // 8
         n_del, n_fin = 3 * batch // 8, batch // 8
-    elif profile == "mixed":
-        n_begin = n_ins = n_del = n_fin = batch // 4
     else:
-        raise ValueError(f"unknown churn profile {profile!r}")
+        n_begin = n_ins = n_del = n_fin = batch // 4
     # host-side mirror of the live graph, so the removal stream targets
     # edges that REALLY exist: an insert only enters the mirror when both
     # endpoints are live (forward order + live endpoints -> accepted), and
@@ -555,6 +561,32 @@ def serve_sgt_replicated(capacity: int = 1024, batch: int = 256,
     return out
 
 
+def serve_frontend(load: float = 1000.0, duration: float = 1.0,
+                   capacity: int = 1024, batch: int = 64,
+                   reader: str = "snapshot", replicas: int = 2,
+                   admission: str = "shed") -> dict:
+    """Open-loop serving through the asyncio front-end (`repro.serve`):
+    Poisson arrivals at ``load`` requests/s for ``duration`` seconds,
+    coalesced into B-slot ticks, reads answered by snapshots or
+    delta-log replicas — prints the client-observed p50/p99 latency the
+    ``sgt_openloop_*`` benchmark rows gate."""
+    from repro.serve.openloop import run_openloop
+
+    res = run_openloop(load, duration, capacity=capacity, batch=batch,
+                       reader=reader, replicas=replicas,
+                       admission=admission)
+    label = "engine" if reader == "snapshot" else f"replicas{replicas}"
+    print(f"[serve-frontend:{label}] offered {res.offered_per_s:.0f} req/s "
+          f"for {duration:.1f}s -> served {res.n_served} "
+          f"(shed {res.n_shed}) in {res.ticks} ticks; p50 "
+          f"{res.p50_us / 1e3:.1f}ms p99 {res.p99_us / 1e3:.1f}ms, "
+          f"achieved {res.ops_per_s:.0f} req/s, "
+          f"row_products={res.row_products} epoch={res.epoch}")
+    return {"p50_us": res.p50_us, "p99_us": res.p99_us,
+            "ops_per_s": res.ops_per_s, "n_served": res.n_served,
+            "n_shed": res.n_shed, "ticks": res.ticks}
+
+
 def serve_lm(arch: str = "qwen2-1.5b", batch: int = 4, prompt_len: int = 64,
              gen: int = 32) -> dict:
     from repro.configs import registry
@@ -606,24 +638,54 @@ def main() -> int:
                    help="double the conflict-graph capacity between ticks "
                         "when the engine reports capacity overflow, instead "
                         "of silently dropping begins (steady profile)")
-    p.add_argument("--profile",
-                   choices=["steady", "insheavy", "delheavy", "mixed",
-                            "read"],
-                   default="steady",
+    p.add_argument("--profile", default="steady", metavar="PROFILE",
                    help="sgt request stream: steady begin/conflict/finish "
-                        "ticks, insert-heavy (no retirements), the "
-                        "delete-heavy / mixed churn streams the "
-                        "delete-maintained cache targets, or the "
-                        "read-serving profile (writer + snapshot readers; "
-                        "see --replicas)")
+                        "ticks, insheavy (no retirements), the delheavy / "
+                        "mixed churn streams the delete-maintained cache "
+                        "targets, read (writer + snapshot readers; see "
+                        "--replicas), or frontend (open-loop asyncio "
+                        "front-end; see --load/--duration/--reader/"
+                        "--admission)")
     p.add_argument("--replicas", type=int, default=0,
                    help="read profile: serve reads from this many "
                         "EngineSnapshot replicas (0 = single-engine "
-                        "baseline, reads answered by the live engine)")
+                        "baseline, reads answered by the live engine); "
+                        "frontend profile: Replica count when "
+                        "--reader replica")
     p.add_argument("--reads", type=int, default=512,
                    help="read profile: reachability queries per replica "
                         "per tick")
+    p.add_argument("--capacity", type=int, default=1024,
+                   help="frontend profile: engine capacity (multiple of 32)")
+    p.add_argument("--load", type=float, default=1000.0,
+                   help="frontend profile: offered load in requests/s "
+                        "(open-loop Poisson arrivals)")
+    p.add_argument("--duration", type=float, default=1.0,
+                   help="frontend profile: drive window in seconds")
+    p.add_argument("--reader", default="snapshot", metavar="READER",
+                   help="frontend profile: read path — snapshot (frozen "
+                        "per-tick EngineSnapshot) or replica (delta-log "
+                        "replay into --replicas readers)")
+    p.add_argument("--admission", default="shed", metavar="POLICY",
+                   help="frontend profile: overflow policy — shed (429 "
+                        "exactly the dropped vertex adds) or grow "
+                        "(auto-double capacity, nothing sheds)")
     args = p.parse_args()
+
+    # validated by hand instead of argparse `choices` so a typo names the
+    # nearest valid value ("profile must be one of ...; nearest valid
+    # profile is 'frontend'") — same contract as the library surfaces
+    from repro.core.dispatch import validate_choice
+    from repro.serve import ADMISSION_POLICIES, READERS
+    try:
+        validate_choice(args.profile,
+                        ("steady", "insheavy", "delheavy", "mixed", "read",
+                         "frontend"), what="profile")
+        validate_choice(args.reader, READERS, what="reader")
+        validate_choice(args.admission, ADMISSION_POLICIES,
+                        what="admission policy")
+    except ValueError as e:
+        p.error(str(e))
     if args.method == "incremental_rebuild" and \
             args.profile not in ("delheavy", "mixed"):
         p.error("--method incremental_rebuild is the delete-repair opt-out "
@@ -640,6 +702,12 @@ def main() -> int:
         elif args.profile == "read":
             serve_sgt_replicated(batch=args.batch, ticks=args.ticks,
                                  replicas=args.replicas, reads=args.reads)
+        elif args.profile == "frontend":
+            serve_frontend(load=args.load, duration=args.duration,
+                           capacity=args.capacity, batch=args.batch,
+                           reader=args.reader,
+                           replicas=max(1, args.replicas),
+                           admission=args.admission)
         else:
             serve_sgt_churn(batch=args.batch, ticks=args.ticks,
                             method=args.method, profile=args.profile)

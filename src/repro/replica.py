@@ -66,6 +66,91 @@ def _host_delta(delta: CacheDelta) -> CacheDelta:
     return CacheDelta(*[np.asarray(x) for x in delta])
 
 
+def _has_adds(delta: CacheDelta) -> bool:
+    return delta.add_u.shape[0] > 0
+
+
+def _has_deletes(delta: CacheDelta) -> bool:
+    return delta.rem_u.shape[0] > 0 or delta.clear_slots.shape[0] > 0
+
+
+def _merge_deltas(deltas: Sequence[CacheDelta]) -> CacheDelta:
+    """Concatenate a delete-side-before-add-side run of deltas into one.
+    Exact because `closure_cache.apply_delta` applies the delete side
+    first against the post-delta adjacency (removal repair re-derives
+    affected rows from the FINAL adjacency, which is order-free for a
+    set of removals) and folds the whole accepted add set last — the
+    same linearization the writer committed the run under."""
+    if len(deltas) == 1:
+        return deltas[0]
+    return CacheDelta(*[jnp.concatenate([d[i] for d in deltas])
+                        for i in range(len(CacheDelta._fields))])
+
+
+def coalesce_entries(entries: Sequence[LogEntry]) -> List[LogEntry]:
+    """Merge a recorded run of log entries into the fewest equivalent
+    entries: consecutive deltas coalesce while every delete-recording
+    entry precedes every add-recording entry (the front-end tick's phase
+    order — RemoveVertex, AddVertex, RemoveEdge, AddEdge — always
+    qualifies, so one coalesced tick ships as ONE entry); a grow marker
+    only ever opens a group (the replica must re-embed before any merged
+    delta applies).  Each merged entry carries the LAST epoch of its
+    group — replicas land on the same version replaying either form."""
+    groups: List[List[LogEntry]] = []
+    for e in entries:
+        if groups and e.grow_to == 0:
+            g = groups[-1]
+            adds_seen = any(_has_adds(x.delta) for x in g)
+            if not (adds_seen and _has_deletes(e.delta)):
+                g.append(e)
+                continue
+        groups.append([e])
+    out = []
+    for g in groups:
+        merged = _merge_deltas([x.delta for x in g])
+        out.append(LogEntry(g[-1].epoch, g[0].grow_to, merged))
+    return out
+
+
+# --------------------------------------------------- compiled writer steps
+#
+# One XLA program per mutator: the engine commit AND the log delta come
+# out of the same trace, so the delta recomputation (the same pure
+# functions the eager path calls beside the engine) CSEs away instead of
+# doubling the work, and a fixed-shape writer tick is four compiled
+# calls.  `jax.jit` caches per (capacity, config) structure — the serving
+# front-end's padded phases hit the cache every tick.
+
+@jax.jit
+def _add_vertices_step(engine, keys, valid):
+    engine, res = engine.add_vertices(keys, valid=valid)
+    return engine, res
+
+
+@jax.jit
+def _add_edges_step(engine, us, vs, valid):
+    engine, res = engine.add_edges_acyclic(us, vs, valid=valid)
+    u_slot, _ = dag_mod.lookup_slots(engine.state, us)
+    v_slot, _ = dag_mod.lookup_slots(engine.state, vs)
+    return engine, res, CacheDelta.edges_added(u_slot, v_slot, res.ok)
+
+
+@jax.jit
+def _remove_edges_step(engine, us, vs, valid):
+    _, _, delta = dag_mod.remove_edges_delta(engine.state, us, vs,
+                                             valid=valid)
+    engine, res = engine.remove_edges(us, vs, valid=valid)
+    return engine, res, delta
+
+
+@jax.jit
+def _remove_vertices_step(engine, keys, valid):
+    _, _, delta = dag_mod.remove_vertices_delta(engine.state, keys,
+                                                valid=valid)
+    engine, res = engine.remove_vertices(keys, valid=valid)
+    return engine, res, delta
+
+
 # ------------------------------------------------------------------ writer
 
 class Primary:
@@ -77,30 +162,98 @@ class Primary:
     base image).  Only the four single-op mutators and `grow` record log
     entries; route mixed `OpBatch` traffic through them (the engine's
     ``apply`` fuses phases and does not expose per-phase deltas).
+
+    Two hot-path modes (both off by default — the eager per-call host
+    copy stays the simple, exact-to-PR-7 behavior):
+
+      * ``defer_flush=True`` stages deltas on device and `flush()` ships
+        them in one copy, coalescing phase-ordered same-tick runs into
+        one `LogEntry` (`coalesce_entries`);
+      * ``jit=True`` compiles each mutator + its delta derivation into
+        one XLA call (fixed request shapes hit the jit cache every tick).
     """
 
     def __init__(self, engine: DagEngine,
-                 log: Optional[List[LogEntry]] = None):
+                 log: Optional[List[LogEntry]] = None, *,
+                 defer_flush: bool = False, jit: bool = False):
         self.engine = engine
         self.log: List[LogEntry] = list(log) if log is not None else []
+        # defer_flush=True turns the synchronous log ship into a staged
+        # one: _record keeps the delta ON DEVICE (no host copy, no sync)
+        # and `flush` ships everything staged since the last flush in one
+        # device->host copy, coalescing same-tick runs into one entry —
+        # the serving front-end's writer tick never blocks on the log.
+        self.defer_flush = bool(defer_flush)
+        # jit=True routes each mutator through a compiled step that
+        # derives the log delta INSIDE the same XLA program as the commit
+        # (the delta recomputation CSEs away), so a fixed-shape writer
+        # tick is four compiled calls instead of eager op dispatch.
+        self.jit = bool(jit)
+        self._staged: List[LogEntry] = []
 
     @classmethod
-    def create(cls, capacity: int, **options) -> "Primary":
+    def create(cls, capacity: int, *, defer_flush: bool = False,
+               jit: bool = False, **options) -> "Primary":
         """A fresh writer; ``options`` mirror `DagEngine.create`."""
-        return cls(DagEngine.create(capacity, **options))
+        return cls(DagEngine.create(capacity, **options),
+                   defer_flush=defer_flush, jit=jit)
 
     @property
     def epoch(self) -> int:
         return int(self.engine.epoch)
 
     def _record(self, delta: CacheDelta, grow_to: int = 0) -> None:
-        self.log.append(LogEntry(self.epoch, grow_to, _host_delta(delta)))
+        if self.defer_flush:
+            # keep the device arrays (and the device epoch scalar — even
+            # int(epoch) would force a blocking sync per call)
+            self._staged.append(LogEntry(self.engine.epoch, grow_to, delta))
+        else:
+            self.log.append(LogEntry(self.epoch, grow_to,
+                                     _host_delta(delta)))
+
+    def flush(self, coalesce: bool = True) -> List[LogEntry]:
+        """Ship every staged delta to the host log in one blocking copy.
+
+        With ``coalesce`` (default) same-tick runs merge into one
+        `LogEntry` via `coalesce_entries` — a front-end tick's four
+        phases (RemoveVertex, AddVertex, RemoveEdge, AddEdge) are
+        phase-ordered deletes-before-adds, so the whole tick ships as a
+        single entry.  Returns the entries appended (empty when nothing
+        is staged — eager primaries append directly and flush is a
+        no-op).  Safe to call from a worker thread: the front-end defers
+        it off the submit path."""
+        if not self._staged:
+            return []
+        staged, self._staged = self._staged, []
+        groups = coalesce_entries(staged) if coalesce else staged
+        shipped = [LogEntry(int(e.epoch), int(e.grow_to),
+                            _host_delta(e.delta)) for e in groups]
+        self.log.extend(shipped)
+        return shipped
 
     # ------------------------------------------------------- mutators
 
+    def _valid_arr(self, keys, valid):
+        return jnp.ones(jnp.asarray(keys).shape, bool) if valid is None \
+            else jnp.asarray(valid)
+
     def add_vertices(self, keys, valid=None) -> OpResult:
         cap_before = self.engine.capacity
-        self.engine, res = self.engine.add_vertices(keys, valid=valid)
+        if self.jit:
+            eng, res = _add_vertices_step(self.engine, jnp.asarray(keys),
+                                          self._valid_arr(keys, valid))
+            # auto_grow cannot fire inside the compiled step (static
+            # shapes); mirror the eager engine here: double until the
+            # dropped adds fit, re-run on the grown pre-call engine
+            while self.engine.config.auto_grow and \
+                    int(res.n_overflow) > int(self.engine.state.n_overflow):
+                grown = self.engine.grow(2 * self.engine.capacity)
+                self.engine = grown
+                eng, res = _add_vertices_step(grown, jnp.asarray(keys),
+                                              self._valid_arr(keys, valid))
+            self.engine = eng
+        else:
+            self.engine, res = self.engine.add_vertices(keys, valid=valid)
         # auto_grow may have re-run the call on a grown engine; ship the
         # capacity so the replica's slab grows in the same place
         grow_to = self.engine.capacity \
@@ -109,27 +262,45 @@ class Primary:
         return res
 
     def add_edges_acyclic(self, us, vs, valid=None) -> OpResult:
-        self.engine, res = self.engine.add_edges_acyclic(us, vs, valid=valid)
-        # the delta's mask IS the accept decision: ok rows exist in the
-        # post-graph (folding an already-present edge is an exact no-op)
-        u_slot, _ = dag_mod.lookup_slots(self.engine.state, us)
-        v_slot, _ = dag_mod.lookup_slots(self.engine.state, vs)
-        self._record(CacheDelta.edges_added(u_slot, v_slot, res.ok))
+        if self.jit:
+            self.engine, res, delta = _add_edges_step(
+                self.engine, jnp.asarray(us), jnp.asarray(vs),
+                self._valid_arr(us, valid))
+        else:
+            self.engine, res = self.engine.add_edges_acyclic(us, vs,
+                                                             valid=valid)
+            # the delta's mask IS the accept decision: ok rows exist in
+            # the post-graph (folding a present edge is an exact no-op)
+            u_slot, _ = dag_mod.lookup_slots(self.engine.state, us)
+            v_slot, _ = dag_mod.lookup_slots(self.engine.state, vs)
+            delta = CacheDelta.edges_added(u_slot, v_slot, res.ok)
+        self._record(delta)
         return res
 
     def remove_edges(self, us, vs, valid=None) -> OpResult:
-        # derive the adj-diff-exact delta the engine commits internally
-        # (same pure function on the same pre-state)
-        _, _, delta = dag_mod.remove_edges_delta(self.engine.state, us, vs,
-                                                 valid=valid)
-        self.engine, res = self.engine.remove_edges(us, vs, valid=valid)
+        if self.jit:
+            self.engine, res, delta = _remove_edges_step(
+                self.engine, jnp.asarray(us), jnp.asarray(vs),
+                self._valid_arr(us, valid))
+        else:
+            # derive the adj-diff-exact delta the engine commits
+            # internally (same pure function on the same pre-state)
+            _, _, delta = dag_mod.remove_edges_delta(self.engine.state, us,
+                                                     vs, valid=valid)
+            self.engine, res = self.engine.remove_edges(us, vs, valid=valid)
         self._record(delta)
         return res
 
     def remove_vertices(self, keys, valid=None) -> OpResult:
-        _, _, delta = dag_mod.remove_vertices_delta(self.engine.state, keys,
-                                                    valid=valid)
-        self.engine, res = self.engine.remove_vertices(keys, valid=valid)
+        if self.jit:
+            self.engine, res, delta = _remove_vertices_step(
+                self.engine, jnp.asarray(keys),
+                self._valid_arr(keys, valid))
+        else:
+            _, _, delta = dag_mod.remove_vertices_delta(self.engine.state,
+                                                        keys, valid=valid)
+            self.engine, res = self.engine.remove_vertices(keys,
+                                                           valid=valid)
         self._record(delta)
         return res
 
@@ -146,7 +317,11 @@ class Primary:
     def checkpoint(self, directory: str, step: Optional[int] = None) -> str:
         """Write the base image (atomic engine checkpoint; the epoch leaf
         rides along, naming where the log tail starts).  Default step:
-        the current epoch."""
+        the current epoch.  Staged deltas flush first so the base always
+        aligns with a shipped log boundary (coalesced entries carry their
+        group's LAST epoch — a base cut mid-group would otherwise replay
+        a partial prefix of it)."""
+        self.flush()
         from repro.ft import checkpoint as ckpt
         return ckpt.save_engine_checkpoint(
             directory, self.epoch if step is None else step, self.engine)

@@ -1,0 +1,21 @@
+"""Multi-tenant serving front-end over the writer/reader split.
+
+Concurrent client streams fill the engine's batch dimension B through an
+asyncio coalescer (`frontend.Frontend`), with deficit-round-robin tenant
+fairness on batch slots (`fairness.DeficitRoundRobin`), admission
+control off the engine's ``n_overflow`` backpressure
+(`admission.AdmissionController`), and open-loop p50/p99 latency
+measurement (`openloop.run_openloop`).
+"""
+from repro.serve.admission import ADMISSION_POLICIES, AdmissionController
+from repro.serve.fairness import DeficitRoundRobin
+from repro.serve.frontend import (KINDS, READERS, STATUS_OK, STATUS_SHED,
+                                  Frontend, FrontendConfig, Request,
+                                  Response)
+from repro.serve.openloop import OpenLoopResult, run_openloop
+
+__all__ = [
+    "ADMISSION_POLICIES", "AdmissionController", "DeficitRoundRobin",
+    "Frontend", "FrontendConfig", "KINDS", "OpenLoopResult", "READERS",
+    "Request", "Response", "STATUS_OK", "STATUS_SHED", "run_openloop",
+]

@@ -1,0 +1,67 @@
+"""Admission control for the serving front-end.
+
+Two pressure points, one controller:
+
+  * at SUBMIT time, a bounded queue: a request arriving at a full queue
+    is rejected immediately (429-style, never enqueued) — open-loop
+    overload cannot grow the queue without bound;
+  * at COMMIT time, the engine's own ``n_overflow`` backpressure signal
+    (PR 3): a vertex add the slab had no free slot for comes back
+    ``ok=False`` with the overflow counter bumped.  Policy "shed" turns
+    exactly those dropped adds into 429 responses (the graph is
+    unchanged for them — the un-shedded oracle decides identically on
+    the surviving stream); policy "grow" pairs with an
+    ``auto_grow=True`` engine, which doubles capacity and retries, so
+    nothing sheds and the 429 budget is spent on queue depth alone.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.dispatch import validate_choice
+
+ADMISSION_POLICIES = ("shed", "grow")
+
+
+class AdmissionController:
+    """Queue-depth gate + overflow-shed classifier, with counters."""
+
+    def __init__(self, policy: str = "shed", queue_depth: int = 4096):
+        validate_choice(policy, ADMISSION_POLICIES, what="admission policy")
+        if queue_depth < 1:
+            raise ValueError(f"queue_depth must be >= 1, got {queue_depth}")
+        self.policy = policy
+        self.queue_depth = int(queue_depth)
+        self.n_admitted = 0
+        self.n_shed_queue = 0
+        self.n_shed_overflow = 0
+
+    def admit(self, n_queued: int) -> bool:
+        """Submit-time gate: False -> reject now, nothing was enqueued."""
+        if n_queued >= self.queue_depth:
+            self.n_shed_queue += 1
+            return False
+        self.n_admitted += 1
+        return True
+
+    def overflow_shed(self, ok, valid) -> np.ndarray:
+        """bool[B]: which rows of a committed vertex-add phase to 429.
+
+        A valid vertex add only comes back ``ok=False`` when the slab
+        overflowed (re-adding a live key is ok=True), so under "shed"
+        the shed set is exactly ``valid & ~ok`` — the requests the
+        engine already dropped.  Under "grow" the engine grew and
+        retried instead, so nothing sheds."""
+        valid = np.asarray(valid, bool)
+        if self.policy == "grow":
+            return np.zeros_like(valid)
+        shed = valid & ~np.asarray(ok, bool)
+        self.n_shed_overflow += int(shed.sum())
+        return shed
+
+    @property
+    def stats(self) -> dict:
+        return {"policy": self.policy, "queue_depth": self.queue_depth,
+                "n_admitted": self.n_admitted,
+                "n_shed_queue": self.n_shed_queue,
+                "n_shed_overflow": self.n_shed_overflow}

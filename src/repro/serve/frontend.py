@@ -1,0 +1,437 @@
+"""Asyncio serving front-end: many client streams, one coalesced writer.
+
+The paper's concurrency is "many threads mutate/query one acyclic graph
+without blocking"; in this reproduction the batch dimension B *is* that
+concurrency.  This module finally fills B from real concurrent clients:
+
+  * clients `submit` typed requests (insert-edge / remove / reachability,
+    tagged with a tenant id) into a bounded multi-tenant queue;
+  * a coalescer task drains the queue into the engine's typed batches —
+    it waits for up to ``batch_size`` requests but never past
+    ``max_wait_s`` (low load must not stall), picks the B slots with
+    deficit-round-robin over tenants (`fairness.DeficitRoundRobin`), and
+    commits one padded fixed-shape tick through the single `Primary`
+    writer in the documented linearization order (RemoveVertex,
+    AddVertex, RemoveEdge, AddEdge, then reads);
+  * reads are answered by versioned readers, never the mutation path:
+    reader="snapshot" takes one frozen `EngineSnapshot` per mutated tick,
+    reader="replica" replays the tick's coalesced `LogEntry` into N
+    `Replica`s and rotates reads across them — both answer in closure
+    bit lookups, zero reader-side boolean-matmul row-products (PR 7);
+  * `admission.AdmissionController` sheds at the two pressure points:
+    queue-full submits reject immediately, and per-call ``n_overflow``
+    backpressure either 429s exactly the dropped vertex adds (policy
+    "shed") or rides the engine's ``auto_grow`` doubling (policy "grow").
+
+Fixed shapes are load-bearing: every phase pads to ``batch_size`` with a
+``valid`` mask, so the `Primary`'s compiled steps (``jit=True``) and the
+jitted read paths hit the XLA cache on every tick regardless of how the
+queue happened to fill.
+
+The front-end records its commit-order linearization in ``trace`` —
+(kind, a, b, ok) per applied request — which is the hook for the
+bit-for-bit equivalence property in tests/test_serve_frontend.py: the
+same trace replayed as one sequential stream must reproduce every accept
+decision and the final adjacency/closure exactly.
+"""
+from __future__ import annotations
+
+import asyncio
+import collections
+import dataclasses
+import time
+from typing import Deque, Dict, Hashable, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import closure_cache
+from repro.core import dag as dag_mod
+from repro.core.dispatch import validate_choice
+from repro.core.engine import DagEngine
+from repro.replica import LogEntry, Primary, Replica
+from repro.serve.admission import AdmissionController
+from repro.serve.fairness import DeficitRoundRobin
+
+KINDS = ("add_vertex", "remove_vertex", "add_edge", "remove_edge",
+         "reachable")
+READERS = ("snapshot", "replica")
+
+STATUS_OK = 200
+STATUS_SHED = 429
+
+# jitted read paths — module-level so every Frontend shares the compile
+# cache (keyed on capacity/shape structure)
+_snap_take = jax.jit(lambda e: e.snapshot())
+_snap_read = jax.jit(lambda s, f, t, m: s.reachable(f, t) & m)
+_slot_lookup = jax.jit(lambda e, k: dag_mod.lookup_slots(e.state, k))
+_rep_read = jax.jit(lambda r, u, v, m: r.reachable_slots(u, v) & m)
+
+
+@jax.jit
+def _rep_apply(rep: Replica, epoch, delta) -> Replica:
+    """`Replica.apply` minus the grow re-embed, as ONE compiled call —
+    a tick's coalesced entry has at most one shape per phase (padded to
+    B), so the per-tick replay hits the jit cache instead of paying
+    eager dispatch through the delete-repair scan."""
+    adj = rep._adj_after(delta)
+    closure = closure_cache.apply_delta(rep.closure, adj, delta,
+                                        update_impl=rep.update_impl,
+                                        delete_impl=rep.delete_impl)
+    return Replica(jnp.asarray(epoch, jnp.int32), adj, closure,
+                   rep.update_impl, rep.delete_impl)
+
+
+def _advance_replica(rep: Replica, entries: List[LogEntry]) -> Replica:
+    """Replay semantics of `Replica.replay` on the compiled apply."""
+    base = int(rep.epoch)
+    for e in entries:
+        if e.epoch < base:
+            continue
+        if e.grow_to:
+            rep = rep._grown(e.grow_to)
+        delta = jax.tree.map(jnp.asarray, e.delta)
+        rep = _rep_apply(rep, e.epoch, delta)
+    return rep
+
+
+@dataclasses.dataclass
+class Request:
+    kind: str
+    a: int
+    b: int
+    tenant: Hashable
+    future: Optional[asyncio.Future]
+    t_submit: float
+
+
+@dataclasses.dataclass(frozen=True)
+class Response:
+    """What a client's `submit` resolves to.
+
+    ``ok`` is the engine's accept bit (mutations) or the query answer
+    (reads); ``status`` is 200 for a served request and 429 for a shed
+    one (queue full, or a vertex add the slab overflowed under policy
+    "shed" — ``ok`` is False there and the graph is untouched)."""
+
+    ok: bool
+    status: int
+    epoch: int
+    tick: int
+
+
+@dataclasses.dataclass(frozen=True)
+class FrontendConfig:
+    """Knobs of the coalescer; validated at `Frontend` construction."""
+
+    batch_size: int = 64        # B: slots per coalesced tick
+    max_wait_s: float = 0.002   # deadline: never hold a request longer
+    queue_depth: int = 4096     # bound on queued-not-yet-served requests
+    admission: str = "shed"     # "shed" 429s overflow, "grow" auto-grows
+    reader: str = "snapshot"    # "snapshot" | "replica"
+    replicas: int = 2           # replica count when reader="replica"
+    tenant_weights: Optional[Dict[Hashable, float]] = None
+    quantum: float = 1.0        # DRR credit per rotation per unit weight
+
+
+class Frontend:
+    """The serving front-end around one `Primary` writer.
+
+    Usage::
+
+        fe = Frontend.create(1024)
+        async with fe:
+            resp = await fe.submit("add_edge", 3, 7, tenant="alice")
+    """
+
+    def __init__(self, primary: Primary,
+                 config: FrontendConfig = FrontendConfig()):
+        validate_choice(config.reader, READERS, what="reader")
+        if config.batch_size < 1:
+            raise ValueError(
+                f"batch_size must be >= 1, got {config.batch_size}")
+        if config.max_wait_s < 0:
+            raise ValueError(
+                f"max_wait_s must be >= 0, got {config.max_wait_s}")
+        if config.reader == "replica" and config.replicas < 1:
+            raise ValueError('reader="replica" needs replicas >= 1, got '
+                             f"{config.replicas}")
+        if config.admission == "grow" and \
+                not primary.engine.config.auto_grow:
+            raise ValueError(
+                'admission="grow" turns overflow into growth, which needs '
+                "an auto_grow=True engine (create the Primary with "
+                "auto_grow=True, or use admission=\"shed\")")
+        self.primary = primary
+        self.config = config
+        self.admission = AdmissionController(config.admission,
+                                             config.queue_depth)
+        self.drr = DeficitRoundRobin(config.tenant_weights, config.quantum)
+        self._pending: Dict[Hashable, Deque[Request]] = {}
+        self._n_queued = 0
+        self._running = False
+        self._task: Optional[asyncio.Task] = None
+        self._loop: Optional[asyncio.AbstractEventLoop] = None
+        self._wakeup: Optional[asyncio.Event] = None
+        self._tick_no = 0
+        self._log_cursor = len(primary.log)
+        self._snap = primary.snapshot()
+        self._replicas: List[Replica] = []
+        if config.reader == "replica":
+            self._replicas = [Replica.from_engine(primary.engine)
+                              for _ in range(config.replicas)]
+        # commit-order linearization of every APPLIED request — the
+        # sequential-equivalence oracle replays exactly this
+        self.trace: List[Tuple[str, int, int, bool]] = []
+        self.n_served = 0
+        self.served_by_tenant: Dict[Hashable, int] = {}
+
+    @classmethod
+    def create(cls, capacity: int,
+               config: FrontendConfig = FrontendConfig(),
+               method: str = "incremental", **engine_opts) -> "Frontend":
+        """A front-end around a fresh writer in its hot-path modes:
+        deferred/coalesced log flush + compiled mutator steps.
+
+        The engine is created with ``subbatches=batch_size`` — the
+        fully-sequential zero-false-positive edge-insert mode — so a
+        coalesced tick decides exactly like the same requests applied
+        one at a time.  The paper's joint-abort mode (``subbatches=1``)
+        would let two same-tick edges on one cycle BOTH abort, which
+        breaks the front-end's sequential-equivalence contract (the
+        ``trace`` oracle); callers who want paper semantics anyway can
+        pass ``subbatches=1`` explicitly."""
+        if config.admission == "grow":
+            engine_opts.setdefault("auto_grow", True)
+        # max(1, ...) so an invalid batch_size still reaches the
+        # constructor's own "batch_size must be >= 1" error below
+        engine_opts.setdefault("subbatches", max(1, config.batch_size))
+        eng = DagEngine.create(capacity, method=method, **engine_opts)
+        return cls(Primary(eng, defer_flush=True, jit=True), config)
+
+    # ----------------------------------------------------------- lifecycle
+
+    async def start(self) -> "Frontend":
+        if self._running:
+            return self
+        self._loop = asyncio.get_running_loop()
+        self._wakeup = asyncio.Event()
+        self._running = True
+        self._task = self._loop.create_task(self._serve_loop())
+        return self
+
+    async def stop(self) -> None:
+        """Drain the queue (every admitted request gets its response),
+        then stop the coalescer and flush the log tail."""
+        if not self._running and self._task is None:
+            return
+        self._running = False
+        if self._wakeup is not None:
+            self._wakeup.set()
+        if self._task is not None:
+            await self._task
+            self._task = None
+        self.primary.flush()
+        self._log_cursor = len(self.primary.log)
+
+    async def __aenter__(self) -> "Frontend":
+        return await self.start()
+
+    async def __aexit__(self, *exc) -> None:
+        await self.stop()
+
+    # -------------------------------------------------------------- submit
+
+    async def submit(self, kind: str, a: int, b: int = 0,
+                     tenant: Hashable = "default") -> Response:
+        """Enqueue one typed request; resolves when its tick commits.
+
+        429s immediately (without enqueueing) when the bounded queue is
+        full.  Keys are non-negative ints — the engine's EMPTY sentinel
+        is negative and padded slots must stay distinguishable."""
+        validate_choice(kind, KINDS, what="request kind")
+        if not self._running:
+            raise RuntimeError("frontend is not running — use "
+                               "`async with frontend:` or await start()")
+        if a < 0 or b < 0:
+            raise ValueError(f"keys must be >= 0, got ({a}, {b})")
+        if not self.admission.admit(self._n_queued):
+            return Response(False, STATUS_SHED, -1, self._tick_no)
+        fut = self._loop.create_future()
+        req = Request(kind, int(a), int(b), tenant, fut,
+                      time.perf_counter())
+        self._pending.setdefault(tenant, collections.deque()).append(req)
+        self._n_queued += 1
+        self._wakeup.set()
+        return await fut
+
+    # ----------------------------------------------------------- coalescer
+
+    async def _serve_loop(self) -> None:
+        cfg = self.config
+        loop = self._loop
+        while True:
+            if self._n_queued == 0:
+                if not self._running:
+                    break
+                self._wakeup.clear()
+                if self._n_queued == 0:  # nothing raced in before clear
+                    await self._wakeup.wait()
+                continue
+            # coalesce: fill B from the queue, never wait past deadline
+            deadline = loop.time() + cfg.max_wait_s
+            while self._n_queued < cfg.batch_size and self._running:
+                remaining = deadline - loop.time()
+                if remaining <= 0:
+                    break
+                self._wakeup.clear()
+                try:
+                    await asyncio.wait_for(self._wakeup.wait(), remaining)
+                except asyncio.TimeoutError:
+                    break
+            batch = self.drr.select(self._pending, cfg.batch_size)
+            self._n_queued -= len(batch)
+            if not batch:
+                continue
+            # the jax work runs in a worker thread so the event loop
+            # keeps admitting submissions while the device computes
+            results = await loop.run_in_executor(None, self._commit_sync,
+                                                 batch)
+            for req, resp in results:
+                if req.future is not None and not req.future.done():
+                    req.future.set_result(resp)
+            self._tick_no += 1
+
+    # ---------------------------------------------------------- the tick
+
+    def _pad(self, reqs: List[Request]):
+        """(a[B], b[B], valid[B]) — fixed-shape padded phase arrays."""
+        B = self.config.batch_size
+        a = np.zeros(B, np.int32)
+        b = np.zeros(B, np.int32)
+        m = np.zeros(B, bool)
+        for i, r in enumerate(reqs):
+            a[i], b[i], m[i] = r.a, r.b, True
+        return jnp.asarray(a), jnp.asarray(b), jnp.asarray(m)
+
+    def _commit_sync(self, batch: List[Request]
+                     ) -> List[Tuple[Request, Response]]:
+        p = self.primary
+        by_kind: Dict[str, List[Request]] = {k: [] for k in KINDS}
+        for r in batch:
+            by_kind[r.kind].append(r)
+        out: List[Tuple[Request, Response]] = []
+        # (req, ok, status) in COMMIT order — the trace must record the
+        # linearization the engine actually applied, or the sequential
+        # oracle replays same-tick dependent ops out of order
+        decisions: List[Tuple[Request, bool, int]] = []
+        rv, av = by_kind["remove_vertex"], by_kind["add_vertex"]
+        re_, ae = by_kind["remove_edge"], by_kind["add_edge"]
+        mutated = bool(rv or av or re_ or ae)
+
+        # ---- writer phases, in the engine's linearization order.  A
+        # mutated tick runs ALL FOUR phases (empty ones fully masked
+        # out): every tick then compiles and coalesces to the same
+        # shapes — one jit entry per phase, one coalesced-delta shape
+        # for the replica replay — instead of up to 2^4 combos whose
+        # first occurrences would spike mid-run latency.  Reads-only
+        # ticks skip the writer entirely. ----
+        if mutated:
+            keys, _, m = self._pad(rv)
+            ok = np.asarray(p.remove_vertices(keys, valid=m).ok)
+            decisions += [(r, bool(ok[i]), STATUS_OK)
+                          for i, r in enumerate(rv)]
+            keys, _, m = self._pad(av)
+            res = p.add_vertices(keys, valid=m)
+            ok = np.asarray(res.ok)
+            shed = self.admission.overflow_shed(ok, np.asarray(m))
+            decisions += [(r, bool(ok[i]),
+                           STATUS_SHED if shed[i] else STATUS_OK)
+                          for i, r in enumerate(av)]
+            us, vs, m = self._pad(re_)
+            ok = np.asarray(p.remove_edges(us, vs, valid=m).ok)
+            decisions += [(r, bool(ok[i]), STATUS_OK)
+                          for i, r in enumerate(re_)]
+            us, vs, m = self._pad(ae)
+            ok = np.asarray(p.add_edges_acyclic(us, vs, valid=m).ok)
+            decisions += [(r, bool(ok[i]), STATUS_OK)
+                          for i, r in enumerate(ae)]
+
+        # ---- ship the tick's log (ONE coalesced entry, one host copy)
+        # and advance the readers to this version ----
+        if mutated:
+            p.flush()
+            if self._replicas:
+                new = p.log[self._log_cursor:]
+                self._replicas = [_advance_replica(rep, new)
+                                  for rep in self._replicas]
+            self._log_cursor = len(p.log)
+            if self.config.reader == "snapshot":
+                self._snap = _snap_take(p.engine)
+
+        # ---- reads, answered at the tick's frozen version ----
+        reads = by_kind["reachable"]
+        read_ok = None
+        if reads:
+            f, t, m = self._pad(reads)
+            if self.config.reader == "snapshot":
+                read_ok = np.asarray(_snap_read(self._snap, f, t, m))
+            else:
+                # rotate the tick's read batch across replicas; the
+                # router resolves keys to slots off the writer's table
+                # (replicas are slot-addressed on purpose — see replica.py)
+                rep = self._replicas[self._tick_no % len(self._replicas)]
+                fs, ff = _slot_lookup(p.engine, f)
+                ts, tf = _slot_lookup(p.engine, t)
+                read_ok = np.asarray(_rep_read(rep, fs, ts, m & ff & tf))
+
+        epoch = int(p.engine.epoch)
+        tick = self._tick_no
+
+        def respond(req: Request, ok: bool, status: int) -> None:
+            out.append((req, Response(ok, status, epoch, tick)))
+            if status == STATUS_OK:
+                self.trace.append((req.kind, req.a, req.b, ok))
+                self.n_served += 1
+                self.served_by_tenant[req.tenant] = \
+                    self.served_by_tenant.get(req.tenant, 0) + 1
+
+        for req, ok, status in decisions:
+            respond(req, ok, status)
+        for i, req in enumerate(reads):
+            respond(req, bool(read_ok[i]), STATUS_OK)
+        return out
+
+    # ------------------------------------------------------------- helpers
+
+    def warmup(self) -> None:
+        """Compile every jitted phase at the serving shapes, then restore
+        the pre-warmup state — benchmarks call this so XLA compiles stay
+        out of the timed window."""
+        saved = (self.primary.engine, len(self.primary.log),
+                 list(self.primary._staged), self._snap,
+                 list(self._replicas), self._log_cursor, len(self.trace),
+                 self.n_served, dict(self.served_by_tenant),
+                 self.admission.n_shed_overflow)
+        batch = [Request(k, 0, 0, "_warmup", None, 0.0)
+                 for k in ("remove_vertex", "add_vertex", "remove_edge",
+                           "add_edge", "reachable")]
+        self._commit_sync(batch)
+        (self.primary.engine, n_log, staged, self._snap, self._replicas,
+         self._log_cursor, n_trace, self.n_served, self.served_by_tenant,
+         self.admission.n_shed_overflow) = saved
+        del self.primary.log[n_log:]
+        self.primary._staged = staged
+        del self.trace[n_trace:]
+
+    @property
+    def queue_depth_now(self) -> int:
+        return self._n_queued
+
+    @property
+    def stats(self) -> dict:
+        return {"ticks": self._tick_no, "n_served": self.n_served,
+                "served_by_tenant": dict(self.served_by_tenant),
+                "epoch": int(self.primary.engine.epoch),
+                **self.admission.stats}

@@ -28,6 +28,9 @@ EXPECTED = {
     # the SGT scheduler application
     "SgtState", "begin", "conflicts", "finish", "new_scheduler",
     "schedule_tick",
+    # the multi-tenant serving front-end (PR 8)
+    "AdmissionController", "DeficitRoundRobin", "Frontend",
+    "FrontendConfig", "Response", "run_openloop",
 }
 
 

@@ -1,0 +1,437 @@
+"""Serving front-end (`repro.serve`): coalescing, admission, fairness,
+and the sequential-equivalence bar.
+
+The acceptance properties of the PR-8 front-end:
+
+  * the coalescer fills B under burst (a pre-filled queue's first tick
+    serves exactly ``batch_size`` slots) and never holds a trickle past
+    ``max_wait_s`` (a lone request ships in a batch of one);
+  * admission policy "shed" 429s exactly the vertex adds the engine's
+    ``n_overflow`` backpressure dropped — and the surviving stream's
+    decisions match an un-shedded sequential oracle; policy "grow"
+    sheds nothing and doubles capacity instead;
+  * deficit-round-robin slot shares converge to the tenant weights and
+    no backlogged tenant starves;
+  * the front-end's commit-order ``trace`` replayed as ONE sequential
+    stream on a fresh engine reproduces every accept/answer bit and the
+    final adjacency + packed closure exactly (deterministic sweep + a
+    hypothesis property);
+  * the `Primary` hot-path modes behind the front-end (``defer_flush``
+    staging, `coalesce_entries` merging, ``jit`` compiled steps) ship a
+    log that replicas replay to bit-for-bit convergence, and the
+    default eager mode is unchanged.
+
+No pytest-asyncio here — each test drives its own event loop with
+``asyncio.run``.
+"""
+import asyncio
+import collections
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import DagEngine, Primary, Replica
+from repro.replica import coalesce_entries
+from repro.serve import (AdmissionController, DeficitRoundRobin, Frontend,
+                         FrontendConfig, STATUS_OK, STATUS_SHED)
+
+KINDS = ("add_vertex", "remove_vertex", "add_edge", "remove_edge",
+         "reachable")
+
+
+# ---------------------------------------------------------------- helpers
+
+def _mixed_stream(n, seed, key_hi, tenants=("t0", "t1")):
+    rng = np.random.default_rng(seed)
+    kinds = rng.choice(KINDS, size=n, p=[0.25, 0.05, 0.35, 0.05, 0.30])
+    a = rng.integers(0, key_hi, n)
+    b = rng.integers(0, key_hi, n)
+    return [(str(kinds[i]), int(a[i]), int(b[i]),
+             tenants[i % len(tenants)]) for i in range(n)]
+
+
+def _run_requests(fe, reqs, stagger_s=0.0):
+    """Submit ``reqs`` concurrently (optionally staggered) and return
+    responses in submission order."""
+
+    async def go():
+        async with fe:
+            async def one(i, kind, a, b, tenant):
+                if stagger_s:
+                    await asyncio.sleep(i * stagger_s)
+                return await fe.submit(kind, a, b, tenant=tenant)
+            return await asyncio.gather(
+                *[one(i, *r) for i, r in enumerate(reqs)])
+
+    return asyncio.run(go())
+
+
+def _sequential_oracle(capacity, trace, **engine_opts):
+    """Replay a front-end trace as one-op-at-a-time sequential calls on a
+    fresh engine; returns (final_engine, per-op ok bits)."""
+    eng = DagEngine.create(capacity, method="incremental", **engine_opts)
+    oks = []
+    for kind, a, b, _ in trace:
+        a1 = jnp.asarray([a], jnp.int32)
+        b1 = jnp.asarray([b], jnp.int32)
+        if kind == "add_vertex":
+            eng, r = eng.add_vertices(a1)
+            ok = bool(r.ok[0])
+        elif kind == "remove_vertex":
+            eng, r = eng.remove_vertices(a1)
+            ok = bool(r.ok[0])
+        elif kind == "add_edge":
+            eng, r = eng.add_edges_acyclic(a1, b1)
+            ok = bool(r.ok[0])
+        elif kind == "remove_edge":
+            eng, r = eng.remove_edges(a1, b1)
+            ok = bool(r.ok[0])
+        else:
+            ok = bool(np.asarray(eng.reachable(a1, b1))[0])
+        oks.append(ok)
+    return eng, oks
+
+
+def _engines_equal(a: DagEngine, b: DagEngine) -> bool:
+    """Bit-for-bit state equality: slot table, adjacency, packed closure."""
+    return (np.array_equal(np.asarray(a.state.adj), np.asarray(b.state.adj))
+            and np.array_equal(np.asarray(a.cache.closure),
+                               np.asarray(b.cache.closure)))
+
+
+def _assert_trace_equals_sequential(fe, capacity, **engine_opts):
+    oracle_eng, oracle_oks = _sequential_oracle(capacity, fe.trace,
+                                                **engine_opts)
+    traced_oks = [ok for _, _, _, ok in fe.trace]
+    assert traced_oks == oracle_oks, (
+        "front-end decisions diverge from the sequential oracle at op "
+        f"{next(i for i, (x, y) in enumerate(zip(traced_oks, oracle_oks)) if x != y)}")
+    assert _engines_equal(fe.primary.engine, oracle_eng), \
+        "final adjacency/closure diverge from the sequential oracle"
+
+
+# ------------------------------------------------------------- coalescer
+
+def test_burst_fills_batch():
+    """A queue pre-filled past B ships a FULL first tick: coalescing, not
+    one-request-per-commit."""
+    B = 8
+    fe = Frontend.create(64, FrontendConfig(batch_size=B, max_wait_s=0.25))
+    fe.warmup()
+    reqs = [("reachable", i % 16, (i + 1) % 16, "t0") for i in range(3 * B)]
+    resps = _run_requests(fe, reqs)
+    assert all(r.status == STATUS_OK for r in resps)
+    by_tick = collections.Counter(r.tick for r in resps)
+    assert by_tick[0] == B, f"first tick served {by_tick[0]}, want B={B}"
+    assert fe.stats["ticks"] == 3 and set(by_tick.values()) == {B}
+
+
+def test_trickle_respects_deadline():
+    """One lone request must not wait for B peers that never come: it
+    ships in a batch of one, right around ``max_wait_s``."""
+    fe = Frontend.create(64, FrontendConfig(batch_size=32, max_wait_s=0.05))
+    fe.warmup()
+    t0 = time.perf_counter()
+    (resp,) = _run_requests(fe, [("add_vertex", 3, 0, "t0")])
+    elapsed = time.perf_counter() - t0
+    assert resp.status == STATUS_OK and resp.ok
+    assert fe.stats["ticks"] == 1 and fe.n_served == 1
+    # the coalescer holds the request until the deadline (queue of 1 can
+    # never reach B=32) but not much past it
+    assert 0.04 <= elapsed < 2.0, f"trickle latency {elapsed:.3f}s"
+
+
+# ------------------------------------------------------------- admission
+
+def test_shed_policy_429s_exactly_the_overflowed_adds():
+    """capacity-8 engine, 20 distinct vertex adds: the slab drops exactly
+    12, and the front-end 429s exactly those — the served stream then
+    matches the un-shedded sequential oracle bit for bit."""
+    cap = 32
+    fe = Frontend.create(cap, FrontendConfig(batch_size=64, max_wait_s=0.1,
+                                             admission="shed"))
+    fe.warmup()
+    reqs = [("add_vertex", k, 0, "t0") for k in range(40)]
+    resps = _run_requests(fe, reqs)
+    shed = [r for r in resps if r.status == STATUS_SHED]
+    ok = [r for r in resps if r.status == STATUS_OK]
+    assert len(ok) == cap and len(shed) == 40 - cap
+    assert all(r.ok for r in ok) and not any(r.ok for r in shed)
+    assert fe.admission.n_shed_overflow == 40 - cap
+    assert int(fe.primary.engine.state.n_overflow) == 40 - cap
+    assert fe.primary.engine.capacity == cap  # shed never grows
+    # shed adds left the graph untouched: the surviving trace replays
+    # identically on a fresh engine that never saw them
+    assert len(fe.trace) == cap
+    _assert_trace_equals_sequential(fe, cap)
+
+
+def test_grow_policy_sheds_nothing_and_doubles():
+    cap = 32
+    fe = Frontend.create(cap, FrontendConfig(batch_size=64, max_wait_s=0.1,
+                                             admission="grow"))
+    reqs = [("add_vertex", k, 0, "t0") for k in range(40)]
+    resps = _run_requests(fe, reqs)
+    assert all(r.status == STATUS_OK and r.ok for r in resps)
+    assert fe.admission.n_shed_overflow == 0
+    assert fe.primary.engine.capacity >= 40 > cap
+    _assert_trace_equals_sequential(fe, cap, auto_grow=True)
+
+
+def test_queue_full_rejects_without_enqueue():
+    ctrl = AdmissionController("shed", queue_depth=3)
+    assert [ctrl.admit(n) for n in (0, 1, 2, 3, 4)] == \
+        [True, True, True, False, False]
+    assert ctrl.n_admitted == 3 and ctrl.n_shed_queue == 2
+
+
+def test_admission_policy_validated():
+    with pytest.raises(ValueError, match=r"nearest valid admission policy "
+                                         r"is 'grow'"):
+        AdmissionController("gorw")
+
+
+# -------------------------------------------------------------- fairness
+
+def test_drr_shares_converge_to_weights():
+    """Saturated queues, weights 3:1 -> long-run slot shares 3:1."""
+    drr = DeficitRoundRobin(weights={"a": 3.0, "b": 1.0})
+    served = collections.Counter()
+    pending = {"a": collections.deque(), "b": collections.deque()}
+    for _ in range(50):
+        for t in pending:  # keep both tenants saturated
+            while len(pending[t]) < 16:
+                pending[t].append(t)
+        for t in drr.select(pending, 8):
+            served[t] += 1
+    assert served["a"] + served["b"] == 400
+    share = served["a"] / 400
+    assert abs(share - 0.75) < 0.05, f"weight-3 tenant share {share:.2f}"
+
+
+def test_drr_no_starvation():
+    """5 equal tenants, 2 slots per tick: every backlogged tenant is
+    served at least once per full ring rotation (a cut-off tenant banks
+    its credit, so a visit can serve up to 2 — worst-case gap is the
+    ring length, 5 ticks), and long-run counts stay equal."""
+    drr = DeficitRoundRobin()
+    pending = {t: collections.deque() for t in "abcde"}
+    last_served = {t: -1 for t in pending}
+    counts = collections.Counter()
+    for tick in range(30):
+        for t in pending:
+            while len(pending[t]) < 4:
+                pending[t].append(t)
+        for t in drr.select(pending, 2):
+            last_served[t] = tick
+            counts[t] += 1
+        for t, at in last_served.items():
+            assert tick - at <= 5 or at == -1, \
+                f"tenant {t} starved: last served tick {at} at tick {tick}"
+    assert min(last_served.values()) >= 24  # everyone served recently
+    # equal weights -> equal long-run counts (2*30 slots over 5 tenants)
+    assert max(counts.values()) - min(counts.values()) <= 2
+
+
+def test_frontend_serves_all_tenants():
+    fe = Frontend.create(
+        64, FrontendConfig(batch_size=8, max_wait_s=0.02,
+                           tenant_weights={"hot": 2.0, "cold": 1.0}))
+    fe.warmup()
+    reqs = _mixed_stream(120, seed=3, key_hi=24, tenants=("hot", "cold"))
+    resps = _run_requests(fe, reqs)
+    assert all(r.status == STATUS_OK for r in resps)
+    assert fe.served_by_tenant == {"hot": 60, "cold": 60}
+    _assert_trace_equals_sequential(fe, 64)
+
+
+# -------------------------------------------- sequential equivalence bar
+
+def test_trace_equals_sequential_stream_deterministic():
+    """The tentpole property, deterministic sweep: multi-tenant mixed
+    bursts coalesced into padded multi-phase ticks decide and answer
+    exactly like a one-op-at-a-time sequential stream."""
+    for seed in (0, 1, 2):
+        fe = Frontend.create(64, FrontendConfig(batch_size=16,
+                                                max_wait_s=0.005))
+        fe.warmup()
+        reqs = _mixed_stream(200, seed=seed, key_hi=24,
+                             tenants=("t0", "t1", "t2", "t3"))
+        resps = _run_requests(fe, reqs, stagger_s=0.0005)
+        assert all(r.status == STATUS_OK for r in resps)
+        assert len(fe.trace) == 200
+        assert fe.stats["ticks"] > 3, "stream never coalesced into ticks"
+        _assert_trace_equals_sequential(fe, 64)
+
+
+def test_trace_equals_sequential_stream_property():
+    """Property form: randomized op soup on a tiny keyspace (heavy
+    same-tick collisions: duplicate adds, add+remove of one edge,
+    cycle attempts) stays bit-for-bit sequential-equivalent."""
+    pytest.importorskip(
+        "hypothesis",
+        reason="property tests need the dev extra (pip install -e .[dev])")
+    from hypothesis import given, settings, strategies as st
+
+    KEYS = st.integers(min_value=0, max_value=7)
+    op = st.tuples(st.sampled_from(KINDS), KEYS, KEYS,
+                   st.sampled_from(("t0", "t1")))
+
+    @settings(max_examples=15, deadline=None)
+    @given(st.lists(op, min_size=1, max_size=30))
+    def prop(ops):
+        fe = Frontend.create(32, FrontendConfig(batch_size=4,
+                                                max_wait_s=0.002))
+        resps = _run_requests(fe, ops)
+        assert all(r.status == STATUS_OK for r in resps)
+        assert len(fe.trace) == len(ops)
+        _assert_trace_equals_sequential(fe, 32)
+
+    prop()
+
+
+def test_submit_validates_kind_and_keys():
+    fe = Frontend.create(32)
+
+    async def go():
+        async with fe:
+            with pytest.raises(ValueError,
+                               match=r"nearest valid request kind is "
+                                     r"'add_edge'"):
+                await fe.submit("ad_edge", 0, 1)
+            with pytest.raises(ValueError, match=r"keys must be >= 0"):
+                await fe.submit("add_vertex", -1)
+
+    asyncio.run(go())
+    with pytest.raises(RuntimeError, match="not running"):
+        asyncio.run(fe.submit("add_vertex", 0))
+
+
+def test_frontend_config_validated():
+    with pytest.raises(ValueError, match=r"nearest valid reader is "
+                                         r"'replica'"):
+        Frontend.create(32, FrontendConfig(reader="replcia"))
+    with pytest.raises(ValueError, match=r"batch_size must be >= 1"):
+        Frontend.create(32, FrontendConfig(batch_size=0))
+    with pytest.raises(ValueError, match=r"auto_grow=True engine"):
+        Frontend(Primary.create(32, method="incremental"),
+                 FrontendConfig(admission="grow"))
+
+
+# ------------------------------------------- replica-served reads
+
+def test_replica_reader_answers_like_snapshot():
+    """reader="replica" serves the same answers as reader="snapshot" on
+    the identical stream, and the replicas converge with the writer."""
+    reqs = _mixed_stream(150, seed=9, key_hi=24)
+    answers = {}
+    for reader in ("snapshot", "replica"):
+        fe = Frontend.create(64, FrontendConfig(batch_size=16,
+                                                max_wait_s=0.005,
+                                                reader=reader, replicas=2))
+        fe.warmup()
+        # no stagger: the whole stream enqueues before the serve loop
+        # drains, so both runs tick through identical B-request groups —
+        # staggered arrivals would make tick boundaries (and thus the
+        # version each read answers at) timing-dependent
+        resps = _run_requests(fe, reqs, stagger_s=0.0)
+        assert all(r.status == STATUS_OK for r in resps)
+        answers[reader] = [r.ok for r in resps]
+        _assert_trace_equals_sequential(fe, 64)
+        if reader == "replica":
+            for rep in fe._replicas:
+                assert rep.converged_with(fe.primary.engine)
+    assert answers["snapshot"] == answers["replica"]
+
+
+# ----------------------------- Primary hot-path modes (satellite fix)
+
+def _drive_quad(p: Primary):
+    """One front-end-shaped tick: all four phases, deletes before adds."""
+    p.remove_vertices(jnp.asarray([9], jnp.int32))
+    p.add_vertices(jnp.asarray([0, 1, 2, 3], jnp.int32))
+    p.remove_edges(jnp.asarray([0], jnp.int32), jnp.asarray([3], jnp.int32))
+    p.add_edges_acyclic(jnp.asarray([0, 1, 2], jnp.int32),
+                        jnp.asarray([1, 2, 3], jnp.int32))
+
+
+def test_defer_flush_stages_then_ships_one_entry():
+    """Deferred mode keeps the hot path free of host copies: nothing
+    lands in the log until `flush`, and a front-end-shaped tick (deletes
+    before adds) coalesces to ONE entry carrying the last epoch."""
+    p = Primary.create(64, method="incremental", defer_flush=True)
+    _drive_quad(p)
+    assert p.log == [] and len(p._staged) == 4
+    shipped = p.flush()
+    assert len(shipped) == 1 and len(p.log) == 1 and p._staged == []
+    assert p.log[0].epoch == p.epoch == 4
+    rep = Replica.from_engine(
+        DagEngine.create(64, method="incremental")).replay(p.log)
+    assert rep.converged_with(p.engine)
+
+
+def test_coalesce_splits_on_delete_after_add():
+    """Merging is exact only while deletes precede adds (the delete
+    repair re-derives rows from post-delta adjacency; an add folded in
+    BEFORE a later delete's repair is fine, the reverse is not) — so a
+    delete arriving after adds opens a new entry."""
+    p = Primary.create(64, method="incremental", defer_flush=True)
+    p.add_vertices(jnp.asarray([0, 1, 2], jnp.int32))
+    p.add_edges_acyclic(jnp.asarray([0, 1], jnp.int32),
+                        jnp.asarray([1, 2], jnp.int32))
+    p.remove_edges(jnp.asarray([0], jnp.int32), jnp.asarray([1], jnp.int32))
+    p.add_edges_acyclic(jnp.asarray([0], jnp.int32),
+                        jnp.asarray([2], jnp.int32))
+    assert len(coalesce_entries(p._staged)) == 2
+    shipped = p.flush()
+    assert len(shipped) == 2
+    rep = Replica.from_engine(
+        DagEngine.create(64, method="incremental")).replay(p.log)
+    assert rep.converged_with(p.engine)
+
+
+def test_flush_uncoalesced_matches_eager_log():
+    p = Primary.create(64, method="incremental", defer_flush=True)
+    q = Primary.create(64, method="incremental")
+    for x in (p, q):
+        _drive_quad(x)
+    p.flush(coalesce=False)
+    assert len(p.log) == len(q.log) == 4
+    for a, b in zip(p.log, q.log):
+        assert (a.epoch, a.grow_to) == (b.epoch, b.grow_to)
+        for x, y in zip(a.delta, b.delta):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_jit_primary_matches_eager_across_grow():
+    """Compiled steps + deferred coalesced log: same engine state as the
+    eager Primary on a mixed stream with an auto-grow, and the coalesced
+    log still replays to convergence."""
+    rng_stream = _mixed_stream(60, seed=21, key_hi=40)
+    engines = []
+    for opts in ({}, {"defer_flush": True, "jit": True}):
+        p = Primary.create(32, method="incremental", auto_grow=True, **opts)
+        for kind, a, b, _ in rng_stream:
+            a1 = jnp.asarray([a], jnp.int32)
+            b1 = jnp.asarray([b], jnp.int32)
+            if kind == "add_vertex":
+                p.add_vertices(a1)
+            elif kind == "remove_vertex":
+                p.remove_vertices(a1)
+            elif kind == "add_edge":
+                p.add_edges_acyclic(a1, b1)
+            elif kind == "remove_edge":
+                p.remove_edges(a1, b1)
+        # grow past capacity to exercise the jit-mode auto-grow mirror
+        p.add_vertices(jnp.asarray(list(range(40, 72)), jnp.int32))
+        p.flush()
+        engines.append(p)
+    eager, jitted = engines
+    assert jitted.engine.capacity == eager.engine.capacity
+    assert jitted.epoch == eager.epoch
+    assert _engines_equal(jitted.engine, eager.engine)
+    rep = Replica.from_engine(
+        DagEngine.create(32, method="incremental")).replay(jitted.log)
+    assert rep.converged_with(jitted.engine)
