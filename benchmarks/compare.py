@@ -62,6 +62,12 @@ What is compared, and why the checks differ in strictness:
       agreement rule as the façade gates, because latency quantiles on
       shared CI boxes swing independently under contention while a real
       replication cost shows in every quantile;
+    - crash-recovery guard: the ``sgt_recovery_*`` rows (PR-9 fault
+      tolerance) carry deterministic in-run verdicts gated with no
+      tolerance (``converged=1``, ``wrong_answers=0``, ``prefix_ok=1`` on
+      the torn-tail row), and a within-run time bound: resync must stay
+      within ``RESYNC_COST_MULT`` of the base-image restore floor plus a
+      fixed tail-replay allowance;
     - algo2/algo1 time *ratio* drift vs baseline uses ``--time-tolerance``
       (default 1.0 == 2x), loose enough to absorb CI timer noise on
       microsecond rows while still catching an order-of-magnitude loss of
@@ -90,11 +96,15 @@ CHURN_RE = re.compile(
     r"(closure|partial|incremental|incremental_rebuild)$")
 CAPACITY_RE = re.compile(r"^capacity_sweep_C(\d+)_(insert|churn|grow)$")
 OPENLOOP_RE = re.compile(r"^sgt_openloop_l(\d+)_(engine|replicas\d+)$")
+RECOVERY_RE = re.compile(r"^sgt_recovery_(restore|resync|torn_tail)$")
 CLOSURE_BYTES_RE = re.compile(r"closure_bytes=(\d+)")
 DECISIONS_RE = re.compile(r"decisions_match=(\d+)")
 RESTORE_RE = re.compile(r"restore_match=(\d+)")
 P50_RE = re.compile(r"p50_us=(\d+)")
 P99_RE = re.compile(r"p99_us=(\d+)")
+CONVERGED_RE = re.compile(r"converged=(\d+)")
+WRONG_RE = re.compile(r"wrong_answers=(\d+)")
+PREFIX_RE = re.compile(r"prefix_ok=(\d+)")
 
 # absolute slack (us) added to within-run time comparisons so that
 # microsecond-scale rows don't trip the gate on timer noise alone
@@ -116,6 +126,17 @@ ENGINE_TOLERANCE = 0.10
 # a multiple, not an offset
 OPENLOOP_TOLERANCE = 2.0
 OPENLOOP_ABS_SLACK_US = 50_000.0
+
+# replica resync (recover from the newest VALID base + jitted tail
+# replay) may cost this multiple of the plain base-image restore floor...
+RESYNC_COST_MULT = 4.0
+# ...plus this absolute allowance for the tail replay itself (a handful
+# of coalesced entries through the delete-repair scan — bounded work that
+# doesn't scale with the base image).  The gate catches recovery turning
+# into a rebuild: anything replaying-from-scratch or re-deriving the
+# closure at full capacity blows through the slack by an order of
+# magnitude (the un-jitted eager replay path alone costs ~2s here).
+RESYNC_ABS_SLACK_US = 1_000_000.0
 
 # the one-step C/2 -> C grow migration (a zero-pad re-embedding, pure
 # memory traffic over C^2/8 bytes) must cost no more than this many
@@ -165,7 +186,7 @@ def check(pr: dict, base: dict, tol: float, time_tol: float) -> list:
         if (ALGO_B_RE.match(name) or SGT_RE.match(name)
                 or READ_RE.match(name) or INSHEAVY_RE.match(name)
                 or CHURN_RE.match(name) or CAPACITY_RE.match(name)
-                or OPENLOOP_RE.match(name)) \
+                or OPENLOOP_RE.match(name) or RECOVERY_RE.match(name)) \
                 and name not in pr:
             failures.append(f"missing row: {name} (present in baseline)")
 
@@ -458,6 +479,51 @@ def check(pr: dict, base: dict, tol: float, time_tol: float) -> list:
                         f"{GROW_COST_TICKS:.0f}x the same-capacity insert "
                         f"tick ({insert['us_per_call']:.0f}us) + "
                         f"{GROW_ABS_SLACK_US:.0f}us one-shot slack")
+
+    # 4f. within-run: the crash-recovery family (PR-9 fault tolerance).
+    # The correctness verdicts are deterministic in-run booleans gated
+    # with NO tolerance: every recovered replica must converge bit for
+    # bit with the primary (``converged=1``) and serve zero wrong
+    # reachability answers (``wrong_answers=0``); the torn-tail row must
+    # additionally load a strict prefix of the shipped log
+    # (``prefix_ok=1``) — inventing or reordering entries after a torn
+    # write is data loss dressed as recovery.  The wall-time gate is
+    # ratio-based within-run: resync (fallback base + jitted tail
+    # replay) must stay within RESYNC_COST_MULT of the plain restore
+    # floor plus a fixed tail-replay allowance — recovery degenerating
+    # into a rebuild (or losing its jitted replay) blows the slack by an
+    # order of magnitude.
+    rec_rows = {m.group(1): row for name, row in pr.items()
+                if (m := RECOVERY_RE.match(name))}
+    for kind, row in sorted(rec_rows.items()):
+        checks = [("converged", CONVERGED_RE, 1),
+                  ("wrong_answers", WRONG_RE, 0)]
+        if kind == "torn_tail":
+            checks.append(("prefix_ok", PREFIX_RE, 1))
+        if kind == "restore":
+            checks = []
+        for label, regex, want in checks:
+            m = regex.search(row["derived"])
+            if m is None or int(m.group(1)) != want:
+                failures.append(
+                    f"sgt_recovery_{kind}: {label}="
+                    f"{m.group(1) if m else 'missing'} (must be exactly "
+                    f"{want} — recovery that is not bit-for-bit correct "
+                    f"is a silent-corruption regression)")
+    if "restore" in rec_rows:
+        floor = rec_rows["restore"]["us_per_call"]
+        for kind in ("resync", "torn_tail"):
+            if kind not in rec_rows:
+                continue
+            t = rec_rows[kind]["us_per_call"]
+            bound = floor * RESYNC_COST_MULT + RESYNC_ABS_SLACK_US
+            if t > bound:
+                failures.append(
+                    f"sgt_recovery_{kind}: {t:.0f}us exceeds "
+                    f"{RESYNC_COST_MULT:.0f}x the base-image restore "
+                    f"floor ({floor:.0f}us) + "
+                    f"{RESYNC_ABS_SLACK_US:.0f}us tail-replay slack — "
+                    f"recovery is doing rebuild-scale work")
 
     # 5. ratio drift vs baseline: algo2/algo1 wall-time ratio
     for n_cand in batches:

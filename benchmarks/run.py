@@ -26,6 +26,8 @@ def collect_rows(quick: bool):
     rows += capacity_sweep.all_rows(quick=quick)
     from benchmarks import openloop
     rows += openloop.all_rows(quick=quick)
+    from benchmarks import recovery
+    rows += recovery.all_rows(quick=quick)
     return rows
 
 

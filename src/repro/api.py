@@ -66,8 +66,11 @@ from repro.core.engine import (  # noqa: F401
 )
 from repro.core.snapshot_view import EngineSnapshot  # noqa: F401
 from repro.replica import (  # noqa: F401
-    LogEntry, Primary, Replica, load_delta_log, recover_replica,
-    save_delta_log,
+    CorruptLogError, LogEntry, Primary, Replica, ReplicaDiverged,
+    load_delta_log, recover_replica, save_delta_log,
+)
+from repro.ft import (  # noqa: F401
+    CorruptCheckpointError, FaultPlan, FaultSpec, InjectedCrash,
 )
 from repro.core.closure_cache import CacheDelta, ClosureCache  # noqa: F401
 from repro.core.dispatch import (  # noqa: F401
@@ -83,8 +86,8 @@ from repro.core.sgt import (  # noqa: F401
     SgtState, begin, conflicts, finish, new_scheduler, schedule_tick,
 )
 from repro.serve import (  # noqa: F401
-    AdmissionController, DeficitRoundRobin, Frontend, FrontendConfig,
-    Response, run_openloop,
+    AdmissionController, DeficitRoundRobin, Frontend, FrontendClosed,
+    FrontendConfig, ReplicaHealth, Response, run_openloop,
 )
 
 # The public surface, pinned by tests/test_api_surface.py: additions and
@@ -96,6 +99,9 @@ __all__ = [
     # readers: versioned snapshots + delta-shipped replicas
     "EngineSnapshot", "LogEntry", "Primary", "Replica", "load_delta_log",
     "recover_replica", "save_delta_log",
+    # integrity, fault injection, and self-healing (PR 9)
+    "CorruptCheckpointError", "CorruptLogError", "FaultPlan", "FaultSpec",
+    "InjectedCrash", "ReplicaDiverged",
     # the delta/cache types the log ships
     "CacheDelta", "ClosureCache",
     # dispatch policies
@@ -109,5 +115,6 @@ __all__ = [
     "schedule_tick",
     # the multi-tenant serving front-end
     "AdmissionController", "DeficitRoundRobin", "Frontend",
-    "FrontendConfig", "Response", "run_openloop",
+    "FrontendClosed", "FrontendConfig", "ReplicaHealth", "Response",
+    "run_openloop",
 ]

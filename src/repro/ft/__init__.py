@@ -1,6 +1,10 @@
 from repro.ft.checkpoint import (  # noqa: F401
-    CheckpointManager, save_checkpoint, restore_checkpoint, latest_step,
+    CheckpointManager, CorruptCheckpointError, save_checkpoint,
+    restore_checkpoint, all_steps, latest_step,
     save_engine_checkpoint, restore_engine_checkpoint,
+)
+from repro.ft.faults import (  # noqa: F401
+    Fault, FaultPlan, FaultSpec, InjectedCrash, NAMED_PLANS,
 )
 from repro.ft.straggler import StragglerMonitor  # noqa: F401
 from repro.ft.elastic import reshard_tree  # noqa: F401

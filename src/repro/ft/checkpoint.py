@@ -12,14 +12,25 @@ path (`ft/elastic.py`).
 """
 from __future__ import annotations
 
+import io
 import json
 import os
 import queue
 import threading
-from typing import Any, Optional
+import zipfile
+import zlib
+from typing import Any, List, Optional
 
 import jax
 import numpy as np
+
+
+class CorruptCheckpointError(RuntimeError):
+    """A checkpoint failed an integrity check on restore: its
+    ``arrays.npz`` bytes don't match the manifest's CRC32 (bit rot, a
+    torn write that beat the atomic rename), or the manifest/arrays are
+    unreadable.  `repro.replica.recover_replica` treats this as "skip
+    this base image, fall back to an older step"."""
 
 
 def _flatten(tree):
@@ -43,13 +54,20 @@ def save_checkpoint(directory: str, step: int, tree: Any) -> str:
         return a
 
     arrays = {f"leaf_{i}": to_np(x) for i, x in enumerate(leaves)}
-    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    arrays_path = os.path.join(tmp, "arrays.npz")
+    np.savez(arrays_path, **arrays)
+    with open(arrays_path, "rb") as f:
+        arrays_crc = zlib.crc32(f.read()) & 0xFFFFFFFF
     manifest = {
         "step": step,
         "n_leaves": len(leaves),
         "treedef": str(treedef),
         "dtypes": [str(np.asarray(x).dtype) for x in leaves],
         "shapes": [list(np.asarray(x).shape) for x in leaves],
+        # CRC32 of the arrays.npz bytes: restore verifies before
+        # deserializing, so bit rot surfaces as CorruptCheckpointError
+        # instead of garbage state (or a deep zipfile traceback)
+        "crc32": arrays_crc,
     }
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
@@ -63,31 +81,79 @@ def save_checkpoint(directory: str, step: int, tree: Any) -> str:
     return final
 
 
-def latest_step(directory: str) -> Optional[int]:
+def all_steps(directory: str) -> List[int]:
+    """Every complete checkpoint step, ascending — `recover_replica`
+    walks this newest-first to find the newest UNcorrupted base image."""
     if not os.path.isdir(directory):
-        return None
+        return []
     steps = []
     for name in os.listdir(directory):
         if name.startswith("step_") and not name.endswith(".tmp") \
                 and not name.endswith(".old"):
             if os.path.exists(os.path.join(directory, name, "manifest.json")):
                 steps.append(int(name.split("_")[1]))
+    return sorted(steps)
+
+
+def latest_step(directory: str) -> Optional[int]:
+    steps = all_steps(directory)
     return max(steps) if steps else None
+
+
+def _verified_arrays(path: str):
+    """Load ``<path>/arrays.npz`` after checking its bytes against the
+    manifest CRC32 (when present — pre-PR-9 checkpoints have none and
+    load unverified).  Typed errors, never raw zipfile tracebacks."""
+    manifest_path = os.path.join(path, "manifest.json")
+    try:
+        with open(manifest_path) as f:
+            manifest = json.load(f)
+    except (OSError, ValueError) as err:
+        raise CorruptCheckpointError(
+            f"manifest unreadable at {manifest_path}: {err!r}") from err
+    arrays_path = os.path.join(path, "arrays.npz")
+    try:
+        with open(arrays_path, "rb") as f:
+            raw = f.read()
+    except OSError as err:
+        raise CorruptCheckpointError(
+            f"arrays unreadable at {arrays_path}: {err!r}") from err
+    want = manifest.get("crc32")
+    if want is not None:
+        got = zlib.crc32(raw) & 0xFFFFFFFF
+        if got != int(want):
+            raise CorruptCheckpointError(
+                f"{arrays_path} failed its CRC32 check (manifest "
+                f"{int(want):#010x}, computed {got:#010x}) — corrupt "
+                "base image; recovery should fall back to an older step")
+    try:
+        return np.load(io.BytesIO(raw))
+    except (OSError, ValueError, EOFError, zipfile.BadZipFile) as err:
+        raise CorruptCheckpointError(
+            f"{arrays_path} is not a readable npz ({err!r})") from err
 
 
 def restore_checkpoint(directory: str, like: Any, step: Optional[int] = None,
                        shardings: Any = None) -> Any:
     """Restore into the structure of ``like``; optionally place leaves with
     ``shardings`` (a matching tree of jax.sharding.Sharding) — this is how a
-    checkpoint taken on mesh A restores onto mesh B (elastic re-mesh)."""
+    checkpoint taken on mesh A restores onto mesh B (elastic re-mesh).
+
+    The arrays are CRC32-verified against the manifest before
+    deserializing; a mismatch raises `CorruptCheckpointError`."""
     if step is None:
         step = latest_step(directory)
         if step is None:
             raise FileNotFoundError(f"no checkpoint in {directory}")
     path = os.path.join(directory, f"step_{step:08d}")
-    data = np.load(os.path.join(path, "arrays.npz"))
+    data = _verified_arrays(path)
     leaves_like, treedef = _flatten(like)
-    leaves = [data[f"leaf_{i}"] for i in range(len(leaves_like))]
+    try:
+        leaves = [data[f"leaf_{i}"] for i in range(len(leaves_like))]
+    except KeyError as err:
+        raise CorruptCheckpointError(
+            f"{path} is missing leaf arrays ({err!r}); the checkpoint "
+            "does not match the target structure") from err
     leaves = [jax.numpy.asarray(a).astype(b.dtype) if hasattr(b, "dtype")
               else a for a, b in zip(leaves, leaves_like)]
     tree = jax.tree_util.tree_unflatten(treedef, leaves)

@@ -587,6 +587,179 @@ def serve_frontend(load: float = 1000.0, duration: float = 1.0,
             "n_shed": res.n_shed, "ticks": res.ticks}
 
 
+def serve_chaos(capacity: int = 256, batch: int = 16, ticks: int = 30,
+                fault_seed: int = 0, fault_plan: str = "kitchen-sink",
+                replicas: int = 2, seed: int = 0,
+                checkpoint_every: int = 5, workdir: str = None) -> dict:
+    """End-to-end fault-injection replay: one writer + N replicas under a
+    named, seeded `FaultPlan` (`repro.ft.faults.NAMED_PLANS`) — torn log
+    files, bit-rotted checkpoints, lossy/disordered entry shipping,
+    stalls, and crashes inside `Primary.flush`.
+
+    The driver asserts the chaos contract in-run: replicas either track
+    the primary exactly or degrade EXPLICITLY (a typed
+    `ReplicaDiverged`/`CorruptLogError` followed by a resync — counted,
+    never served); a crashed writer restarts from the newest valid base
+    image (corrupt ones are skipped, newer-generation checkpoints are
+    fenced off); disk recovery (base + tolerantly-loaded log tail, plus
+    in-memory catch-up) converges bit-for-bit with the live primary; and
+    NO reachability read ever returns a wrong answer.  Exits nonzero on
+    any violation, printing the plan's full injection report — replay
+    with the same ``--fault-seed``/``--fault-plan`` reproduces it
+    exactly."""
+    import logging
+    import os
+    import shutil
+    import tempfile
+
+    from repro.api import (CorruptCheckpointError, CorruptLogError,
+                           DagEngine, Primary, Replica, ReplicaDiverged,
+                           InjectedCrash, load_delta_log, recover_replica,
+                           save_delta_log)
+    from repro.core import dag as dag_mod
+    from repro.ft import all_steps, faults, restore_engine_checkpoint
+
+    logging.basicConfig(level=logging.WARNING)
+    fp = faults.plan(fault_seed, fault_plan)
+    tmp = workdir or tempfile.mkdtemp(prefix="chaos_")
+    ckpt_dir = os.path.join(tmp, "ckpt")
+    log_path = os.path.join(tmp, "delta.log")
+    rng = np.random.default_rng(seed)
+
+    def fresh_primary(engine=None):
+        if engine is None:
+            engine = DagEngine.create(capacity, method="incremental")
+        return Primary(engine, defer_flush=True, jit=True, fault_plan=fp)
+
+    def restart_primary():
+        """Crash recovery for the writer: newest UNcorrupted base image
+        (or a fresh engine when none exists), with newer-generation
+        checkpoints fenced off — they describe a future the crash lost."""
+        like = DagEngine.create(p.engine.capacity, method="incremental")
+        for s in sorted(all_steps(ckpt_dir), reverse=True):
+            try:
+                eng = restore_engine_checkpoint(ckpt_dir, like, step=s)
+            except CorruptCheckpointError:
+                continue
+            for newer in (x for x in all_steps(ckpt_dir) if x > s):
+                shutil.rmtree(
+                    os.path.join(ckpt_dir, f"step_{newer:08d}"),
+                    ignore_errors=True)
+            return fresh_primary(eng)
+        # no valid base at all: the whole generation is lost — wipe its
+        # artifacts so later recovery never replays against a stale base
+        shutil.rmtree(ckpt_dir, ignore_errors=True)
+        if os.path.exists(log_path):
+            os.remove(log_path)
+        return fresh_primary()
+
+    p = fresh_primary()
+    reps = [Replica.from_engine(p.engine) for _ in range(replicas)]
+    counters = {"crashes": 0, "resyncs": 0, "stalled_ticks": 0,
+                "degraded_reads": 0, "explicit_errors": 0,
+                "wrong_answers": 0, "reads": 0}
+    pool = capacity // 2
+
+    for t in range(ticks):
+        # ---- mutate: begins + forward conflict edges + some churn ----
+        keys = ((np.arange(batch, dtype=np.int32) + t * batch) % pool)
+        lo = rng.integers(0, pool - 1, batch).astype(np.int32)
+        hi = rng.integers(lo + 1, pool).astype(np.int32)
+        p.add_vertices(jnp.asarray(keys))
+        p.add_edges_acyclic(jnp.asarray(lo), jnp.asarray(hi))
+        if t % 4 == 3:
+            p.remove_edges(jnp.asarray(lo[: batch // 2]),
+                           jnp.asarray(hi[: batch // 2]))
+        if t == ticks // 3:
+            p.grow(capacity * 2)
+        try:
+            entries = p.flush()
+            if t % checkpoint_every == checkpoint_every - 1:
+                p.checkpoint(ckpt_dir)
+                fp.corrupt_checkpoint(ckpt_dir)
+                save_delta_log(log_path, p.log)
+                fp.corrupt_log_file(log_path)
+        except InjectedCrash:
+            counters["crashes"] += 1
+            p = restart_primary()
+            reps = [r.resync(p.engine) for r in reps]
+            counters["resyncs"] += replicas
+            continue
+
+        # ---- ship to each replica through the lossy channel ----
+        for i in range(replicas):
+            if fp.maybe_stall(site=f"chaos.replica[{i}].tick{t}"):
+                counters["stalled_ticks"] += 1
+                continue  # lagging; the next tick's gap forces a resync
+            ship, _ = fp.perturb_entries(entries,
+                                         site=f"chaos.replica[{i}]")
+            try:
+                reps[i] = reps[i].replay(ship)
+            except (ReplicaDiverged, CorruptLogError):
+                counters["explicit_errors"] += 1
+                reps[i] = reps[i].resync(p.engine)
+                counters["resyncs"] += 1
+
+        # ---- reads: a replica at the primary's epoch, else degraded ----
+        q_u = jnp.asarray(rng.integers(0, pool, 32).astype(np.int32))
+        q_v = jnp.asarray(rng.integers(0, pool, 32).astype(np.int32))
+        want = np.asarray(p.engine.reachable(q_u, q_v))
+        current = [r for r in reps if int(r.epoch) == p.epoch]
+        counters["reads"] += 32
+        if not current:
+            counters["degraded_reads"] += 32
+        else:
+            us, uf = dag_mod.lookup_slots(p.engine.state, q_u)
+            vs, vf = dag_mod.lookup_slots(p.engine.state, q_v)
+            got = np.asarray(current[0].reachable_slots(us, vs)
+                             & uf & vf)
+            counters["wrong_answers"] += int((got != want).sum())
+
+    # ---- final verdicts ----
+    for i in range(replicas):
+        if int(reps[i].epoch) != p.epoch:
+            reps[i] = reps[i].resync(p.engine)
+            counters["resyncs"] += 1
+        assert reps[i].converged_with(p.engine), (
+            f"replica {i} not bit-for-bit converged after resync\n"
+            + fp.report())
+
+    save_delta_log(log_path, p.log)
+    fp.corrupt_log_file(log_path)
+    like = DagEngine.create(p.engine.capacity, method="incremental")
+    try:
+        tail = load_delta_log(log_path)  # torn tail -> valid prefix
+        shipped = [int(e.epoch) for e in p.log]
+        assert [int(e.epoch) for e in tail] == shipped[:len(tail)], \
+            "loaded log is not a prefix of the shipped log\n" + fp.report()
+        rec = recover_replica(ckpt_dir, like, tail)
+        rec = rec.replay(p.log)  # catch up past the torn tail
+        assert rec.converged_with(p.engine), (
+            "disk recovery + catch-up did not converge\n" + fp.report())
+        recovered = True
+    except (CorruptLogError, CorruptCheckpointError,
+            ReplicaDiverged) as err:
+        # mid-file corruption / no valid base: an EXPLICIT typed refusal
+        # is within contract — wrong state silently restored is not
+        counters["explicit_errors"] += 1
+        print(f"[serve-chaos] disk recovery refused explicitly: {err}")
+        recovered = False
+
+    if workdir is None:
+        shutil.rmtree(tmp, ignore_errors=True)
+    out = {"ticks": ticks, "epoch": p.epoch, "converged": 1,
+           "disk_recovered": int(recovered),
+           "injected": len(fp.injected), **counters}
+    assert counters["wrong_answers"] == 0, \
+        "chaos contract violated: wrong answers served\n" + fp.report()
+    print(f"[serve-chaos:{fault_plan}] seed={fault_seed} ticks={ticks} "
+          f"injected={out['injected']} crashes={counters['crashes']} "
+          f"resyncs={counters['resyncs']} "
+          f"degraded_reads={counters['degraded_reads']} "
+          f"wrong_answers={counters['wrong_answers']} converged=1")
+    return out
+
+
 def serve_lm(arch: str = "qwen2-1.5b", batch: int = 4, prompt_len: int = 64,
              gen: int = 32) -> dict:
     from repro.configs import registry
@@ -645,7 +818,15 @@ def main() -> int:
                         "targets, read (writer + snapshot readers; see "
                         "--replicas), or frontend (open-loop asyncio "
                         "front-end; see --load/--duration/--reader/"
-                        "--admission)")
+                        "--admission), or chaos (fault-injection replay; "
+                        "see --fault-seed/--fault-plan)")
+    p.add_argument("--fault-seed", type=int, default=0,
+                   help="chaos profile: FaultPlan seed — the same seed + "
+                        "plan replays the same injection schedule")
+    p.add_argument("--fault-plan", default="kitchen-sink",
+                   metavar="PLAN",
+                   help="chaos profile: named fault plan (see "
+                        "repro.ft.faults.NAMED_PLANS)")
     p.add_argument("--replicas", type=int, default=0,
                    help="read profile: serve reads from this many "
                         "EngineSnapshot replicas (0 = single-engine "
@@ -680,8 +861,12 @@ def main() -> int:
     try:
         validate_choice(args.profile,
                         ("steady", "insheavy", "delheavy", "mixed", "read",
-                         "frontend"), what="profile")
+                         "frontend", "chaos"), what="profile")
         validate_choice(args.reader, READERS, what="reader")
+        if args.profile == "chaos":
+            from repro.ft.faults import NAMED_PLANS
+            validate_choice(args.fault_plan, tuple(NAMED_PLANS),
+                            what="fault plan")
         validate_choice(args.admission, ADMISSION_POLICIES,
                         what="admission policy")
     except ValueError as e:
@@ -708,6 +893,12 @@ def main() -> int:
                            reader=args.reader,
                            replicas=max(1, args.replicas),
                            admission=args.admission)
+        elif args.profile == "chaos":
+            serve_chaos(capacity=args.capacity, batch=args.batch,
+                        ticks=args.ticks,
+                        fault_seed=args.fault_seed,
+                        fault_plan=args.fault_plan,
+                        replicas=max(1, args.replicas))
         else:
             serve_sgt_churn(batch=args.batch, ticks=args.ticks,
                             method=args.method, profile=args.profile)

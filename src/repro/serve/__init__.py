@@ -7,15 +7,17 @@ control off the engine's ``n_overflow`` backpressure
 (`admission.AdmissionController`), and open-loop p50/p99 latency
 measurement (`openloop.run_openloop`).
 """
-from repro.serve.admission import ADMISSION_POLICIES, AdmissionController
+from repro.serve.admission import (ADMISSION_POLICIES, AdmissionController,
+                                   ReplicaHealth)
 from repro.serve.fairness import DeficitRoundRobin
 from repro.serve.frontend import (KINDS, READERS, STATUS_OK, STATUS_SHED,
-                                  Frontend, FrontendConfig, Request,
-                                  Response)
+                                  Frontend, FrontendClosed, FrontendConfig,
+                                  Request, Response)
 from repro.serve.openloop import OpenLoopResult, run_openloop
 
 __all__ = [
     "ADMISSION_POLICIES", "AdmissionController", "DeficitRoundRobin",
-    "Frontend", "FrontendConfig", "KINDS", "OpenLoopResult", "READERS",
-    "Request", "Response", "STATUS_OK", "STATUS_SHED", "run_openloop",
+    "Frontend", "FrontendClosed", "FrontendConfig", "KINDS",
+    "OpenLoopResult", "READERS", "ReplicaHealth", "Request", "Response",
+    "STATUS_OK", "STATUS_SHED", "run_openloop",
 ]

@@ -65,3 +65,63 @@ class AdmissionController:
                 "n_admitted": self.n_admitted,
                 "n_shed_queue": self.n_shed_queue,
                 "n_shed_overflow": self.n_shed_overflow}
+
+
+class ReplicaHealth:
+    """Per-replica health for the front-end's degraded-read path.
+
+    The front-end advances each replica per tick with a wall-clock
+    timeout and ``max_retries`` in-tick retries; a replica that still
+    can't advance is marked down for an exponentially growing number of
+    ticks (``backoff_ticks * 2^round``, capped).  A down replica serves
+    no reads; when its backoff expires the next advance naturally trips
+    the log's epoch-gap detection (`ReplicaDiverged`) and the front-end
+    resyncs it from the live engine — gap detection IS the resync
+    trigger, no separate catch-up protocol."""
+
+    def __init__(self, max_retries: int = 2, backoff_ticks: int = 4,
+                 max_backoff_ticks: int = 64):
+        if max_retries < 0:
+            raise ValueError(
+                f"max_retries must be >= 0, got {max_retries}")
+        if backoff_ticks < 1 or max_backoff_ticks < backoff_ticks:
+            raise ValueError(
+                "need 1 <= backoff_ticks <= max_backoff_ticks, got "
+                f"({backoff_ticks}, {max_backoff_ticks})")
+        self.max_retries = int(max_retries)
+        self.backoff_ticks = int(backoff_ticks)
+        self.max_backoff_ticks = int(max_backoff_ticks)
+        self.down_until = -1   # first tick this replica may serve again
+        self.rounds = 0        # consecutive mark_down()s (backoff expo)
+        self.n_timeouts = 0
+        self.n_diverged = 0
+        self.n_resyncs = 0
+
+    def available(self, tick: int) -> bool:
+        return tick >= self.down_until
+
+    def record_success(self) -> None:
+        self.rounds = 0
+
+    def record_timeout(self) -> None:
+        self.n_timeouts += 1
+
+    def mark_down(self, tick: int) -> int:
+        """Back off; returns how many ticks this replica sits out."""
+        backoff = min(self.backoff_ticks * (2 ** self.rounds),
+                      self.max_backoff_ticks)
+        self.rounds += 1
+        self.down_until = tick + backoff
+        return backoff
+
+    def record_resync(self) -> None:
+        self.n_resyncs += 1
+        self.rounds = 0
+        self.down_until = -1
+
+    @property
+    def stats(self) -> dict:
+        return {"down_until": self.down_until, "rounds": self.rounds,
+                "n_timeouts": self.n_timeouts,
+                "n_diverged": self.n_diverged,
+                "n_resyncs": self.n_resyncs}

@@ -39,6 +39,7 @@ from __future__ import annotations
 import asyncio
 import collections
 import dataclasses
+import logging
 import time
 from typing import Deque, Dict, Hashable, List, Optional, Tuple
 
@@ -50,9 +51,19 @@ from repro.core import closure_cache
 from repro.core import dag as dag_mod
 from repro.core.dispatch import validate_choice
 from repro.core.engine import DagEngine
-from repro.replica import LogEntry, Primary, Replica
-from repro.serve.admission import AdmissionController
+from repro.replica import (CorruptLogError, LogEntry, Primary, Replica,
+                           ReplicaDiverged)
+from repro.serve.admission import AdmissionController, ReplicaHealth
 from repro.serve.fairness import DeficitRoundRobin
+
+logger = logging.getLogger(__name__)
+
+
+class FrontendClosed(RuntimeError):
+    """`submit` on a front-end that is not serving — never started, or
+    already stopped.  Raised immediately instead of enqueueing into a
+    loop that will never tick (the request's future would hang forever).
+    Subclasses RuntimeError for drop-in compatibility."""
 
 KINDS = ("add_vertex", "remove_vertex", "add_edge", "remove_edge",
          "reachable")
@@ -84,10 +95,15 @@ def _rep_apply(rep: Replica, epoch, delta) -> Replica:
 
 
 def _advance_replica(rep: Replica, entries: List[LogEntry]) -> Replica:
-    """Replay semantics of `Replica.replay` on the compiled apply."""
-    base = int(rep.epoch)
+    """Replay semantics of `Replica.replay` on the compiled apply: the
+    same host-side integrity gate (`Replica._admits` — CRC verify,
+    epoch-gap detection, duplicate skip), then the jitted delta apply.
+    Raises `ReplicaDiverged` / `CorruptLogError` exactly like `replay`;
+    the front-end turns those into a resync from the live engine."""
     for e in entries:
-        if e.epoch < base:
+        if not rep._admits(e):
+            if e.grow_to:
+                rep = rep._grown(int(e.grow_to))
             continue
         if e.grow_to:
             rep = rep._grown(e.grow_to)
@@ -113,12 +129,25 @@ class Response:
     ``ok`` is the engine's accept bit (mutations) or the query answer
     (reads); ``status`` is 200 for a served request and 429 for a shed
     one (queue full, or a vertex add the slab overflowed under policy
-    "shed" — ``ok`` is False there and the graph is untouched)."""
+    "shed" — ``ok`` is False there and the graph is untouched).
+
+    ``read_epoch`` is the engine version the answer was computed at —
+    the staleness contract: mutations and healthy reads answer at the
+    tick's ``epoch`` (``read_epoch == epoch``), while a degraded read
+    (every replica down) falls back to a frozen snapshot and reports
+    the snapshot's older version, so ``stale`` is True and the client
+    knows exactly how far behind its answer is."""
 
     ok: bool
     status: int
     epoch: int
     tick: int
+    read_epoch: int = -1
+
+    @property
+    def stale(self) -> bool:
+        """Served correctly, but at a version older than the tick's."""
+        return self.status == STATUS_OK and 0 <= self.read_epoch < self.epoch
 
 
 @dataclasses.dataclass(frozen=True)
@@ -133,6 +162,14 @@ class FrontendConfig:
     replicas: int = 2           # replica count when reader="replica"
     tenant_weights: Optional[Dict[Hashable, float]] = None
     quantum: float = 1.0        # DRR credit per rotation per unit weight
+    # --- degraded-read path (reader="replica"): a replica advance that
+    # exceeds the timeout retries in-tick, then the replica backs off
+    # exponentially (ReplicaHealth); reads fall back to a frozen
+    # snapshot no more than max_staleness epochs behind the engine
+    replica_timeout_s: float = 1.0   # per-advance wall-clock budget
+    replica_max_retries: int = 2     # in-tick retries before backoff
+    replica_backoff_ticks: int = 4   # initial backoff (doubles, cap 64)
+    max_staleness: int = 64          # epoch bound on fallback answers
 
 
 class Frontend:
@@ -146,7 +183,8 @@ class Frontend:
     """
 
     def __init__(self, primary: Primary,
-                 config: FrontendConfig = FrontendConfig()):
+                 config: FrontendConfig = FrontendConfig(), *,
+                 fault_plan=None):
         validate_choice(config.reader, READERS, what="reader")
         if config.batch_size < 1:
             raise ValueError(
@@ -157,6 +195,12 @@ class Frontend:
         if config.reader == "replica" and config.replicas < 1:
             raise ValueError('reader="replica" needs replicas >= 1, got '
                              f"{config.replicas}")
+        if config.replica_timeout_s <= 0:
+            raise ValueError("replica_timeout_s must be > 0, got "
+                             f"{config.replica_timeout_s}")
+        if config.max_staleness < 0:
+            raise ValueError(
+                f"max_staleness must be >= 0, got {config.max_staleness}")
         if config.admission == "grow" and \
                 not primary.engine.config.auto_grow:
             raise ValueError(
@@ -175,22 +219,36 @@ class Frontend:
         self._loop: Optional[asyncio.AbstractEventLoop] = None
         self._wakeup: Optional[asyncio.Event] = None
         self._tick_no = 0
+        self._closed = False
+        self._warmup_active = False
         self._log_cursor = len(primary.log)
         self._snap = primary.snapshot()
         self._replicas: List[Replica] = []
+        self._health: List[ReplicaHealth] = []
         if config.reader == "replica":
             self._replicas = [Replica.from_engine(primary.engine)
                               for _ in range(config.replicas)]
+            self._health = [
+                ReplicaHealth(config.replica_max_retries,
+                              config.replica_backoff_ticks)
+                for _ in range(config.replicas)]
+        # fault injection (ft/faults.FaultPlan): perturbs the entries
+        # shipped to each replica and injects advance stalls — the
+        # health/backoff/resync machinery under test is the real one
+        self._fault_plan = fault_plan
         # commit-order linearization of every APPLIED request — the
         # sequential-equivalence oracle replays exactly this
         self.trace: List[Tuple[str, int, int, bool]] = []
         self.n_served = 0
+        self.n_resyncs = 0
+        self.n_degraded_reads = 0
         self.served_by_tenant: Dict[Hashable, int] = {}
 
     @classmethod
     def create(cls, capacity: int,
                config: FrontendConfig = FrontendConfig(),
-               method: str = "incremental", **engine_opts) -> "Frontend":
+               method: str = "incremental", fault_plan=None,
+               **engine_opts) -> "Frontend":
         """A front-end around a fresh writer in its hot-path modes:
         deferred/coalesced log flush + compiled mutator steps.
 
@@ -208,7 +266,8 @@ class Frontend:
         # constructor's own "batch_size must be >= 1" error below
         engine_opts.setdefault("subbatches", max(1, config.batch_size))
         eng = DagEngine.create(capacity, method=method, **engine_opts)
-        return cls(Primary(eng, defer_flush=True, jit=True), config)
+        return cls(Primary(eng, defer_flush=True, jit=True), config,
+                   fault_plan=fault_plan)
 
     # ----------------------------------------------------------- lifecycle
 
@@ -218,12 +277,14 @@ class Frontend:
         self._loop = asyncio.get_running_loop()
         self._wakeup = asyncio.Event()
         self._running = True
+        self._closed = False
         self._task = self._loop.create_task(self._serve_loop())
         return self
 
     async def stop(self) -> None:
         """Drain the queue (every admitted request gets its response),
         then stop the coalescer and flush the log tail."""
+        self._closed = True
         if not self._running and self._task is None:
             return
         self._running = False
@@ -252,8 +313,15 @@ class Frontend:
         is negative and padded slots must stay distinguishable."""
         validate_choice(kind, KINDS, what="request kind")
         if not self._running:
-            raise RuntimeError("frontend is not running — use "
-                               "`async with frontend:` or await start()")
+            # a clean typed error, immediately — enqueueing here would
+            # park the future in a loop that will never tick
+            if self._closed:
+                raise FrontendClosed(
+                    "frontend is closed (stop() completed) and not "
+                    "running — it will never tick; start() it again or "
+                    "create a new one")
+            raise FrontendClosed("frontend is not running — use "
+                                 "`async with frontend:` or await start()")
         if a < 0 or b < 0:
             raise ValueError(f"keys must be >= 0, got ({a}, {b})")
         if not self.admission.admit(self._n_queued):
@@ -364,33 +432,45 @@ class Frontend:
             p.flush()
             if self._replicas:
                 new = p.log[self._log_cursor:]
-                self._replicas = [_advance_replica(rep, new)
-                                  for rep in self._replicas]
+                for i in range(len(self._replicas)):
+                    self._advance_one(i, new)
             self._log_cursor = len(p.log)
             if self.config.reader == "snapshot":
                 self._snap = _snap_take(p.engine)
 
-        # ---- reads, answered at the tick's frozen version ----
+        epoch = int(p.engine.epoch)
+
+        # ---- reads, answered at the tick's frozen version; with every
+        # replica down, degrade to a stale-but-correct snapshot and
+        # report its older version on the Response ----
         reads = by_kind["reachable"]
         read_ok = None
+        read_epoch = epoch
         if reads:
             f, t, m = self._pad(reads)
-            if self.config.reader == "snapshot":
-                read_ok = np.asarray(_snap_read(self._snap, f, t, m))
-            else:
+            rep = None if self.config.reader == "snapshot" \
+                else self._pick_replica(epoch)
+            if rep is not None:
                 # rotate the tick's read batch across replicas; the
                 # router resolves keys to slots off the writer's table
                 # (replicas are slot-addressed on purpose — see replica.py)
-                rep = self._replicas[self._tick_no % len(self._replicas)]
                 fs, ff = _slot_lookup(p.engine, f)
                 ts, tf = _slot_lookup(p.engine, t)
                 read_ok = np.asarray(_rep_read(rep, fs, ts, m & ff & tf))
+            else:
+                if self.config.reader != "snapshot":
+                    # degraded: the snapshot answers at ITS epoch —
+                    # frozen and consistent, just possibly behind
+                    self._snap = self._fallback_snap(epoch)
+                    self.n_degraded_reads += len(reads)
+                read_ok = np.asarray(_snap_read(self._snap, f, t, m))
+                read_epoch = int(self._snap.epoch)
 
-        epoch = int(p.engine.epoch)
         tick = self._tick_no
 
-        def respond(req: Request, ok: bool, status: int) -> None:
-            out.append((req, Response(ok, status, epoch, tick)))
+        def respond(req: Request, ok: bool, status: int,
+                    at_epoch: int = epoch) -> None:
+            out.append((req, Response(ok, status, epoch, tick, at_epoch)))
             if status == STATUS_OK:
                 self.trace.append((req.kind, req.a, req.b, ok))
                 self.n_served += 1
@@ -400,27 +480,110 @@ class Frontend:
         for req, ok, status in decisions:
             respond(req, ok, status)
         for i, req in enumerate(reads):
-            respond(req, bool(read_ok[i]), STATUS_OK)
+            respond(req, bool(read_ok[i]), STATUS_OK, read_epoch)
         return out
+
+    # ------------------------------------------- replica health machinery
+
+    def _advance_one(self, i: int, entries: List[LogEntry]) -> None:
+        """Advance replica ``i`` by the tick's entries under the health
+        policy: skip while backing off, bounded in-tick retries on a
+        timed-out advance, and an immediate resync from the live engine
+        on divergence or corruption.  A replica that exhausts its
+        retries is marked down; when its backoff expires, the epoch gap
+        it accumulated trips `ReplicaDiverged` on the next advance and
+        it resyncs — stale state never serves."""
+        h = self._health[i]
+        tick = self._tick_no
+        if not h.available(tick):
+            return
+        plan = None if self._warmup_active else self._fault_plan
+        ship = entries
+        if plan is not None:
+            ship, _ = plan.perturb_entries(entries,
+                                           site=f"frontend.replica[{i}]")
+        for attempt in range(self.config.replica_max_retries + 1):
+            t0 = time.perf_counter()
+            if plan is not None:
+                plan.maybe_stall(site=f"frontend.replica[{i}]"
+                                      f".advance(attempt={attempt})")
+            try:
+                rep = _advance_replica(self._replicas[i], ship)
+            except (ReplicaDiverged, CorruptLogError) as err:
+                h.n_diverged += 1
+                self._resync(i, reason=str(err))
+                return
+            elapsed = time.perf_counter() - t0
+            if self._warmup_active or \
+                    elapsed <= self.config.replica_timeout_s:
+                self._replicas[i] = rep
+                h.record_success()
+                return
+            # too slow: a stalled advance did not produce its result in
+            # budget — discard it and retry (the stall may be transient)
+            h.record_timeout()
+        backoff = h.mark_down(tick)
+        logger.warning(
+            "replica %d timed out %d times advancing tick %d; down for "
+            "%d ticks", i, self.config.replica_max_retries + 1, tick,
+            backoff)
+
+    def _resync(self, i: int, reason: str) -> None:
+        """Rebuild replica ``i`` from the live engine (self-healing):
+        divergence is detected, never served."""
+        self._replicas[i] = self._replicas[i].resync(self.primary.engine)
+        self._health[i].record_resync()
+        self.n_resyncs += 1
+        logger.warning("replica %d resynced from the live engine: %s",
+                       i, reason)
+
+    def _pick_replica(self, epoch: int) -> Optional[Replica]:
+        """The tick's reader: rotate across replicas that are healthy
+        AND at the tick's epoch; None when every replica is down or
+        behind (the caller degrades to the snapshot fallback)."""
+        n = len(self._replicas)
+        tick = self._tick_no
+        for k in range(n):
+            i = (tick + k) % n
+            if self._health[i].available(tick) and \
+                    int(self._replicas[i].epoch) == epoch:
+                return self._replicas[i]
+        return None
+
+    def _fallback_snap(self, epoch: int):
+        """The degraded-read snapshot, refreshed from the live engine
+        only when more than ``max_staleness`` epochs behind — bounded
+        staleness without paying a snapshot per healthy tick."""
+        if epoch - int(self._snap.epoch) > self.config.max_staleness:
+            self._snap = _snap_take(self.primary.engine)
+        return self._snap
 
     # ------------------------------------------------------------- helpers
 
     def warmup(self) -> None:
         """Compile every jitted phase at the serving shapes, then restore
         the pre-warmup state — benchmarks call this so XLA compiles stay
-        out of the timed window."""
+        out of the timed window.  Fault injection and the advance
+        timeout are suspended for the pass: the first advance pays
+        compile time, which must not read as a stalled replica."""
         saved = (self.primary.engine, len(self.primary.log),
                  list(self.primary._staged), self._snap,
                  list(self._replicas), self._log_cursor, len(self.trace),
                  self.n_served, dict(self.served_by_tenant),
-                 self.admission.n_shed_overflow)
+                 self.admission.n_shed_overflow, self.n_resyncs,
+                 self.n_degraded_reads)
         batch = [Request(k, 0, 0, "_warmup", None, 0.0)
                  for k in ("remove_vertex", "add_vertex", "remove_edge",
                            "add_edge", "reachable")]
-        self._commit_sync(batch)
+        self._warmup_active = True
+        try:
+            self._commit_sync(batch)
+        finally:
+            self._warmup_active = False
         (self.primary.engine, n_log, staged, self._snap, self._replicas,
          self._log_cursor, n_trace, self.n_served, self.served_by_tenant,
-         self.admission.n_shed_overflow) = saved
+         self.admission.n_shed_overflow, self.n_resyncs,
+         self.n_degraded_reads) = saved
         del self.primary.log[n_log:]
         self.primary._staged = staged
         del self.trace[n_trace:]
@@ -434,4 +597,7 @@ class Frontend:
         return {"ticks": self._tick_no, "n_served": self.n_served,
                 "served_by_tenant": dict(self.served_by_tenant),
                 "epoch": int(self.primary.engine.epoch),
+                "n_resyncs": self.n_resyncs,
+                "n_degraded_reads": self.n_degraded_reads,
+                "replica_health": [h.stats for h in self._health],
                 **self.admission.stats}

@@ -17,6 +17,9 @@ EXPECTED = {
     # readers: versioned snapshots + delta-shipped replicas
     "EngineSnapshot", "LogEntry", "Primary", "Replica", "load_delta_log",
     "recover_replica", "save_delta_log",
+    # integrity, fault injection, and self-healing (PR 9)
+    "CorruptCheckpointError", "CorruptLogError", "FaultPlan", "FaultSpec",
+    "InjectedCrash", "ReplicaDiverged",
     # the delta/cache types the log ships
     "CacheDelta", "ClosureCache",
     # dispatch policies
@@ -30,7 +33,8 @@ EXPECTED = {
     "schedule_tick",
     # the multi-tenant serving front-end (PR 8)
     "AdmissionController", "DeficitRoundRobin", "Frontend",
-    "FrontendConfig", "Response", "run_openloop",
+    "FrontendClosed", "FrontendConfig", "ReplicaHealth", "Response",
+    "run_openloop",
 }
 
 

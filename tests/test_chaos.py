@@ -1,0 +1,115 @@
+"""Chaos property suite (``-m chaos``): the system either answers
+correctly or degrades EXPLICITLY, under any seeded fault plan.
+
+The property, stated once and asserted by the shared driver
+(`repro.launch.serve.serve_chaos`, which also backs ``--profile chaos``):
+for a randomized mixed insert/delete/grow stream shipped to replicas
+through a fault-injecting channel —
+
+* every reachability read is either bit-for-bit correct against the
+  live primary or counted as an explicit degradation (no replica at the
+  primary's epoch), and the run asserts ``wrong_answers == 0``;
+* every integrity violation surfaces as a typed error
+  (`ReplicaDiverged` / `CorruptLogError` / `CorruptCheckpointError`)
+  followed by a resync — never silently absorbed;
+* after the stream ends, every replica resyncs to bit-for-bit
+  convergence with the primary, and disk recovery (base image + torn
+  log tail + catch-up) either converges exactly or refuses with a typed
+  error.
+
+Two layers: a FIXED seed corpus over every named plan (deterministic —
+this is what the CI chaos shard replays; a failure reproduces with
+``launch/serve.py --profile chaos --fault-seed N --fault-plan NAME``),
+and a hypothesis layer drawing arbitrary `FaultSpec` probability mixes
+(skipped when the dev extra isn't installed, like the other property
+suites).
+
+Marked ``chaos`` and run by its own tier-1 CI shard; the core shard
+ignores this file (it re-runs the whole serving stack per case).
+"""
+import pytest
+
+from repro.ft.faults import NAMED_PLANS, FaultSpec
+from repro.launch.serve import serve_chaos
+
+pytestmark = pytest.mark.chaos
+
+TICKS = 10
+CAPACITY = 128
+BATCH = 16
+REPLICAS = 2
+
+# the fixed corpus: every named plan at one seed, plus extra seeds on
+# the two widest plans (kitchen-sink exercises every detection path;
+# crash-flush exercises restart + generation fencing hardest)
+CORPUS = [(name, 11) for name in sorted(NAMED_PLANS)] + [
+    ("kitchen-sink", 0), ("kitchen-sink", 3), ("kitchen-sink", 7),
+    ("crash-flush", 5), ("ship-chaos", 2),
+]
+
+
+def _run(plan, seed, ticks=TICKS):
+    out = serve_chaos(capacity=CAPACITY, batch=BATCH, ticks=ticks,
+                      fault_seed=seed, fault_plan=plan,
+                      replicas=REPLICAS, seed=seed)
+    # serve_chaos asserts the contract in-run; re-pin the load-bearing
+    # verdicts here so a driver edit can't silently drop them
+    assert out["wrong_answers"] == 0
+    assert out["converged"] == 1
+    return out
+
+
+@pytest.mark.parametrize("plan,seed", CORPUS,
+                         ids=[f"{p}-s{s}" for p, s in CORPUS])
+def test_chaos_corpus_correct_or_explicitly_degraded(plan, seed):
+    out = _run(plan, seed)
+    if plan == "none":
+        # the clean plan is the control: nothing may fire or degrade
+        assert out["injected"] == 0 and out["resyncs"] == 0
+        assert out["degraded_reads"] == 0 and out["disk_recovered"] == 1
+
+
+def test_chaos_is_deterministic_per_seed():
+    """Same seed + plan -> identical counters: the reproduction contract
+    behind 'every fault logs its seed and site'."""
+    a = _run("kitchen-sink", 13, ticks=6)
+    b = _run("kitchen-sink", 13, ticks=6)
+    assert a == b
+
+
+# --------------------------------------------------- hypothesis layer
+#
+# guarded by hand (not importorskip, which would skip the whole module
+# including the fixed corpus above): the random-plan layer is extra
+# coverage when the dev extra is installed, never a gate on the corpus.
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    st = None
+
+if st is not None:
+    prob = st.sampled_from([0.0, 0.05, 0.15, 0.4])
+
+    @settings(max_examples=8, deadline=None)
+    @given(seed=st.integers(min_value=0, max_value=2**31 - 1),
+           torn=prob, flip_file=prob, flip_ckpt=prob, flip_entry=prob,
+           drop=prob, dup=prob, reorder=prob, stall=prob, crash=prob)
+    def test_chaos_property_any_fault_plan(seed, torn, flip_file,
+                                           flip_ckpt, flip_entry, drop,
+                                           dup, reorder, stall, crash):
+        spec = FaultSpec(torn_write=torn, bit_flip_file=flip_file,
+                         bit_flip_ckpt=flip_ckpt,
+                         bit_flip_entry=flip_entry, drop_entry=drop,
+                         dup_entry=dup, reorder=reorder, stall=stall,
+                         crash_flush=crash, stall_s=0.0)
+        out = serve_chaos(capacity=CAPACITY, batch=BATCH, ticks=6,
+                          fault_seed=seed, fault_plan=spec,
+                          replicas=REPLICAS, seed=seed)
+        assert out["wrong_answers"] == 0 and out["converged"] == 1
+else:
+    @pytest.mark.skip(reason="random-plan layer needs the dev extra "
+                             "(pip install -e .[dev]); the fixed corpus "
+                             "above still covers every named plan")
+    def test_chaos_property_any_fault_plan():
+        pass

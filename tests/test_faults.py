@@ -1,0 +1,348 @@
+"""Unit tests for the PR-9 fault-tolerance layer.
+
+Three surfaces, one contract — a fault is either *survived exactly*
+(bit-for-bit convergence) or *refused explicitly* (a typed error naming
+what broke and where); silent corruption is never an outcome:
+
+* the framed v2 delta log: per-record CRC32s, torn-tail truncation to
+  the last valid entry (the prefix property), mid-file corruption and
+  format-version errors as `CorruptLogError` with file + byte offset;
+* the replica integrity gate (`Replica._admits`): in-transit payload
+  corruption, epoch gaps, duplicate redelivery (skipped, never
+  re-applied), and missed-grow slot-range detection;
+* checkpoint CRC32s and recovery fallback: a bit-rotted base image is
+  refused and recovery falls back to the next-older valid step; the
+  recovery boundary (checkpoint epoch vs log tail) is idempotent under
+  ANY truncation point, including mid-grow.
+
+Plus the serving-edge pieces that ride along: `FrontendClosed` on
+submit-after-stop, and `FaultPlan` determinism (same seed + spec ==
+same injection schedule, every fault naming its seed and site).
+"""
+import asyncio
+import os
+import struct
+import zlib
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import (
+    CacheDelta, CorruptCheckpointError, CorruptLogError, DagEngine,
+    FaultPlan, FaultSpec, LogEntry, Primary, Replica, ReplicaDiverged,
+    load_delta_log, recover_replica, save_delta_log,
+)
+from repro.ft import all_steps, restore_engine_checkpoint
+from repro.replica import LOG_MAGIC, LOG_VERSION, _LOG_HEADER, entry_crc
+
+CAP = 64
+
+
+def _build_primary(ticks: int = 4, grow_at: int = None, **kw) -> Primary:
+    """Deterministic writer stream: one coalesced entry per tick (vertex
+    adds + forward edges, a removal tick, an optional mid-stream grow)."""
+    p = Primary.create(CAP, method="incremental", defer_flush=True, **kw)
+    pool = CAP // 2
+    for t in range(ticks):
+        keys = (np.arange(8, dtype=np.int32) + 8 * t) % pool
+        p.add_vertices(jnp.asarray(keys))
+        lo = keys % (pool - 1)
+        p.add_edges_acyclic(jnp.asarray(lo), jnp.asarray(lo + 1))
+        if t % 3 == 2:
+            p.remove_edges(jnp.asarray(lo[:4]), jnp.asarray(lo[:4] + 1))
+        if grow_at is not None and t == grow_at:
+            p.grow(CAP * 2)
+        p.flush()
+    return p
+
+
+@pytest.fixture(scope="module")
+def primary():
+    return _build_primary(ticks=4)
+
+
+# ------------------------------------------------------------ log format
+
+
+def test_v2_log_roundtrip(primary, tmp_path):
+    path = str(tmp_path / "delta.log")
+    save_delta_log(path, primary.log)
+    loaded = load_delta_log(path)
+    assert len(loaded) == len(primary.log)
+    for got, want in zip(loaded, primary.log):
+        assert (int(got.epoch), int(got.grow_to), int(got.prev_epoch),
+                int(got.crc)) == (int(want.epoch), int(want.grow_to),
+                                  int(want.prev_epoch), int(want.crc))
+        for g, w in zip(got.delta, want.delta):
+            np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+def test_torn_tail_truncates_to_valid_prefix(primary, tmp_path):
+    path = str(tmp_path / "delta.log")
+    save_delta_log(path, primary.log)
+    size = os.path.getsize(path)
+    # cut anywhere inside the final record: every load yields a prefix
+    for cut in (size - 1, size - 17, size - 101):
+        with open(path, "r+b") as f:
+            f.truncate(cut)
+        loaded = load_delta_log(path)
+        assert len(loaded) < len(primary.log)
+        assert [int(e.epoch) for e in loaded] == \
+            [int(e.epoch) for e in primary.log][:len(loaded)]
+        save_delta_log(path, primary.log)  # restore for the next cut
+
+
+def test_torn_tail_strict_raises_with_site(primary, tmp_path):
+    path = str(tmp_path / "delta.log")
+    save_delta_log(path, primary.log)
+    with open(path, "r+b") as f:
+        f.truncate(os.path.getsize(path) - 3)
+    with pytest.raises(CorruptLogError, match="torn write") as ei:
+        load_delta_log(path, strict=True)
+    assert path in str(ei.value) and "@ byte" in str(ei.value)
+    assert ei.value.offset > 0
+
+
+def test_midfile_corruption_raises_not_truncates(primary, tmp_path):
+    path = str(tmp_path / "delta.log")
+    save_delta_log(path, primary.log)
+    # flip a byte inside the FIRST record's payload: a checksum failure
+    # with records after it is corruption, not a torn write
+    off = _LOG_HEADER.size + 4 + 8 + 10
+    with open(path, "r+b") as f:
+        f.seek(off)
+        byte = f.read(1)[0]
+        f.seek(off)
+        f.write(bytes([byte ^ 0x40]))
+    with pytest.raises(CorruptLogError, match="mid-file corruption") as ei:
+        load_delta_log(path)
+    assert ei.value.path == path and ei.value.offset > 0
+
+
+def test_unsupported_version_names_nearest(primary, tmp_path):
+    path = str(tmp_path / "delta.log")
+    header = _LOG_HEADER.pack(LOG_MAGIC, LOG_VERSION + 1)
+    with open(path, "wb") as f:
+        f.write(header + struct.pack("<I", zlib.crc32(header)) + b"\0" * 64)
+    with pytest.raises(CorruptLogError,
+                       match=r"version 3; nearest supported version is 2"):
+        load_delta_log(path)
+
+
+def test_bad_magic_and_short_file_are_typed(tmp_path):
+    path = str(tmp_path / "delta.log")
+    with open(path, "wb") as f:
+        f.write(b"NOTALOG!" + b"\0" * 32)
+    with pytest.raises(CorruptLogError, match="bad magic"):
+        load_delta_log(path)
+    with open(path, "wb") as f:
+        f.write(b"\x01")
+    with pytest.raises(CorruptLogError, match="shorter than"):
+        load_delta_log(path)
+
+
+def test_legacy_v1_log_loads_transparently(primary, tmp_path):
+    path = str(tmp_path / "v1.log")
+    arrays = {"n_entries": np.asarray(len(primary.log))}
+    for i, e in enumerate(primary.log):
+        arrays[f"e{i}_meta"] = np.asarray(
+            [int(e.epoch), int(e.grow_to)], np.int64)
+        for name, arr in zip(CacheDelta._fields, e.delta):
+            arrays[f"e{i}_{name}"] = np.asarray(arr)
+    np.savez(path, **arrays)
+    os.replace(path + ".npz", path)
+    loaded = load_delta_log(path)
+    assert [int(e.epoch) for e in loaded] == \
+        [int(e.epoch) for e in primary.log]
+    # v1 predates checksums: the sentinel crc (0) marks them unverifiable
+    assert all(int(e.crc) == 0 for e in loaded)
+
+
+def test_corrupt_legacy_v1_wraps_into_typed_error(tmp_path):
+    path = str(tmp_path / "v1.log")
+    with open(path, "wb") as f:
+        f.write(b"PK\x03\x04not really a zip")
+    with pytest.raises(CorruptLogError, match="no valid prefix"):
+        load_delta_log(path)
+
+
+# ----------------------------------------------- replica integrity gate
+
+
+def test_entry_crc_detects_transit_corruption(primary):
+    rep = Replica.from_engine(
+        Primary.create(CAP, method="incremental").engine)
+    plan = FaultPlan(7, FaultSpec(bit_flip_entry=1.0))
+    shipped, faults = plan.perturb_entries(primary.log[:1], site="test")
+    assert faults and faults[0].kind == "bit_flip_entry"
+    with pytest.raises(CorruptLogError, match="CRC32"):
+        rep.replay(shipped)
+
+
+def test_epoch_gap_raises_diverged_with_resync_hint(primary):
+    rep = Replica.from_engine(
+        Primary.create(CAP, method="incremental").engine)
+    rep = rep.apply(primary.log[0])
+    with pytest.raises(ReplicaDiverged, match="resync") as ei:
+        rep.apply(primary.log[2])  # entry 1 dropped -> gap
+    assert ei.value.replica_epoch < ei.value.entry_prev
+
+
+def test_duplicate_redelivery_skips_not_reapplies(primary):
+    base = Replica.from_engine(
+        Primary.create(CAP, method="incremental").engine)
+    once = base.replay(primary.log)
+    # immediate double-delivery AND a stale duplicate after later entries
+    twice = base.replay([primary.log[0], primary.log[0]]
+                        + primary.log[1:] + [primary.log[0]])
+    assert bool(jnp.all(once.adj == twice.adj))
+    assert bool(jnp.all(once.closure == twice.closure))
+    assert int(once.epoch) == int(twice.epoch)
+
+
+def test_missed_grow_entry_detected_by_slot_range():
+    p = Primary.create(CAP, method="incremental", defer_flush=True)
+    p.add_vertices(jnp.arange(CAP, dtype=jnp.int32))  # fill every slot
+    p.flush()
+    rep = Replica.from_engine(
+        Primary.create(CAP, method="incremental").engine).replay(p.log)
+    n0 = len(p.log)
+    p.grow(2 * CAP)
+    p.add_vertices(jnp.arange(CAP, 2 * CAP, dtype=jnp.int32))
+    p.add_edges_acyclic(jnp.asarray([CAP, CAP + 1], jnp.int32),
+                        jnp.asarray([CAP + 2, CAP + 3], jnp.int32))
+    p.flush(coalesce=False)  # keep the grow entry separate so it can drop
+    tail = p.log[n0:]
+    no_grow = [e for e in tail if not int(e.grow_to)]
+    assert len(no_grow) < len(tail), "expected a grow entry in the tail"
+    # grow does not bump the epoch, so dropping its entry leaves NO gap —
+    # only the slot-range check can catch the missed migration
+    with pytest.raises(ReplicaDiverged, match="grow entry is missing"):
+        rep.replay(no_grow)
+    assert rep.replay(tail).converged_with(p.engine)
+
+
+# ------------------------------------- checkpoint CRC + recovery boundary
+
+
+def test_corrupt_checkpoint_refused_and_recovery_falls_back(tmp_path):
+    p = _build_primary(ticks=2)
+    ckpt = str(tmp_path / "ckpt")
+    p.checkpoint(ckpt)                      # older, stays valid
+    _build_more = p.add_edges_acyclic(jnp.asarray([1], jnp.int32),
+                                      jnp.asarray([9], jnp.int32))
+    p.flush()
+    p.checkpoint(ckpt)                      # newest -> corrupted below
+    steps = all_steps(ckpt)
+    assert len(steps) == 2
+    assert FaultPlan(0, FaultSpec(bit_flip_ckpt=1.0)).corrupt_checkpoint(
+        ckpt, step=steps[-1])
+    like = DagEngine.create(CAP, method="incremental")
+    with pytest.raises(CorruptCheckpointError, match="CRC32"):
+        restore_engine_checkpoint(ckpt, like, step=steps[-1])
+    rep = recover_replica(ckpt, like, p.log)  # falls back to steps[0]
+    assert rep.converged_with(p.engine)
+    # now rot the older base too: recovery must refuse explicitly
+    assert FaultPlan(1, FaultSpec(bit_flip_ckpt=1.0)).corrupt_checkpoint(
+        ckpt, step=steps[0])
+    with pytest.raises(CorruptCheckpointError, match="no valid base"):
+        recover_replica(ckpt, like, p.log)
+
+
+@pytest.mark.parametrize("grow_at", [None, 1])
+def test_recovery_boundary_idempotent_under_any_truncation(
+        tmp_path, grow_at):
+    """Satellite (c): recovery replays the FULL log over a mid-stream
+    base image — every entry at or below the base epoch is redelivered
+    across the boundary, and for every possible torn-tail truncation
+    point k the recovered replica, after catching up, converges bit for
+    bit.  ``grow_at=1`` puts the capacity migration inside the replayed
+    window so the boundary cuts mid-grow."""
+    p = Primary.create(CAP, method="incremental", defer_flush=True)
+    pool = CAP // 2
+    ckpt = str(tmp_path / "ckpt")
+    for t in range(4):
+        keys = (np.arange(8, dtype=np.int32) + 8 * t) % pool
+        p.add_vertices(jnp.asarray(keys))
+        p.add_edges_acyclic(jnp.asarray(keys % (pool - 1)),
+                            jnp.asarray(keys % (pool - 1) + 1))
+        if t == grow_at:
+            p.grow(CAP * 2)
+        p.flush()
+        if t == 1:
+            p.checkpoint(ckpt)  # base mid-stream: tail starts before it
+    like = DagEngine.create(p.engine.capacity, method="incremental")
+    for k in range(len(p.log) + 1):
+        rep = recover_replica(ckpt, like, p.log[:k])
+        rep = rep.replay(p.log)  # catch up past the truncation point
+        assert rep.converged_with(p.engine), \
+            f"not converged after truncation at entry {k}"
+
+
+# ------------------------------------------------------- serving edges
+
+
+def test_submit_after_stop_raises_frontend_closed():
+    from repro.serve import Frontend, FrontendClosed, FrontendConfig
+
+    fe = Frontend.create(CAP, FrontendConfig(batch_size=8,
+                                             max_wait_s=0.001))
+
+    async def go():
+        async with fe:
+            assert (await fe.submit("add_vertex", 3)).ok
+        with pytest.raises(FrontendClosed, match="not running"):
+            await fe.submit("add_vertex", 4)
+
+    asyncio.run(go())
+    # and before ever starting: same typed error, immediately
+    fe2 = Frontend.create(CAP, FrontendConfig(batch_size=8))
+    with pytest.raises(FrontendClosed, match="not running"):
+        asyncio.run(fe2.submit("add_vertex", 5))
+
+
+# ------------------------------------------------------------ fault plan
+
+
+def test_fault_plan_is_deterministic_and_names_sites(primary, tmp_path):
+    def schedule():
+        plan = FaultPlan(42, FaultSpec(drop_entry=0.5, dup_entry=0.5,
+                                       reorder=0.5, bit_flip_entry=0.3,
+                                       torn_write=0.5, stall=0.3,
+                                       stall_s=0.0))
+        path = str(tmp_path / "shipped.log")
+        for i in range(4):
+            plan.perturb_entries(primary.log, site=f"ship[{i}]")
+            save_delta_log(path, primary.log)
+            plan.corrupt_log_file(path)
+            plan.maybe_stall(site=f"advance[{i}]")
+        return plan
+
+    a, b = schedule(), schedule()
+    assert a.injected == b.injected and a.injected
+    assert all(f.site for f in a.injected)
+    assert f"seed={a.seed}" in a.report()
+
+
+def test_fault_plan_validates_spec_and_name():
+    with pytest.raises(ValueError, match="probability"):
+        FaultSpec(drop_entry=1.5)
+    from repro.ft import faults
+    with pytest.raises(ValueError, match="fault plan"):
+        faults.plan(0, "kitchen-sunk")
+
+
+def test_injected_crash_leaves_durable_prefix():
+    p = _build_primary(ticks=1)
+    n0 = len(p.log)
+    plan = FaultPlan(0, FaultSpec(crash_flush=1.0))
+    p.fault_plan = plan
+    p.add_vertices(jnp.asarray([60, 61], jnp.int32))
+    p.add_edges_acyclic(jnp.asarray([60], jnp.int32),
+                        jnp.asarray([61], jnp.int32))
+    from repro.api import InjectedCrash
+    with pytest.raises(InjectedCrash, match="seed 0"):
+        p.flush()
+    assert len(p.log) >= n0  # shipped prefix survives, remainder lost
+    assert plan.injected[0].site == "Primary.flush"
