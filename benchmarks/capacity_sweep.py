@@ -1,22 +1,29 @@
 """Capacity-sweep benchmark family: memory and migration curves for the
-growable engine (C = 2^10 .. 2^16), the scale story behind
-`DagEngine.grow`.
+growable engine (C = 2^10 .. 2^17), the scale story behind
+`DagEngine.grow` and the tiled closure (`closure_cache.TiledClosure`).
 
 Three row kinds per capacity, all with deterministic derived counters so
 `benchmarks/compare.py` can gate them without trusting wall clocks:
 
   capacity_sweep_C{c}_insert   incremental-engine insert ticks at capacity
-                               C: median tick time, the exact boolean-
-                               matmul row-products (0 — the cache stays
-                               clean end to end), and the packed closure's
-                               resident bytes (C^2/8 — the quadratic curve
-                               ROADMAP wants in CI, not folklore).
-  capacity_sweep_C{c}_churn    the mixed churn stream at capacity C
-                               (C <= 2^12: the delete-repair hop's jnp
-                               reference unpacks (C, C) floats, which this
-                               host-CPU sweep deliberately does not
-                               materialize at larger C — the fused-kernel
-                               TPU row family is future work, per ROADMAP).
+                               C on the TILED closure: median tick time,
+                               the exact boolean-matmul row-products (0 —
+                               the cache stays clean end to end), and the
+                               MEASURED resident closure bytes — which
+                               track the reachable window, not the
+                               analytic dense C^2/8 curve (compare.py
+                               gates tiled < dense at C >= 2^14).
+  capacity_sweep_C{c}_churn    the mixed churn stream at capacity C,
+                               uncapped through 2^17: the tiled delete
+                               repair operates on the region window, so
+                               the jnp hop never materializes (C, C)
+                               floats.  ``decisions_match`` pins the
+                               accept-bit stream equal across window
+                               sizes (including a deliberately tiny
+                               window that spills and degrades to exact
+                               fallbacks) and — where the dense delete
+                               hop is feasible (C <= 2^12) — across
+                               layouts against the dense engine.
   capacity_sweep_C{c}_grow     the C/2 -> C migration: wall time of the
                                one-step grow, plus two bit-for-bit
                                equality verdicts computed in-run —
@@ -29,10 +36,10 @@ Three row kinds per capacity, all with deterministic derived counters so
                                equals the grown engine leaf for leaf).
 
 Insert batches shrink as C grows (B = max(8, 2^18/C)) so the rank-B
-fold-in's C x B x C work stays CI-sized; the fold-in runs through
-`closure_cache.chunked_update_impl`, which bounds transient memory at
-O(block x C) floats instead of the jnp reference's (C, C) product
-(~17 GB at 2^16).
+fold-in's B-rank work stays CI-sized; the fold-in runs through the tiled
+kernels' region window, bounding transient memory at O(region^2) floats
+— `closure_cache.chunked_update_impl` remains the documented fallback
+for dense-layout engines, not the workaround this sweep needs.
 
 Run:  PYTHONPATH=src python -m benchmarks.capacity_sweep [--quick] [--json PATH]
 """
@@ -44,11 +51,7 @@ import platform
 import tempfile
 import time
 
-CAPACITIES = tuple(2 ** k for k in range(10, 17))  # 2^10 .. 2^16
-CHURN_MAX_CAPACITY = 4096  # see module docstring: jnp delete-hop memory
-
-# closure-update fold-in block size: transient memory ~ block x C floats
-_BLOCK_ROWS = 1024
+CAPACITIES = tuple(2 ** k for k in range(10, 18))  # 2^10 .. 2^17
 
 
 def _insert_batch_size(capacity: int) -> int:
@@ -61,13 +64,11 @@ def _pool_size(capacity: int) -> int:
     return min(capacity // 2, 2048)
 
 
-def _make_engine(capacity: int):
+def _make_engine(capacity: int, region: int = 0):
     from repro.api import DagEngine
-    from repro.core import closure_cache
 
-    return DagEngine.create(
-        capacity, method="incremental",
-        closure_update_impl=closure_cache.chunked_update_impl(_BLOCK_ROWS))
+    return DagEngine.create(capacity, method="incremental",
+                            closure_layout="tiled", closure_region=region)
 
 
 def _populate(eng, n: int):
@@ -92,7 +93,9 @@ def _forward_edges(rng, pool: int, n: int):
 
 
 def _closure_bytes(eng) -> int:
-    return int(eng.cache.closure.nbytes)
+    from repro.core import closure_cache
+
+    return int(closure_cache.closure_nbytes(eng.cache.closure))
 
 
 def insert_row(capacity: int, quick: bool):
@@ -134,17 +137,33 @@ def insert_row(capacity: int, quick: bool):
 
 
 def churn_row(capacity: int, quick: bool):
-    """The mixed churn stream at ``capacity`` (delete-maintained cache):
-    deterministic repair row_products vs C."""
+    """The mixed churn stream at ``capacity`` on the tiled closure, with
+    the accept-bit stream pinned across window sizes (and, where the
+    dense delete hop is feasible, across layouts)."""
+    import numpy as np
+
     from repro.launch.serve import serve_sgt_churn
 
     ticks = 4 if quick else 10
-    out = serve_sgt_churn(capacity=capacity, batch=128, ticks=ticks,
-                          method="incremental", profile="mixed")
+    kw = dict(capacity=capacity, batch=128, ticks=ticks,
+              method="incremental", profile="mixed",
+              collect_decisions=True)
+    out = serve_sgt_churn(closure_layout="tiled", **kw)
+    # window-size invariance: a deliberately tiny region forces spills —
+    # the degraded engine falls back to exact partial checks, so the
+    # accept bits must not move
+    tiny = serve_sgt_churn(closure_layout="tiled", closure_region=64, **kw)
+    match = np.array_equal(out["decisions"], tiny["decisions"])
+    if capacity <= 4096:
+        # dense cross-check where its (C, C)-float delete hop is feasible
+        dense = serve_sgt_churn(closure_layout="dense", **kw)
+        match = match and np.array_equal(out["decisions"],
+                                         dense["decisions"])
     return (f"capacity_sweep_C{capacity}_churn", out["tick_us"],
             f"row_products={out['row_products']}"
             f"_repairs={out['n_repairs']}"
-            f"_closure_bytes={capacity * capacity // 8}"
+            f"_closure_bytes={out['closure_bytes']}"
+            f"_decisions_match={int(match)}"
             f"_ticks={ticks}")
 
 
@@ -163,6 +182,10 @@ def grow_row(capacity: int, quick: bool):
     pool = _pool_size(half)
     rng = np.random.default_rng(11)
     pre_us, pre_vs = _forward_edges(rng, pool, b)
+    # pin one explicit starting region for BOTH capacities so the grown
+    # and fresh engines carry identically shaped tiled leaves (grow
+    # preserves the region; the default would differ at small C)
+    region = min(half, 1024)
 
     def build(eng):
         eng = _populate(eng, pool)
@@ -170,7 +193,7 @@ def grow_row(capacity: int, quick: bool):
                                        jnp.asarray(pre_vs))
         return eng, r
 
-    pre, _ = build(_make_engine(half))
+    pre, _ = build(_make_engine(half, region))
     jax.block_until_ready(pre.cache.closure)
 
     t0 = time.perf_counter()
@@ -179,7 +202,7 @@ def grow_row(capacity: int, quick: bool):
     migrate_us = (time.perf_counter() - t0) * 1e6
 
     # a fresh engine at C replaying the identical history
-    fresh, _ = build(_make_engine(capacity))
+    fresh, _ = build(_make_engine(capacity, region))
 
     def leaves_equal(a, b):
         la, _ = jax.tree_util.tree_flatten(a)
@@ -190,7 +213,8 @@ def grow_row(capacity: int, quick: bool):
     # checkpoint at C/2 -> restore into a C-capacity template == grown
     with tempfile.TemporaryDirectory() as d:
         ckpt.save_engine_checkpoint(d, 0, pre)
-        restored = ckpt.restore_engine_checkpoint(d, _make_engine(capacity))
+        restored = ckpt.restore_engine_checkpoint(
+            d, _make_engine(capacity, region))
     restore_match = leaves_equal(restored, grown)
 
     # post-grow decision batch: half new forward edges, half reversals of
@@ -219,12 +243,7 @@ def all_rows(quick: bool = False):
     rows = []
     for c in CAPACITIES:
         rows.append(insert_row(c, quick))
-        if c <= CHURN_MAX_CAPACITY:
-            rows.append(churn_row(c, quick))
-        else:
-            print(f"# capacity_sweep: churn row skipped at C={c} "
-                  f"(> {CHURN_MAX_CAPACITY}: jnp delete-repair hop would "
-                  f"materialize (C, C) floats on the host CPU)")
+        rows.append(churn_row(c, quick))
         rows.append(grow_row(c, quick))
     return rows
 

@@ -23,13 +23,18 @@ What is compared, and why the checks differ in strictness:
   baseline (``*_incremental_rebuild``) on the same churn stream.
 
 * **Capacity-sweep gates** (``capacity_sweep_C{c}_*``) are within-run and
-  deterministic: resident closure bytes must equal the analytic ``C^2/8``;
-  the grow rows' bit-for-bit verdicts (``decisions_match`` /
-  ``restore_match`` — the grown engine vs a fresh engine created at C,
-  directly and across a checkpoint restore) must both be 1; and the
-  one-step migration must cost at most ``GROW_COST_TICKS`` same-capacity
-  insert ticks.  The standalone CI step gates this family alone via
-  ``--only capacity_sweep``.
+  deterministic: every row carries MEASURED resident closure bytes, and
+  at ``C >= 2^14`` they must come in strictly below the dense ceiling
+  ``C^2/8`` — the tiled closure's O(reachable) memory claim, gated on
+  sparse sweep graphs, not asserted; churn rows (uncapped through
+  ``2^17``) must report ``decisions_match=1`` (accept bits identical
+  across tiled window sizes and — where the dense hop is feasible —
+  across layouts); the grow rows' bit-for-bit verdicts
+  (``decisions_match`` / ``restore_match`` — the grown engine vs a fresh
+  engine created at C, directly and across a checkpoint restore) must
+  both be 1; and the one-step migration must cost at most
+  ``GROW_COST_TICKS`` same-capacity insert ticks.  The standalone CI
+  step gates this family alone via ``--only capacity_sweep``.
 
 * **Absolute wall times do not transfer between machines**, so time checks
   are within-run or ratio-based:
@@ -435,14 +440,19 @@ def check(pr: dict, base: dict, tol: float, time_tol: float) -> list:
                 f"invalidate+rebuild baseline ({rwp_r})")
 
     # 4e. within-run, deterministic: the capacity-sweep family.  Resident
-    # closure bytes are analytic (exactly C^2/8 for the packed uint32
-    # cache — any drift means the representation changed); the grow rows
-    # carry two bit-for-bit verdicts computed in-run (grown engine ==
-    # fresh engine at C on every accept decision and every state leaf,
-    # and checkpoint-at-C/2 restored into C == grown) that must both be
-    # 1; and the one-step migration must stay within GROW_COST_TICKS
-    # same-capacity insert ticks (it is a zero-pad re-embedding, not a
-    # rebuild).
+    # closure bytes are MEASURED off the tiled cache; on the sweep's
+    # sparse graphs they track the reachable window, so at C >= 2^14
+    # they must come in strictly below the dense ceiling C^2/8 — the
+    # headline O(reachable)-memory gate.  Churn rows (uncapped through
+    # 2^17) must additionally report decisions_match=1: the accept-bit
+    # stream is pinned identical across tiled window sizes (including a
+    # deliberately tiny spilling window) and, where the dense delete hop
+    # is feasible, across layouts.  The grow rows carry two bit-for-bit
+    # verdicts computed in-run (grown engine == fresh engine at C on
+    # every accept decision and every state leaf, and checkpoint-at-C/2
+    # restored into C == grown) that must both be 1; and the one-step
+    # migration must stay within GROW_COST_TICKS same-capacity insert
+    # ticks (it is a zero-pad re-embedding, not a rebuild).
     cap_rows = {}
     for name, row in pr.items():
         m = CAPACITY_RE.match(name)
@@ -451,12 +461,23 @@ def check(pr: dict, base: dict, tol: float, time_tol: float) -> list:
     for cap, by_kind in sorted(cap_rows.items()):
         for kind, row in sorted(by_kind.items()):
             m = CLOSURE_BYTES_RE.search(row["derived"])
-            if m is None or int(m.group(1)) != cap * cap // 8:
-                got = m.group(1) if m else "missing"
+            if m is None:
                 failures.append(
-                    f"capacity_sweep_C{cap}_{kind}: closure_bytes {got} != "
-                    f"C^2/8 = {cap * cap // 8} (packed cache representation "
-                    f"changed?)")
+                    f"capacity_sweep_C{cap}_{kind}: closure_bytes missing")
+            elif cap >= 2 ** 14 and int(m.group(1)) >= cap * cap // 8:
+                failures.append(
+                    f"capacity_sweep_C{cap}_{kind}: closure_bytes "
+                    f"{m.group(1)} not strictly below the dense ceiling "
+                    f"C^2/8 = {cap * cap // 8} — the tiled closure is not "
+                    f"delivering O(reachable) memory on the sparse sweep")
+        chrow = by_kind.get("churn")
+        if chrow is not None:
+            m = DECISIONS_RE.search(chrow["derived"])
+            if m is None or int(m.group(1)) != 1:
+                failures.append(
+                    f"capacity_sweep_C{cap}_churn: decisions_match="
+                    f"{m.group(1) if m else 'missing'} — accept bits moved "
+                    f"across tiled window sizes or layouts")
         grow = by_kind.get("grow")
         if grow is not None:
             for label, regex in (("decisions_match", DECISIONS_RE),

@@ -80,6 +80,83 @@ def closure_delete_rows():
     return rows
 
 
+def _tiled_bands(rng, c: int, frac: float):
+    """Row/column tile-band masks whose outer product covers ~``frac`` of
+    the tile grid — the reachable-window structure real closures have
+    (live slots cluster in leading bands), which the rank-B fold and the
+    repair hop both preserve."""
+    t = c // 32
+    p = frac ** 0.5
+    rowb = rng.random(t) < p
+    colb = rng.random(t) < p
+    return rowb, colb
+
+
+def _closure_in_bands(rng, c: int, rowb, colb):
+    """A packed (c, c/32) closure whose bits live only in occupied
+    row-band x column-band tiles."""
+    rows = np.repeat(rowb, 32)
+    cols = np.repeat(colb, 32)
+    dense = (rng.random((c, c)) < 0.25) & rows[:, None] & cols[None, :]
+    return bitset.pack_bits(jnp.asarray(dense))
+
+
+def closure_update_tiled_rows():
+    """Tiled rank-B fold across occupancy fractions: the block-activity
+    skip makes work track occupied tiles, not the region area."""
+    rows = []
+    rng = np.random.default_rng(2)
+    fn = jax.jit(ref.closure_update_tiled_ref)
+    c, b = 2048, 256
+    for frac in (1.0, 0.10, 0.01):
+        rowb, colb = _tiled_bands(rng, c, frac)
+        closure = _closure_in_bands(rng, c, rowb, colb)
+        # fold operands confined to the same bands, as the engine's
+        # candidate masks are (sources live in occupied rows, new
+        # reachability lands in occupied columns)
+        mrows = np.repeat(rowb, 32)
+        mask = bitset.pack_bits(jnp.asarray(
+            (rng.random((c, b)) < 0.2) & mrows[:, None]))
+        scols = np.repeat(colb, 32)
+        sel = bitset.pack_bits(jnp.asarray(
+            (rng.random((b, c)) < 0.05) & scols[None, :]))
+        t = _time(fn, closure, mask, sel)
+        out, occ = fn(closure, mask, sel)
+        n_tiles = (c // 32) ** 2
+        occupied = int(jnp.sum(occ))
+        rows.append((f"closure_update_tiled_C{c}_occ{int(frac * 100)}pct",
+                     t * 1e6,
+                     f"occupied_tiles={occupied}"
+                     f"_tile_frac={occupied / n_tiles:.3f}"
+                     f"_summary_bytes={n_tiles // 8}"))
+    return rows
+
+
+def closure_delete_tiled_rows():
+    """Tiled delete-repair hop across occupancy fractions: the fused
+    kernel consults row-band and column-band occupancy and skips empty
+    blocks, clearing summary bits in the same pass."""
+    rows = []
+    rng = np.random.default_rng(3)
+    fn = jax.jit(ref.closure_delete_tiled_ref)
+    c, aff_frac = 2048, 0.05
+    for frac in (1.0, 0.10, 0.01):
+        rowb, colb = _tiled_bands(rng, c, frac)
+        r = _closure_in_bands(rng, c, rowb, colb)
+        s = _closure_in_bands(rng, c, rowb, colb)
+        aff = bitset.pack_bits(jnp.asarray(rng.random(c) < aff_frac))
+        t = _time(fn, r, s, aff)
+        out, occ = fn(r, s, aff)
+        n_tiles = (c // 32) ** 2
+        occupied = int(jnp.sum(occ))
+        rows.append((f"closure_delete_tiled_C{c}_occ{int(frac * 100)}pct",
+                     t * 1e6,
+                     f"occupied_tiles={occupied}"
+                     f"_tile_frac={occupied / n_tiles:.3f}"
+                     f"_summary_bytes={n_tiles // 8}"))
+    return rows
+
+
 def embbag_rows():
     rows = []
     rng = np.random.default_rng(1)
@@ -110,4 +187,5 @@ def flash_rows():
 
 def all_rows():
     return (bitmm_rows() + closure_update_rows() + closure_delete_rows()
+            + closure_update_tiled_rows() + closure_delete_tiled_rows()
             + embbag_rows() + flash_rows())

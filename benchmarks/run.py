@@ -18,7 +18,12 @@ def collect_rows(quick: bool):
     rows = []
     from benchmarks import paper_workloads, kernel_bench
     rows += paper_workloads.all_rows(quick=quick)
-    if not quick:
+    if quick:
+        # the tiled-closure kernel rows ride along even in quick mode:
+        # their occupancy-fraction counters are part of the gated story
+        rows += kernel_bench.closure_update_tiled_rows()
+        rows += kernel_bench.closure_delete_tiled_rows()
+    else:
         rows += kernel_bench.all_rows()
     from benchmarks import sgt_bench
     rows += sgt_bench.all_rows(quick=quick)

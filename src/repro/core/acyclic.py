@@ -131,6 +131,8 @@ def acyclic_add_edges_impl(
         # standalone incremental call: conservative dirty cache -> the
         # first sub-batch pays one lazy rebuild, the rest ride the cache
         cache = closure_cache.empty_cache(capacity, dirty=True)
+    tiled = cached and closure_cache.is_tiled(cache.closure)
+    region = cache.closure.region if tiled else capacity
 
     us_r = us.reshape(subbatches, -1)
     vs_r = vs.reshape(subbatches, -1)
@@ -172,9 +174,24 @@ def acyclic_add_edges_impl(
                 # opportunistic refresh: with zero rejects the committed
                 # graph IS G ∪ transit, so the closure just computed is its
                 # exact cache (otherwise rejected transit edges poison it)
-                closure2 = jnp.where(any_reject, closure, cfull)
-                dirty2 = jnp.where(any_reject, dirty | any_accept,
-                                   jnp.asarray(False))
+                if tiled:
+                    # adopt into the tiles window only when the transit
+                    # graph fits it (a confined graph has a confined
+                    # closure); otherwise the tiles go/stay stale
+                    adopt = ~any_reject \
+                        & closure_cache.region_confined(adj_t, region)
+                    tiles2 = jnp.where(
+                        adopt, cfull[:region, : region // bitset.WORD],
+                        closure.tiles)
+                    closure2 = closure_cache.TiledClosure(
+                        tiles2,
+                        closure_cache.build_summary(tiles2, capacity))
+                    dirty2 = jnp.where(adopt, jnp.asarray(False),
+                                       dirty | any_accept)
+                else:
+                    closure2 = jnp.where(any_reject, closure, cfull)
+                    dirty2 = jnp.where(any_reject, dirty | any_accept,
+                                       jnp.asarray(False))
             else:
                 closure2, dirty2 = closure, dirty
             return (cyc, closure2, dirty2, n, n * jnp.int32(capacity),
@@ -192,16 +209,47 @@ def acyclic_add_edges_impl(
         def incremental_check(_):
             # lazy rebuild on a dirty cache (charged as closure products),
             # then the B^2-bit-read check and the rank-B fold-in; always
-            # leaves a clean cache
+            # leaves a clean cache on the dense layout
             closure0, n = closure_cache.refresh_closure(
                 closure, dirty, adj, matmul_impl)
-            cyc = closure_cache.incremental_cycle_check(
-                closure0, u_slot, v_slot, cand)
-            closure1 = closure_cache.insert_update(
-                closure0, u_slot, v_slot, cand & ~cyc, closure_update_impl)
-            return (cyc, closure1, jnp.asarray(False), n,
-                    n * jnp.int32(capacity), jnp.int32(CHOSE_INCREMENTAL),
-                    zero_depths)
+            if not tiled:
+                cyc = closure_cache.incremental_cycle_check(
+                    closure0, u_slot, v_slot, cand)
+                closure1 = closure_cache.insert_update(
+                    closure0, u_slot, v_slot, cand & ~cyc,
+                    closure_update_impl)
+                return (cyc, closure1, jnp.asarray(False), n,
+                        n * jnp.int32(capacity),
+                        jnp.int32(CHOSE_INCREMENTAL), zero_depths)
+
+            # tiled: the refresh rebuilds inside the window (O(region)
+            # rows).  If the committed graph has spilled past the window
+            # (only possible under jit, where the host can't widen it),
+            # the tiles stay stale and the batch is decided by the exact
+            # from-scratch partial check instead — decisions never read
+            # untrusted bits, they just cost more until the engine widens
+            # the window host-side.
+            stale = dirty & ~closure_cache.region_confined(adj, region)
+
+            def trusted(_):
+                cyc = closure_cache.incremental_cycle_check(
+                    closure0, u_slot, v_slot, cand)
+                closure1, spilled = closure_cache.insert_update_tiled(
+                    closure0, u_slot, v_slot, cand & ~cyc,
+                    closure_update_impl)
+                return cyc, closure1, spilled, n, n * jnp.int32(region)
+
+            def fallback(_):
+                cyc, n2, _ = snapshot.partial_cycle_check(
+                    adj_t, u_slot, v_slot, cand, p_impl, with_stats=True,
+                    with_depths=True)
+                return (cyc, closure0, jnp.asarray(True), n2,
+                        n2 * jnp.int32(b_sub))
+
+            cyc, closure1, dirty1, n1, rp = jax.lax.cond(
+                stale, fallback, trusted, None)
+            return (cyc, closure1, dirty1, n1, rp,
+                    jnp.int32(CHOSE_INCREMENTAL), zero_depths)
 
         if method == "closure":
             checked = closure_check(None)

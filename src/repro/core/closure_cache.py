@@ -84,9 +84,15 @@ class ClosureCache(NamedTuple):
     staleness flag and the measured repair-depth EMA.  ``dirty=True`` means
     ``closure`` may be stale (a delete was not maintained, or the slab was
     wrapped from unknown state) and must be rebuilt before its bits are
-    trusted."""
+    trusted.
 
-    closure: jax.Array     # uint32[C, W]: strict closure (paths of >= 1 edge)
+    ``closure`` is either the dense slab ``uint32[C, C/32]`` or a
+    `TiledClosure` (32x32-bit tiles confined to a growable region window
+    plus a per-tile occupancy summary) — every cache operation dispatches
+    on the representation at trace time, so the two layouts share one
+    commit protocol."""
+
+    closure: jax.Array     # uint32[C, W] dense, or TiledClosure
     dirty: jax.Array       # bool[]: True -> rebuild before use
     repair_ema: jax.Array  # float32[]: EMA of measured delete-repair scan
     #                        depths (0 = unseeded) — the delete dispatch
@@ -94,7 +100,7 @@ class ClosureCache(NamedTuple):
 
     @property
     def capacity(self) -> int:
-        return self.closure.shape[0]
+        return closure_capacity(self.closure)
 
     def invalidated_if(self, changed) -> "ClosureCache":
         """Mark dirty when ``changed`` (traced bool) — the fallback for
@@ -111,6 +117,191 @@ def empty_cache(capacity: int, dirty: bool = False) -> ClosureCache:
                         jnp.asarray(dirty), jnp.zeros((), jnp.float32))
 
 
+# -------------------------------------------------- tiled representation
+
+TILE = bitset.WORD  # 32x32-bit tiles: one uint32 word per tile row
+
+DEFAULT_REGION = 1024  # fresh tiled caches open a 1024-slot window
+
+
+class TiledClosure(NamedTuple):
+    """Block-sparse packed closure: 32x32-bit tiles confined to a leading
+    ``region x region`` window, plus a per-tile occupancy summary bitmap
+    over the FULL capacity's tile grid.
+
+    ``tiles`` is bit-identical to the leading ``[:region, :region//32]``
+    window of the dense packed closure; every closure bit outside the
+    window is guaranteed zero (the *confinement invariant*: the engine
+    widens the window before slots beyond it can carry edges, and the
+    commit path falls back to invalidation if an accepted edge ever
+    spills past it under jit — degrade-to-dirty, never wrong bits).
+    ``summary`` packs one bit per 32x32 tile (bit (I, J) set iff the tile
+    at rows 32I..32I+31, word-column J is non-empty), so kernels skip
+    empty tiles with one word read and the closure's footprint is
+    O(region^2 / 8 + C^2 / 1024) bytes instead of the dense C^2 / 8."""
+
+    tiles: jax.Array    # uint32[R, R/32]: closure bits of the window
+    summary: jax.Array  # uint32[C/32, ceil(C/1024)]: per-tile occupancy
+
+    @property
+    def capacity(self) -> int:
+        return self.summary.shape[0] * TILE
+
+    @property
+    def region(self) -> int:
+        return self.tiles.shape[0]
+
+
+def is_tiled(closure) -> bool:
+    """Trace-time layout dispatch (a pytree-structure fact, not data)."""
+    return isinstance(closure, TiledClosure)
+
+
+def closure_capacity(closure) -> int:
+    return closure.capacity if is_tiled(closure) else closure.shape[0]
+
+
+def closure_nbytes(closure) -> int:
+    """Measured closure bytes — the sweep's O(reachable) headline stat
+    (tiles + summary for the tiled layout, the slab for dense)."""
+    return int(sum(x.nbytes for x in jax.tree_util.tree_leaves(closure)))
+
+
+def summary_words(capacity: int) -> int:
+    """Packed words per summary row (the tile grid is C/32 wide; rows pad
+    up to a whole word so capacities below 1024 still pack)."""
+    t = capacity // TILE
+    return (t + TILE - 1) // TILE
+
+
+def align_region(n: int, capacity: int) -> int:
+    """Smallest valid window >= n: a multiple of 32, capped at capacity."""
+    r = max(TILE, ((int(n) + TILE - 1) // TILE) * TILE)
+    return min(r, capacity)
+
+
+def default_region(capacity: int) -> int:
+    return align_region(min(capacity, DEFAULT_REGION), capacity)
+
+
+def build_summary(tiles: jax.Array, capacity: int) -> jax.Array:
+    """Per-tile occupancy bitmap of ``tiles`` embedded in the full
+    capacity's tile grid — tiles beyond the window are empty under the
+    confinement invariant, so their bits stay zero."""
+    r, wr = tiles.shape
+    t = capacity // TILE
+    sw = summary_words(capacity)
+    occ = jnp.any((tiles != 0).reshape(r // TILE, TILE, wr), axis=1)
+    full = jnp.zeros((t, sw * TILE), bool)
+    full = full.at[: r // TILE, :wr].set(occ)
+    return bitset.pack_bits(full)
+
+
+def summary_from_occ(occ: jax.Array, capacity: int) -> jax.Array:
+    """Pack the occupancy plane a tiled kernel emitted
+    (`kernels/ops.closure_update_tiled` / `closure_delete_tiled` — uint32
+    0/1 per tile, region grid) into the capacity summary bitmap.  The
+    fused-pass replacement for `build_summary`: no second read of the
+    tiles."""
+    t = capacity // TILE
+    sw = summary_words(capacity)
+    tr, tc = occ.shape
+    full = jnp.zeros((t, sw * TILE), bool)
+    full = full.at[:tr, :tc].set(occ != 0)
+    return bitset.pack_bits(full)
+
+
+def occupied_tiles(closure: TiledClosure) -> jax.Array:
+    """int32: live non-empty tile count — the occupancy the dispatch
+    pricing reads instead of assuming full capacity."""
+    return jnp.sum(bitset.popcount(closure.summary))
+
+
+def empty_tiled_cache(capacity: int, region: int = 0,
+                      dirty: bool = False) -> ClosureCache:
+    """Tiled-layout cache for an empty graph (see `empty_cache`)."""
+    r = align_region(region or default_region(capacity), capacity)
+    tiles = jnp.zeros((r, r // TILE), jnp.uint32)
+    return ClosureCache(TiledClosure(tiles, build_summary(tiles, capacity)),
+                        jnp.asarray(dirty), jnp.zeros((), jnp.float32))
+
+
+def region_confined(adj_packed: jax.Array, region: int) -> jax.Array:
+    """bool[]: no adjacency bit lies outside the leading region window —
+    the precondition for representing the closure in tiles alone."""
+    wr = region // TILE
+    tail_rows = jnp.any(adj_packed[region:, :] != 0) \
+        if adj_packed.shape[0] > region else jnp.asarray(False)
+    tail_cols = jnp.any(adj_packed[:region, wr:] != 0) \
+        if adj_packed.shape[1] > wr else jnp.asarray(False)
+    return ~(tail_rows | tail_cols)
+
+
+def dense_of(closure) -> jax.Array:
+    """The dense uint32[C, C/32] equivalent (zero outside the window) —
+    the bit-for-bit bridge the cross-layout property tests compare on."""
+    if not is_tiled(closure):
+        return closure
+    c = closure.capacity
+    r, wr = closure.tiles.shape
+    return jnp.pad(closure.tiles,
+                   ((0, c - r), (0, bitset.n_words(c) - wr)))
+
+
+def tiled_of(closure: jax.Array, region: int) -> TiledClosure:
+    """Re-represent a dense packed closure as tiles — the dense-era
+    checkpoint forward-restore path.  ``region`` must already cover every
+    set bit; callers check confinement host-side."""
+    c = closure.shape[0]
+    r = align_region(region, c)
+    tiles = closure[:r, : r // TILE]
+    return TiledClosure(tiles, build_summary(tiles, c))
+
+
+def grow_closure(closure, new_capacity: int):
+    """Zero-pad a closure to a larger capacity: dense pads the slab;
+    tiled pads only the summary grid — the tiles window is untouched, so
+    a grow allocates O(C/1024) new bytes instead of O(C^2/8)."""
+    if is_tiled(closure):
+        if new_capacity == closure.capacity:
+            return closure
+        t, sw = new_capacity // TILE, summary_words(new_capacity)
+        pad = ((0, t - closure.summary.shape[0]),
+               (0, sw - closure.summary.shape[1]))
+        return TiledClosure(closure.tiles, jnp.pad(closure.summary, pad))
+    c, w = closure.shape
+    if new_capacity == c:
+        return closure
+    return jnp.pad(closure, ((0, new_capacity - c),
+                             (0, bitset.n_words(new_capacity) - w)))
+
+
+def grow_region(closure: TiledClosure, new_region: int) -> TiledClosure:
+    """Widen the tiles window (summary unchanged — the new tiles are
+    empty).  The engine calls this host-side, before traces see the
+    window's static shape."""
+    r, wr = closure.tiles.shape
+    nr = align_region(new_region, closure.capacity)
+    if nr <= r:
+        return closure
+    tiles = jnp.pad(closure.tiles, ((0, nr - r), (0, nr // TILE - wr)))
+    return TiledClosure(tiles, closure.summary)
+
+
+def closure_bit_get(closure, rows, cols) -> jax.Array:
+    """Polymorphic `bitset.bit_get`: out-of-window reads are False, which
+    is exact under confinement (those slots carry no edges)."""
+    if not is_tiled(closure):
+        return bitset.bit_get(closure, rows, cols)
+    r = closure.region
+    rows = jnp.asarray(rows, jnp.int32)
+    cols = jnp.asarray(cols, jnp.int32)
+    inside = (rows < r) & (cols < r)
+    got = bitset.bit_get(closure.tiles, jnp.minimum(rows, r - 1),
+                         jnp.minimum(cols, r - 1))
+    return got & inside
+
+
 def grow_cache(cache: ClosureCache, new_capacity: int) -> ClosureCache:
     """Re-embed the cache at a larger capacity in one jit-compatible step.
 
@@ -120,16 +311,14 @@ def grow_cache(cache: ClosureCache, new_capacity: int) -> ClosureCache:
     therefore carry over unchanged: a clean cache stays clean through a grow
     (no spurious rebuild follows), and a dirty one stays merely dirty.
     """
-    c, w = cache.closure.shape
+    c = closure_capacity(cache.closure)
     if new_capacity == c:
         return cache
     if new_capacity < c:
         raise ValueError(
             f"cannot shrink: new capacity {new_capacity} < current {c}")
-    w_new = bitset.n_words(new_capacity)
-    return ClosureCache(
-        jnp.pad(cache.closure, ((0, new_capacity - c), (0, w_new - w))),
-        cache.dirty, cache.repair_ema)
+    return ClosureCache(grow_closure(cache.closure, new_capacity),
+                        cache.dirty, cache.repair_ema)
 
 
 def rebuild_cache(adj_packed: jax.Array,
@@ -139,11 +328,30 @@ def rebuild_cache(adj_packed: jax.Array,
                         jnp.asarray(False), jnp.zeros((), jnp.float32))
 
 
-def refresh_closure(closure: jax.Array, dirty: jax.Array,
-                    adj_packed: jax.Array,
+def refresh_closure(closure, dirty: jax.Array, adj_packed: jax.Array,
                     matmul_impl: Optional[MatmulImpl] = None):
     """(trusted closure, n_products): rebuilds iff dirty (a traced
-    ``lax.cond``), charging the rebuild's boolean-matmul products."""
+    ``lax.cond``), charging the rebuild's boolean-matmul products.
+
+    A tiled closure rebuilds inside its window — O(region) rows, not
+    O(capacity) — and requires the adjacency to be region-confined when
+    dirty; the engine widens the window host-side before asking
+    (`DagEngine.refresh_cache`), so the precondition holds on every
+    host-driven refresh."""
+    if is_tiled(closure):
+        r = closure.region
+        adj_r = adj_packed[:r, : r // TILE]
+
+        def rebuild_t(_):
+            cl, n = transitive_closure(adj_r, matmul_impl, with_stats=True)
+            return cl, n
+
+        def keep_t(_):
+            return closure.tiles, jnp.int32(0)
+
+        confined = region_confined(adj_packed, r)
+        tiles, n = jax.lax.cond(dirty & confined, rebuild_t, keep_t, None)
+        return TiledClosure(tiles, build_summary(tiles, closure.capacity)), n
 
     def rebuild(_):
         c, n = transitive_closure(adj_packed, matmul_impl, with_stats=True)
@@ -204,6 +412,21 @@ class CacheDelta(NamedTuple):
     def vertices_cleared(cls, slots, mask) -> "CacheDelta":
         e, m = _empty_slots(), _empty_mask()
         return cls(e, e, m, e, e, m, slots, mask)
+
+    @classmethod
+    def merge(cls, *deltas: "CacheDelta") -> "CacheDelta":
+        """Concatenate several same-tick deltas into ONE (field-wise).
+
+        Exact for a phase-ordered run (every delete-recording delta before
+        every add-recording one — the front-end tick's linearization):
+        `commit` applies the merged delete side in one affected-row pass
+        against the final adjacency, which is order-free for a set of
+        removals, and folds the whole accepted add set last.  A mixed
+        add+delete tick therefore pays one repair pass instead of two,
+        with accept decisions identical to committing each delta alone
+        (pinned in tests/test_tiled_closure.py)."""
+        return cls(*[jnp.concatenate([d[i] for d in deltas])
+                     for i in range(len(cls._fields))])
 
     def removal_seeds(self):
         """(seeds int32[Br+Bc], mask bool[Br+Bc]): the slots whose ancestor
@@ -299,26 +522,47 @@ def commit(cache: ClosureCache, delta: CacheDelta, adj_after: jax.Array, *,
     charged where it happens, at the next incremental check).
     """
     closure, dirty, ema = cache.closure, cache.dirty, cache.repair_ema
+    tiled = is_tiled(closure)
+    if tiled:
+        region = closure.region
+        work = closure.tiles
+        adj_work = adj_after[:region, : region // TILE]
+    else:
+        region = closure.shape[0]
+        work = closure
+        adj_work = adj_after
     z = jnp.int32(0)
     n_products, row_products, n_repair = z, z, z
     seeds, smask = delta.removal_seeds()
     if seeds.shape[0]:
         any_removed = jnp.any(smask)
-        affected = affected_rows(closure, seeds, smask)
+        if tiled:
+            # an enabled out-of-window seed contradicts confinement (only
+            # possible on an already-stale cache) — force invalidation
+            in_region = seeds < region
+            smask_w = smask & in_region
+            seeds_w = jnp.minimum(seeds, region - 1)
+            blocked = jnp.any(smask & ~in_region)
+        else:
+            smask_w, seeds_w = smask, seeds
+            blocked = jnp.asarray(False)
+        affected = affected_rows(work, seeds_w, smask_w)
         n_aff = jnp.sum(affected, dtype=jnp.int32)
         if prefer_repair_fn is None:
             from repro.core import dispatch
-            capacity = closure.shape[0]
 
             def prefer_repair_fn(n, depth_hint):
-                return dispatch.prefer_delete_repair(n, capacity, depth_hint)
+                # tiled prices repair against the live window's rebuild,
+                # not the full-capacity one
+                return dispatch.prefer_delete_repair(n, region, depth_hint)
 
         scan = delete_impl if delete_impl is not None else masked_delete_scan
-        do_repair = ~dirty & any_removed & prefer_repair_fn(n_aff, ema)
+        do_repair = ~dirty & any_removed & ~blocked \
+            & prefer_repair_fn(n_aff, ema)
 
         def repair(args):
             cl, em = args
-            cl2, n, rows = scan(adj_after, cl, affected)
+            cl2, n, rows = scan(adj_work, cl, affected)
             d = n.astype(jnp.float32)
             em2 = jnp.where(em > 0,
                             (1.0 - ema_alpha) * em + ema_alpha * d, d)
@@ -328,15 +572,33 @@ def commit(cache: ClosureCache, delta: CacheDelta, adj_after: jax.Array, *,
             cl, em = args
             return cl, dirty | any_removed, em, z, z, z
 
-        closure, dirty, ema, n_products, row_products, n_repair = \
-            jax.lax.cond(do_repair, repair, invalidate, (closure, ema))
+        work, dirty, ema, n_products, row_products, n_repair = \
+            jax.lax.cond(do_repair, repair, invalidate, (work, ema))
     if delta.add_u.shape[0]:
+        if tiled:
+            # an accepted edge past the window can't fold into the tiles:
+            # skip the fold and go dirty (the next check rebuilds in a
+            # wider window) — degrade-to-dirty, never wrong bits
+            spill = jnp.any(delta.add_mask & ((delta.add_u >= region)
+                                              | (delta.add_v >= region)))
+            add_u = jnp.minimum(delta.add_u, region - 1)
+            add_v = jnp.minimum(delta.add_v, region - 1)
+        else:
+            spill = jnp.asarray(False)
+            add_u, add_v = delta.add_u, delta.add_v
+
         def fold(cl):
-            return insert_update(cl, delta.add_u, delta.add_v,
+            return insert_update(cl, add_u, add_v,
                                  delta.add_mask, update_impl)
 
-        closure = jax.lax.cond(dirty | ~jnp.any(delta.add_mask),
-                               lambda cl: cl, fold, closure)
+        any_add = jnp.any(delta.add_mask)
+        work = jax.lax.cond(dirty | ~any_add | spill,
+                            lambda cl: cl, fold, work)
+        dirty = dirty | (spill & any_add)
+    if tiled:
+        closure = TiledClosure(work, build_summary(work, closure.capacity))
+    else:
+        closure = work
     out = ClosureCache(closure, dirty, ema)
     if with_stats:
         return out, {"n_products": n_products, "row_products": row_products,
@@ -360,21 +622,44 @@ def apply_delta(closure: jax.Array, adj_after: jax.Array, delta: CacheDelta,
     idempotence `repro/replica.py`'s checkpoint-tail recovery leans on.
 
     Returns the new closure (delete side first, matching the commit
-    linearization).
+    linearization).  A tiled closure applies inside its window — the
+    caller (`repro.replica.Replica.apply`) widens the window to cover
+    every slot the delta addresses before applying.
     """
+    tiled = is_tiled(closure)
+    if tiled:
+        region = closure.region
+        work = closure.tiles
+        adj_work = adj_after[:region, : region // TILE]
+    else:
+        work = closure
+        adj_work = adj_after
     seeds, smask = delta.removal_seeds()
     if seeds.shape[0]:
-        affected = affected_rows(closure, seeds, smask)
+        if tiled:
+            smask_w = smask & (seeds < region)
+            seeds_w = jnp.minimum(seeds, region - 1)
+        else:
+            smask_w, seeds_w = smask, seeds
+        affected = affected_rows(work, seeds_w, smask_w)
         scan = delete_impl if delete_impl is not None else masked_delete_scan
-        closure, _, _ = scan(adj_after, closure, affected)
+        work, _, _ = scan(adj_work, work, affected)
     if delta.add_u.shape[0]:
+        if tiled:
+            add_u = jnp.minimum(delta.add_u, region - 1)
+            add_v = jnp.minimum(delta.add_v, region - 1)
+        else:
+            add_u, add_v = delta.add_u, delta.add_v
+
         def fold(cl):
-            return insert_update(cl, delta.add_u, delta.add_v,
+            return insert_update(cl, add_u, add_v,
                                  delta.add_mask, update_impl)
 
-        closure = jax.lax.cond(~jnp.any(delta.add_mask),
-                               lambda cl: cl, fold, closure)
-    return closure
+        work = jax.lax.cond(~jnp.any(delta.add_mask),
+                            lambda cl: cl, fold, work)
+    if tiled:
+        return TiledClosure(work, build_summary(work, closure.capacity))
+    return work
 
 
 # --------------------------------------------------- candidate hop graph
@@ -395,19 +680,35 @@ def _closure_bool_small(a: jax.Array, strict: bool = True) -> jax.Array:
     return jax.lax.fori_loop(0, n_iter, body, a)
 
 
-def candidate_hop_matrix(closure: jax.Array, u_slots: jax.Array,
+def candidate_hop_matrix(closure, u_slots: jax.Array,
                          v_slots: jax.Array, mask: jax.Array) -> jax.Array:
     """A[i, j] = mask[i] & mask[j] & "candidate i's target reaches
-    candidate j's source through the committed graph (>= 0 edges)"."""
-    rows_v = closure[v_slots]                       # (B, W)
-    word = u_slots >> 5
-    shift = (u_slots & 31).astype(jnp.uint32)
-    reach = ((rows_v[:, word] >> shift[None, :]) & jnp.uint32(1)) != 0
+    candidate j's source through the committed graph (>= 0 edges)".
+
+    Polymorphic over the layout: tiled closures read their window with
+    out-of-window slots contributing zero reach bits — exact under the
+    confinement invariant (those slots carry no committed edges)."""
+    if is_tiled(closure):
+        r = closure.region
+        v_in, u_in = v_slots < r, u_slots < r
+        rows_v = jnp.where(
+            v_in[:, None],
+            closure.tiles[jnp.minimum(v_slots, r - 1)], jnp.uint32(0))
+        u_c = jnp.minimum(u_slots, r - 1)
+        word = u_c >> 5
+        shift = (u_c & 31).astype(jnp.uint32)
+        reach = ((rows_v[:, word] >> shift[None, :]) & jnp.uint32(1)) != 0
+        reach = reach & u_in[None, :]
+    else:
+        rows_v = closure[v_slots]                   # (B, W)
+        word = u_slots >> 5
+        shift = (u_slots & 31).astype(jnp.uint32)
+        reach = ((rows_v[:, word] >> shift[None, :]) & jnp.uint32(1)) != 0
     hop = reach | (v_slots[:, None] == u_slots[None, :])
     return hop & mask[:, None] & mask[None, :]
 
 
-def incremental_cycle_check(closure: jax.Array, u_slots: jax.Array,
+def incremental_cycle_check(closure, u_slots: jax.Array,
                             v_slots: jax.Array, cand: jax.Array) -> jax.Array:
     """cyc[b] = True iff candidate edge (u_b, v_b) lies on a cycle of
     ``G ∪ transit`` — decided entirely against the cached closure:
@@ -517,12 +818,66 @@ def insert_update(closure: jax.Array, u_slots: jax.Array,
     return impl(closure, bitset.pack_bits(mask), rows)
 
 
+def insert_update_tiled(closure: TiledClosure, u_slots: jax.Array,
+                        v_slots: jax.Array, accepted: jax.Array,
+                        update_impl: Optional[ClosureUpdateImpl] = None):
+    """The rank-B fold on the tiled layout: `insert_update` runs on the
+    tiles window (region-row operands) and the summary comes out of the
+    SAME fused pass — with no ``update_impl`` override the fold routes
+    through `kernels/ops.closure_update_tiled`, whose epilogue emits the
+    per-tile occupancy plane alongside the new tiles (an explicit
+    override, e.g. the row-sharded mesh impl, pays one `build_summary`
+    pass over the window instead).
+
+    Returns ``(closure', spilled)``: an accepted edge whose endpoint lies
+    past the window cannot fold into the tiles, so the whole fold is
+    skipped and ``spilled=True`` tells the caller to mark the cache dirty
+    (the next check rebuilds once the engine widens the window) — the
+    bits in a clean tiled cache are always exact."""
+    r = closure.region
+    capacity = closure.capacity
+    spill = jnp.any(accepted & ((u_slots >= r) | (v_slots >= r)))
+    uc = jnp.minimum(u_slots, r - 1)
+    vc = jnp.minimum(v_slots, r - 1)
+
+    def keep(t):
+        return t, closure.summary
+
+    if update_impl is None:
+        def fold(t):
+            from repro.kernels import ops as kernel_ops
+            occ_box = {}
+
+            def fused(cl, mask_packed, rows_packed):
+                out, occ = kernel_ops.closure_update_tiled(
+                    cl, mask_packed, rows_packed)
+                occ_box["occ"] = occ
+                return out
+
+            t2 = insert_update(t, uc, vc, accepted, fused)
+            return t2, summary_from_occ(occ_box["occ"], capacity)
+    else:
+        def fold(t):
+            t2 = insert_update(t, uc, vc, accepted, update_impl)
+            return t2, build_summary(t2, capacity)
+
+    tiles, summary = jax.lax.cond(spill | ~jnp.any(accepted), keep, fold,
+                                  closure.tiles)
+    return TiledClosure(tiles, summary), spill
+
+
 # -------------------------------------------------------------- validation
 
 def cache_matches_state(cache: ClosureCache, adj_packed: jax.Array,
                         matmul_impl: Optional[MatmulImpl] = None) -> jax.Array:
     """True iff a clean cache's closure equals the from-scratch closure of
     ``adj_packed`` (dirty caches vacuously match — their bits are not
-    trusted).  The invariant every incremental test asserts."""
+    trusted).  The invariant every incremental test asserts.  A tiled
+    cache additionally checks its occupancy summary against the tiles."""
     want = transitive_closure(adj_packed, matmul_impl)
-    return cache.dirty | jnp.all(cache.closure == want)
+    ok = jnp.all(dense_of(cache.closure) == want)
+    if is_tiled(cache.closure):
+        ok = ok & jnp.all(cache.closure.summary
+                          == build_summary(cache.closure.tiles,
+                                           cache.closure.capacity))
+    return cache.dirty | ok

@@ -252,15 +252,19 @@ def apply_op_batch_impl(state: DagState, op: jax.Array, a: jax.Array,
     `acyclic.acyclic_add_edges_impl`).
 
     ``cache`` threads the engine's incremental closure cache through the
-    linearization as the delta-commit pipeline: each delete phase
-    (RemoveVertex, then RemoveEdge) emits its adj-diff-exact `CacheDelta`
-    and commits it through `closure_cache.commit` — maintaining the cache
-    by affected-row re-derivation when the delete dispatch arm
+    linearization as the delta-commit pipeline: the two delete phases
+    (RemoveVertex, then RemoveEdge) emit adj-diff-exact `CacheDelta`s
+    which are coalesced (`CacheDelta.merge`) into ONE
+    `closure_cache.commit` against the post-removal adjacency — a mixed
+    add+delete batch pays a single repair pass.  The commit maintains the
+    cache by affected-row re-derivation when the delete dispatch arm
     (``prefer_repair_fn``; scan realized by ``closure_delete_impl``) says
     it pays, invalidating otherwise so the AddEdge phase's incremental
-    check lazily rebuilds in-step.  The per-phase commits (rather than one
-    batched diff) make recycled slots safe: a slot freed and re-added in
-    the same batch has its closure row/column repaired before reuse.  With
+    check lazily rebuilds in-step.  The single commit still lands before
+    AddEdge, so recycled slots stay safe: a slot freed and re-added in the
+    same batch has its closure row/column repaired before any new edge
+    consults it, and the repair re-derives rows from the final
+    post-removal adjacency, which is exact.  With
     ``cache`` the return gains the updated cache:
     (state, ok[, cache][, stats]); stats is the cycle-check + commit
     accounting (all-zero when ``acyclic=False`` and no repair ran).
@@ -289,17 +293,16 @@ def apply_op_batch_impl(state: DagState, op: jax.Array, a: jax.Array,
     else:
         state, r = remove_vertices(state, a, valid=op == REMOVE_VERTEX)
     res = jnp.where(op == REMOVE_VERTEX, r, res)
-    if cache is not None:
-        cache, st = commit_phase(cache, d_v)
-        commit_products += st["n_products"]
-        commit_rows += st["row_products"]
-        commit_repairs += st["n_repair"]
     state, r = add_vertices(state, a, valid=op == ADD_VERTEX)
     res = jnp.where(op == ADD_VERTEX, r, res)
     if cache is not None:
         state, r, d_e = remove_edges_delta(state, a, b,
                                            valid=op == REMOVE_EDGE)
-        cache, st = commit_phase(cache, d_e)
+        # one coalesced commit for the whole tick's delete work: vertex
+        # clears and edge removals repair in a single affected-row pass
+        # against the final post-removal adjacency (exact superset of the
+        # per-phase affected sets, so accept decisions are unchanged)
+        cache, st = commit_phase(cache, cc_mod.CacheDelta.merge(d_v, d_e))
         commit_products += st["n_products"]
         commit_rows += st["row_products"]
         commit_repairs += st["n_repair"]

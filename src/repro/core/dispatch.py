@@ -103,6 +103,20 @@ depth from the cache's measured repair-depth EMA once seeded (worst case
 is upstream of the removals).  ``use_delete_repair=False`` opts a policy
 out entirely (the PR-4 invalidate-always behavior, kept as the benchmark
 baseline for the delete-heavy serve rows).
+
+Occupancy pricing (tiled closure)
+---------------------------------
+With the tiled closure (`closure_cache.TiledClosure`) every cost above is
+priced against the LIVE window, not the capacity slab: the tiles span
+``region x region`` (the 32-aligned window confining all live slots), so a
+rebuild costs ``region * ceil(log2 region)`` rows and the repair-vs-rebuild
+break-even moves with the graph's actual extent — `DagEngine` passes
+``region`` wherever these formulas say ``capacity``.  ``region`` is a
+trace-time constant (it is the tiles' static shape), so the same
+``ceil_log2`` arithmetic applies unchanged.  For density-style decisions
+the block-occupancy summary gives an O(1) read (`occupied_tile_fraction`):
+one popcount over one bit per 32x32 tile, never a scan of the tiles
+themselves.
 """
 from __future__ import annotations
 
@@ -233,6 +247,19 @@ def prefer_delete_repair(n_affected, capacity: int, depth_hint=None,
     est = safety_factor * delete_repair_row_products(n_affected, capacity,
                                                      depth)
     return est <= closure_row_products(capacity)
+
+
+def occupied_tile_fraction(summary: jax.Array, region: int) -> jax.Array:
+    """Fraction of 32x32 closure tiles holding any reachability bit.
+
+    ``summary`` is the tiled closure's block-occupancy bitmap (one bit per
+    tile, tile-rows beyond the live region permanently zero); ``region``
+    the live window edge.  One popcount over the summary — no tile scan —
+    so occupancy-aware dispatch stays O(summary) like `mean_out_degree`
+    stays O(adjacency words).  jit-traceable."""
+    n_tiles = max((region // bitset.WORD) ** 2, 1)
+    occ = jnp.sum(bitset.popcount(summary)).astype(jnp.float32)
+    return occ / jnp.float32(n_tiles)
 
 
 def choose_scan_sharding(batch: int, capacity: int, n_devices: int) -> str:

@@ -215,6 +215,18 @@ class EngineConfig:
     # under jit shapes are static, so traced calls keep the report-and-drop
     # contract and the controller grows between ticks (`launch/serve.py`)
     auto_grow: bool = False
+    # closure-cache representation: "dense" keeps the uint32[C, C/32]
+    # slab; "tiled" stores 32x32-bit tiles confined to a growable region
+    # window plus a per-tile occupancy summary
+    # (`closure_cache.TiledClosure`) — closure bytes track the reachable
+    # set instead of paying C^2/8, and kernels skip empty tiles
+    closure_layout: str = "dense"
+    # initial tiles-window size for closure_layout="tiled" (0 = derived:
+    # min(capacity, 1024)).  Eager calls widen the window automatically;
+    # compiled loops should pre-size it to their working set — an edge
+    # past the window under jit degrades to dirty + exact fallback
+    # checks, never to wrong answers
+    closure_region: int = 0
 
     @property
     def n_devices(self) -> int:
@@ -282,7 +294,9 @@ class DagEngine:
                policy: Optional[dispatch.DispatchPolicy] = None,
                mesh=None, closure_update_impl=None,
                closure_delete_impl=None,
-               auto_grow: bool = False) -> "DagEngine":
+               auto_grow: bool = False,
+               closure_layout: str = "dense",
+               closure_region: int = 0) -> "DagEngine":
         """Create an empty engine.  ``policy`` overrides ``method``; with
         ``policy=None`` the method string resolves to `CostModelPolicy`
         ("auto", the default everywhere) or `FixedPolicy`
@@ -300,6 +314,10 @@ class DagEngine:
         ``auto_grow=True`` makes eager mutating calls react to the
         ``n_overflow`` backpressure signal by doubling capacity (via
         `grow`) and re-running the call instead of dropping adds.
+        ``closure_layout="tiled"`` stores the closure cache as 32x32-bit
+        tiles in a growable region window plus a per-tile occupancy
+        summary (O(reachable) closure bytes; ``closure_region`` pre-sizes
+        the window for compiled loops).
         """
         if backend not in BACKENDS:
             raise ValueError(
@@ -314,13 +332,28 @@ class DagEngine:
         else:
             mesh = None
             validate_capacity(capacity, backend="local")
+        if closure_layout not in ("dense", "tiled"):
+            raise ValueError(
+                f"closure_layout must be 'dense' or 'tiled', got "
+                f"{closure_layout!r}")
         policy = dispatch.policy_for_method(method, policy)
         method = dispatch.method_name(policy)
         state = dag_mod.new_state(capacity)
         # a fresh engine's cache is exact: the empty graph's strict closure
         # is all-zeros, so the session starts clean (O(B) cycle checks from
         # the first tick)
-        cache = closure_cache.empty_cache(capacity)
+        if closure_layout == "tiled":
+            region = closure_region
+            if backend == "sharded":
+                # tiles are row-sharded like the dense slab: keep the
+                # window on the mesh's capacity grid
+                align = bitset.WORD * int(mesh.devices.size)
+                want = region or closure_cache.default_region(capacity)
+                region = min(capacity, ((want + align - 1) // align) * align)
+            cache = closure_cache.empty_tiled_cache(capacity, region)
+            closure_region = cache.closure.region
+        else:
+            cache = closure_cache.empty_cache(capacity)
         if backend == "sharded":
             state = sharded_mod.shard_state(state, mesh)
             cache = sharded_mod.shard_cache(cache, mesh)
@@ -330,7 +363,9 @@ class DagEngine:
                               mesh=mesh,
                               closure_update_impl=closure_update_impl,
                               closure_delete_impl=closure_delete_impl,
-                              auto_grow=auto_grow)
+                              auto_grow=auto_grow,
+                              closure_layout=closure_layout,
+                              closure_region=closure_region)
         n_dev = config.n_devices
         return cls(state, jnp.zeros((n_dev,), jnp.float32), cache, config)
 
@@ -346,20 +381,28 @@ class DagEngine:
         ema = jnp.zeros((config.n_devices,), jnp.float32) \
             if depth_ema is None else depth_ema
         if cache is None:
-            cache = closure_cache.empty_cache(config.capacity, dirty=True)
+            if getattr(config, "closure_layout", "dense") == "tiled":
+                cache = closure_cache.empty_tiled_cache(
+                    config.capacity, config.closure_region, dirty=True)
+            else:
+                cache = closure_cache.empty_cache(config.capacity,
+                                                  dirty=True)
         return cls(state, ema, cache, config, epoch)
 
     def refresh_cache(self) -> "DagEngine":
         """Rebuild the closure cache from the committed graph iff dirty
         (a traced ``lax.cond``) — the explicit form of the lazy rebuild,
-        for pre-warming a session before a latency-sensitive window."""
+        for pre-warming a session before a latency-sensitive window.  On
+        the tiled layout the window is first widened (host-side) to cover
+        every committed edge, so the rebuild always lands clean."""
+        eng = self._region_synced()
         closure, _ = closure_cache.refresh_closure(
-            self.cache.closure, self.cache.dirty, self.state.adj,
-            self.config.matmul_impl)
-        return DagEngine(self.state, self.depth_ema,
+            eng.cache.closure, eng.cache.dirty, eng.state.adj,
+            eng.config.matmul_impl)
+        return DagEngine(eng.state, eng.depth_ema,
                          ClosureCache(closure, jnp.asarray(False),
-                                      self.cache.repair_ema),
-                         self.config, self.epoch)
+                                      eng.cache.repair_ema),
+                         eng.config, eng.epoch)
 
     def snapshot(self) -> "snapshot_view.EngineSnapshot":
         """The versioned wait-free read view of this session — a frozen
@@ -373,10 +416,11 @@ class DagEngine:
         lazily here (a traced ``lax.cond`` rebuild, exactly
         `refresh_cache`); call `refresh_cache` first to also keep the
         rebuilt cache on the writer's side."""
+        eng = self._region_synced()
         closure, _ = closure_cache.refresh_closure(
-            self.cache.closure, self.cache.dirty, self.state.adj,
-            self.config.matmul_impl)
-        return snapshot_view.EngineSnapshot(self.epoch, self.state, closure)
+            eng.cache.closure, eng.cache.dirty, eng.state.adj,
+            eng.config.matmul_impl)
+        return snapshot_view.EngineSnapshot(eng.epoch, eng.state, closure)
 
     def with_options(self, *, method: Optional[str] = None,
                      subbatches: Optional[int] = None,
@@ -437,6 +481,136 @@ class DagEngine:
         config = dataclasses.replace(cfg, capacity=new_capacity)
         # the epoch rides through: growth re-embeds the SAME graph version
         return DagEngine(state, self.depth_ema, cache, config, self.epoch)
+
+    # ------------------------------------------------ tiled window sizing
+
+    @property
+    def closure_region(self) -> Optional[int]:
+        """Live tiles-window size (None on the dense layout)."""
+        return self.cache.closure.region \
+            if closure_cache.is_tiled(self.cache.closure) else None
+
+    def _region_align(self) -> int:
+        return bitset.WORD * self.config.n_devices \
+            if self.config.backend == "sharded" else bitset.WORD
+
+    def _with_region(self, new_region: int) -> "DagEngine":
+        """Engine with the tiles window widened to ``new_region`` (no-op
+        on dense or when already wide enough).  Pure zero-padding of the
+        tiles leaf — closure bits, dirty flag, and the epoch ride
+        through."""
+        closure = self.cache.closure
+        if not closure_cache.is_tiled(closure):
+            return self
+        align = self._region_align()
+        nr = min(self.capacity,
+                 ((int(new_region) + align - 1) // align) * align)
+        if nr <= closure.region:
+            return self
+        grown = closure_cache.grow_region(closure, nr)
+        cache = ClosureCache(grown, self.cache.dirty, self.cache.repair_ema)
+        if self.config.backend == "sharded":
+            from repro.core import sharded as sharded_mod
+            cache = sharded_mod.shard_cache(cache, self.config.mesh)
+        return DagEngine(self.state, self.depth_ema, cache, self.config,
+                         self.epoch)
+
+    def grow_region(self, new_region: int) -> "DagEngine":
+        """Widen the tiled closure window so slots below ``new_region``
+        fold into the cache (identity on dense, or when already wide
+        enough).  Compiled loops call this up front to pre-size the
+        window for their working set."""
+        return self._with_region(new_region)
+
+    def _live_high_water(self) -> Optional[int]:
+        """max live slot index + 1, host-side (None under tracing)."""
+        if isinstance(self.state.alive, jax.core.Tracer):
+            return None
+        import numpy as np
+        live = np.nonzero(np.asarray(self.state.alive))[0]
+        return int(live.max()) + 1 if live.size else 0
+
+    def _pre_widened(self, n_new_slots: int) -> "DagEngine":
+        """Eagerly widen the tiles window before a call that may allocate
+        ``n_new_slots`` more slots (slots are lowest-free-first, so the
+        post-call high-water is bounded by live high-water + n_new).
+        Host-side only: under jit the spill guards keep answers exact and
+        the between-ticks controller widens instead."""
+        if not closure_cache.is_tiled(self.cache.closure):
+            return self
+        hw = self._live_high_water()
+        if hw is None:
+            return self
+        need = hw + int(n_new_slots)
+        region = self.cache.closure.region
+        if need <= region:
+            return self
+        return self._with_region(max(2 * region, need))
+
+    def _region_synced(self) -> "DagEngine":
+        """Engine whose tiles window covers every committed adjacency bit
+        (host-side; identity on dense, under tracing, or when already
+        confined) — the precondition for a tiled cache refresh."""
+        closure = self.cache.closure
+        if not closure_cache.is_tiled(closure) \
+                or isinstance(self.state.adj, jax.core.Tracer):
+            return self
+        import numpy as np
+        adj = np.asarray(self.state.adj)
+        region = closure.region
+        if not (adj[region:, :].any() or adj[:, region // 32:].any()):
+            return self
+        rows = np.nonzero(adj.any(axis=1))[0]
+        cols = np.nonzero(adj.any(axis=0))[0]
+        need = 0
+        if rows.size:
+            need = int(rows.max()) + 1
+        if cols.size:
+            need = max(need, (int(cols.max()) + 1) * 32)
+        return self._with_region(need)
+
+    def with_closure_layout(self, layout: str,
+                            region: int = 0) -> "DagEngine":
+        """Re-represent the closure cache in ``layout`` ("dense" |
+        "tiled") without touching the graph or the epoch — the
+        dense-era-checkpoint forward-restore path.  Host-side only (the
+        minimal confining window is computed from the data)."""
+        cfg = self.config
+        current = getattr(cfg, "closure_layout", "dense")
+        if layout == current:
+            return self
+        cache = self.cache
+        if layout == "tiled":
+            import numpy as np
+            dense = np.asarray(closure_cache.dense_of(cache.closure))
+            adj = np.asarray(self.state.adj)
+            occ = dense | adj
+            rows = np.nonzero(occ.any(axis=1))[0]
+            cols = np.nonzero(occ.any(axis=0))[0]
+            need = max(int(region), closure_cache.TILE)
+            if rows.size:
+                need = max(need, int(rows.max()) + 1)
+            if cols.size:
+                need = max(need, (int(cols.max()) + 1) * 32)
+            align = self._region_align()
+            need = min(cfg.capacity, ((need + align - 1) // align) * align)
+            tiled = closure_cache.tiled_of(jnp.asarray(dense), need)
+            new_cache = ClosureCache(tiled, cache.dirty, cache.repair_ema)
+            config = dataclasses.replace(cfg, closure_layout="tiled",
+                                         closure_region=tiled.region)
+        elif layout == "dense":
+            new_cache = ClosureCache(closure_cache.dense_of(cache.closure),
+                                     cache.dirty, cache.repair_ema)
+            config = dataclasses.replace(cfg, closure_layout="dense",
+                                         closure_region=0)
+        else:
+            raise ValueError(
+                f"closure_layout must be 'dense' or 'tiled', got {layout!r}")
+        if cfg.backend == "sharded":
+            from repro.core import sharded as sharded_mod
+            new_cache = sharded_mod.shard_cache(new_cache, cfg.mesh)
+        return DagEngine(self.state, self.depth_ema, new_cache, config,
+                         self.epoch)
 
     def _grown_for_overflow(self, result: "OpResult") -> Optional["DagEngine"]:
         """Under ``auto_grow``, the PRE-call engine doubled until the adds
@@ -549,7 +723,11 @@ class DagEngine:
         hook = getattr(policy, "prefer_delete_repair", None)
         if hook is None:
             return None
-        capacity = self.config.capacity
+        # tiled caches rebuild inside their window, so the repair-vs-
+        # rebuild break-even prices against the live window's rows (the
+        # occupancy bound), not the full capacity
+        region = self.closure_region
+        capacity = self.config.capacity if region is None else region
 
         def prefer(n_affected, depth_hint):
             return hook(n_affected, capacity, depth_hint=depth_hint)
@@ -613,16 +791,19 @@ class DagEngine:
         ok=False and count into ``result.n_overflow`` (unless ``auto_grow``
         and the call is eager, in which case capacity doubles until the
         batch fits and the call transparently re-runs)."""
-        state, ok = dag_mod.add_vertices(self.state, keys, valid=valid)
-        res = OpResult(ok, self._overflow_delta(state),
-                       ReachStats.zeros(self.config.n_devices))
-        grown = self._grown_for_overflow(res)
+        # eagerly widen a tiled closure window so this batch's slots can
+        # fold into the cache (no-op on dense and under jit)
+        eng = self._pre_widened(jnp.asarray(keys).shape[0])
+        state, ok = dag_mod.add_vertices(eng.state, keys, valid=valid)
+        res = OpResult(ok, eng._overflow_delta(state),
+                       ReachStats.zeros(eng.config.n_devices))
+        grown = eng._grown_for_overflow(res)
         if grown is not None:
             # immutability makes the retry exact: re-apply the original
             # batch to the grown PRE-call engine
             return grown.add_vertices(keys, valid=valid)
         # vertex adds never touch adjacency: a clean cache stays clean
-        return self._with_state(state, self.cache), res
+        return eng._with_state(state, eng.cache), res
 
     def remove_vertices(self, keys, valid=None):
         """RemoveVertex batch (logical+physical removal, incident edges
@@ -709,7 +890,7 @@ class DagEngine:
             def read(_):
                 f_slot, f_found = dag_mod.lookup_slots(self.state, from_keys)
                 t_slot, t_found = dag_mod.lookup_slots(self.state, to_keys)
-                return f_found & t_found & bitset.bit_get(
+                return f_found & t_found & closure_cache.closure_bit_get(
                     self.cache.closure, f_slot, t_slot)
 
             def scan(_):
@@ -769,6 +950,10 @@ class DagEngine:
         DAG) cycle-checks the ADD_EDGE rows through the dispatch policy;
         ``acyclic=False`` degrades them to plain directed-graph inserts
         (the paper's unconstrained-graph baseline)."""
+        if not isinstance(batch.op, jax.core.Tracer):
+            import numpy as np
+            n_adds = int(np.sum(np.asarray(batch.op) == ADD_VERTEX))
+            self = self._pre_widened(n_adds)
         cfg = self.config
         method, prefer, partial_impl = self._dispatch_hooks(batch.size)
         common = dict(acyclic=acyclic, subbatches=cfg.subbatches,

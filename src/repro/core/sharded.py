@@ -56,16 +56,34 @@ def shard_state(state: DagState, mesh: Mesh) -> DagState:
     )
 
 
+def shard_closure(closure, mesh: Mesh):
+    """Place a packed closure on the mesh: dense slabs (and tiled
+    windows) row-shard like the adjacency; a tiled closure's occupancy
+    summary is tiny (one bit per 32x32 tile) and replicates, so the
+    summary-skip read never pays a collective.  The engine keeps tiled
+    windows aligned to ``32 * n_devices`` (`DagEngine._region_align`) so
+    the row split stays even."""
+    from repro.core import closure_cache as cc_mod
+
+    row = NamedSharding(mesh, P(AXIS, None))
+    if cc_mod.is_tiled(closure):
+        return cc_mod.TiledClosure(
+            tiles=jax.device_put(closure.tiles, row),
+            summary=jax.device_put(closure.summary,
+                                   NamedSharding(mesh, P())),
+        )
+    return jax.device_put(closure, row)
+
+
 def shard_cache(cache, mesh: Mesh):
     """Place an incremental closure cache on the mesh: the packed closure
-    rows follow the adjacency's row sharding, the scalars (dirty flag,
-    repair-depth EMA) replicate."""
+    rows follow the adjacency's row sharding (`shard_closure`), the
+    scalars (dirty flag, repair-depth EMA) replicate."""
     from repro.core.closure_cache import ClosureCache
 
     rep = NamedSharding(mesh, P())
     return ClosureCache(
-        closure=jax.device_put(cache.closure,
-                               NamedSharding(mesh, P(AXIS, None))),
+        closure=shard_closure(cache.closure, mesh),
         dirty=jax.device_put(cache.dirty, rep),
         repair_ema=jax.device_put(cache.repair_ema, rep),
     )
@@ -97,7 +115,7 @@ def shard_replica(mesh: Mesh, replica):
     rep = NamedSharding(mesh, P())
     return Replica(jax.device_put(replica.epoch, rep),
                    jax.device_put(replica.adj, row),
-                   jax.device_put(replica.closure, row),
+                   shard_closure(replica.closure, mesh),
                    closure_update_impl(mesh), closure_delete_impl(mesh))
 
 

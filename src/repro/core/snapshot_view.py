@@ -33,7 +33,6 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core import bitset
 from repro.core import dag as dag_mod
 
 
@@ -50,10 +49,12 @@ class EngineSnapshot:
     __slots__ = ("epoch", "state", "closure")
 
     def __init__(self, epoch: jax.Array, state: dag_mod.DagState,
-                 closure: jax.Array):
+                 closure):
         self.epoch = epoch      # int32 scalar: engine version at capture
         self.state = state      # DagState slab view (keys/alive/adj)
-        self.closure = closure  # uint32[C, W]: clean packed strict closure
+        # clean packed strict closure: dense uint32[C, W] slab, or a
+        # closure_cache.TiledClosure (region-windowed tiles + summary)
+        self.closure = closure
 
     # ------------------------------------------------------------- pytree
 
@@ -90,10 +91,11 @@ class EngineSnapshot:
         ``with_stats=True`` also returns a `core/engine.ReachStats` whose
         ``n_products``/``row_products`` are structurally zero (there is no
         fallback arm to fall into), pinning the zero-matmul contract."""
+        from repro.core import closure_cache  # circular at import time
         f_slot, f_found = dag_mod.lookup_slots(self.state, from_keys)
         t_slot, t_found = dag_mod.lookup_slots(self.state, to_keys)
-        hit = f_found & t_found & bitset.bit_get(self.closure, f_slot,
-                                                 t_slot)
+        hit = f_found & t_found & closure_cache.closure_bit_get(
+            self.closure, f_slot, t_slot)
         if not with_stats:
             return hit
         from repro.core.engine import ReachStats  # circular at import time
@@ -109,5 +111,7 @@ class EngineSnapshot:
         """A committed snapshot is acyclic by construction (the writer
         cycle-checks every insert); answered off the closure diagonal in
         O(C) bit reads rather than a matmul fixpoint."""
+        from repro.core import closure_cache  # circular at import time
         idx = jnp.arange(self.capacity, dtype=jnp.int32)
-        return ~jnp.any(bitset.bit_get(self.closure, idx, idx))
+        return ~jnp.any(closure_cache.closure_bit_get(self.closure, idx,
+                                                      idx))

@@ -181,9 +181,8 @@ def save_engine_checkpoint(directory: str, step: int, engine) -> str:
     return save_checkpoint(directory, step, engine)
 
 
-def _saved_capacity(directory: str, step: Optional[int]) -> Optional[int]:
-    """Capacity a checkpoint was saved at: leaf 0 of the engine pytree is
-    ``state.keys`` (int32[C]), so the manifest's first shape names it."""
+def _engine_manifest(directory: str, step: Optional[int]) -> Optional[dict]:
+    """The manifest dict of an engine checkpoint, or None if unreadable."""
     if step is None:
         step = latest_step(directory)
         if step is None:
@@ -191,9 +190,18 @@ def _saved_capacity(directory: str, step: Optional[int]) -> Optional[int]:
     path = os.path.join(directory, f"step_{step:08d}", "manifest.json")
     try:
         with open(path) as f:
-            manifest = json.load(f)
+            return json.load(f)
+    except (OSError, ValueError):
+        return None
+
+
+def _saved_capacity(directory: str, step: Optional[int]) -> Optional[int]:
+    """Capacity a checkpoint was saved at: leaf 0 of the engine pytree is
+    ``state.keys`` (int32[C]), so the manifest's first shape names it."""
+    manifest = _engine_manifest(directory, step)
+    try:
         return int(manifest["shapes"][0][0])
-    except (OSError, KeyError, IndexError, ValueError):
+    except (TypeError, KeyError, IndexError, ValueError):
         return None
 
 
@@ -210,33 +218,72 @@ def restore_engine_checkpoint(directory: str, like, step: Optional[int] = None,
     capacity and migrated up through `DagEngine.grow` — bit-for-bit
     identical to growing before the save (pinned in tests/test_grow.py).
 
+    The closure layout is detected from the manifest (a tiled engine has
+    one extra leaf — tiles + summary instead of the dense slab) and the
+    checkpoint restores FORWARD across layouts: a dense-era checkpoint
+    restores into a tiled ``like`` by restoring dense at the saved
+    capacity, growing, then re-representing through
+    `DagEngine.with_closure_layout` — and vice versa — so retiring the
+    dense layout never orphans old checkpoints.
+
     Returns the restored engine; a session resumed from it continues
     identically — including the closure cache, so no warm-up rebuild is
     paid after restart (round-trip pinned in tests/test_closure_cache.py).
     """
     like_capacity = getattr(like, "capacity", None)
-    saved = _saved_capacity(directory, step)
-    if like_capacity is not None and saved is not None \
-            and saved != like_capacity:
-        if saved > like_capacity:
-            raise ValueError(
-                f"checkpoint capacity {saved} exceeds the target engine's "
-                f"{like_capacity}; restore into an engine of capacity >= "
-                f"{saved}")
-        import dataclasses
+    manifest = _engine_manifest(directory, step)
+    try:
+        saved = int(manifest["shapes"][0][0])
+    except (TypeError, KeyError, IndexError, ValueError):
+        saved = None
+    if like_capacity is None or saved is None:
+        return restore_checkpoint(directory, like, step=step,
+                                  shardings=shardings)
+    if saved > like_capacity:
+        raise ValueError(
+            f"checkpoint capacity {saved} exceeds the target engine's "
+            f"{like_capacity}; restore into an engine of capacity >= "
+            f"{saved}")
 
-        from repro.core import closure_cache as cc_mod
-        from repro.core import dag as dag_mod
-        small_cfg = dataclasses.replace(like.config, capacity=saved)
-        small = type(like)(dag_mod.new_state(saved), like.depth_ema,
-                           cc_mod.empty_cache(saved), small_cfg)
-        restored = restore_checkpoint(directory, small, step=step)
-        grown = restored.grow(like_capacity)
-        if shardings is not None:
-            grown = jax.tree.map(jax.device_put, grown, shardings)
-        return grown
-    return restore_checkpoint(directory, like, step=step,
-                              shardings=shardings)
+    import dataclasses
+
+    from repro.core import closure_cache as cc_mod
+    from repro.core import dag as dag_mod
+    like_tiled = cc_mod.is_tiled(like.cache.closure)
+    n_state = len(jax.tree_util.tree_leaves(like.state))
+    n_like = len(jax.tree_util.tree_leaves(like))
+    dense_leaves = n_like - (1 if like_tiled else 0)
+    saved_tiled = int(manifest.get("n_leaves", dense_leaves)) \
+        == dense_leaves + 1
+    if saved == like_capacity and saved_tiled == like_tiled:
+        return restore_checkpoint(directory, like, step=step,
+                                  shardings=shardings)
+    # rebuild a restore template in the SAVED capacity and layout, then
+    # migrate up (grow) and across (with_closure_layout) to match ``like``
+    small_cfg = dataclasses.replace(
+        like.config, capacity=saved,
+        closure_layout="tiled" if saved_tiled else "dense")
+    if saved_tiled:
+        # the tiles leaf sits right after the state leaves + depth EMA;
+        # its first dim is the saved window
+        region = int(manifest["shapes"][n_state + 1][0])
+        small_cfg = dataclasses.replace(small_cfg, closure_region=region)
+        cache = cc_mod.empty_tiled_cache(saved, region)
+    else:
+        small_cfg = dataclasses.replace(small_cfg, closure_region=0)
+        cache = cc_mod.empty_cache(saved)
+    small = type(like)(dag_mod.new_state(saved), like.depth_ema, cache,
+                       small_cfg)
+    restored = restore_checkpoint(directory, small, step=step)
+    grown = restored.grow(like_capacity) if saved != like_capacity \
+        else restored
+    if saved_tiled != like_tiled:
+        grown = grown.with_closure_layout(
+            "tiled" if like_tiled else "dense",
+            region=getattr(like.config, "closure_region", 0))
+    if shardings is not None:
+        grown = jax.tree.map(jax.device_put, grown, shardings)
+    return grown
 
 
 class CheckpointManager:

@@ -20,6 +20,16 @@ Layout: r (C, C/32) uint32, s (C, C/32) uint32, affected (1, C/32) uint32
 row mask -> out (C, C/32) uint32.  Blocking mirrors `bitmm.py`: full-K
 panels, grid over (C/bm, C/bn); bm stays a multiple of 32 so the packed
 row-mask blocks stay word-aligned.
+
+Tiled variant (`closure_delete_tiled`): operands are the tiled closure's
+REGION window (R, R/32) and block (i, j) consults occupancy instead of
+`pl.when` on full-width rows alone — it runs its MXU product only when
+row band i has an affected AND occupied row and column band j of the hop
+matrix carries any bit (empty bands contribute an empty product, so the
+block passes the old rows through untouched).  Each block emits the
+per-32x32-tile occupancy of its OUTPUT in the same fused pass, so repair
+hops clear summary bits (a re-derived row that lost its reach empties its
+tiles) without a second read.
 """
 from __future__ import annotations
 
@@ -86,3 +96,94 @@ def closure_delete(r_packed: jax.Array, s_packed: jax.Array,
         out_shape=jax.ShapeDtypeStruct((c, w), jnp.uint32),
         interpret=interpret,
     )(r_packed, r_packed, s_packed, affected_packed.reshape(1, w))
+
+
+# ------------------------------------------------------------ tiled variant
+
+def _tile_occupancy(block: jax.Array) -> jax.Array:
+    """uint32 (bm, bwn) packed block -> uint32 (bm/32, bwn) 0/1 per
+    32x32-bit tile."""
+    bm, bwn = block.shape
+    return jnp.any(block.reshape(bm // WORD, WORD, bwn) != 0,
+                   axis=1).astype(jnp.uint32)
+
+
+def _closure_delete_tiled_kernel(r_blk_ref, r_row_ref, s_ref, aff_ref,
+                                 act_ref, out_ref, occ_ref):
+    aff = _unpack_f32(aff_ref[...]).reshape(-1) > 0   # (bm,) row mask
+    old = r_blk_ref[...]                              # (bm, bwn) packed
+
+    @pl.when(act_ref[0, 0] > 0)
+    def _():
+        lhs = _unpack_f32(r_row_ref[...])             # (bm, R)
+        rhs = _unpack_f32(s_ref[...])                 # (R, bn)
+        acc = jax.lax.dot_general(
+            lhs, rhs, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)       # (bm, bn) on the MXU
+        new = jnp.where(aff[:, None], old | _pack_bool(acc > 0), old)
+        out_ref[...] = new
+        occ_ref[...] = _tile_occupancy(new)
+
+    @pl.when(act_ref[0, 0] == 0)
+    def _():
+        out_ref[...] = old
+        occ_ref[...] = _tile_occupancy(old)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
+def closure_delete_tiled(r_packed: jax.Array, s_packed: jax.Array,
+                         affected_packed: jax.Array, *, bm: int = 128,
+                         bn: int = 256, interpret: bool = False):
+    """One masked repair hop on a tiles window with occupancy-aware block
+    skip + fused occupancy output.
+
+    r (R, R/32) x s (R, R/32) masked by affected (R/32,)
+    -> (r' (R, R/32), occ (R/32, R/32) uint32 0/1 per tile of r').
+    """
+    r, w = r_packed.shape
+    r2, w2 = s_packed.shape
+    assert r2 == r and w2 == w and w * WORD == r, (
+        r_packed.shape, s_packed.shape)
+    assert affected_packed.shape == (w,), affected_packed.shape
+    bm = min(bm, r)
+    bn = min(bn, r)
+    if r % bm != 0:
+        bm = r
+    if r % bn != 0:
+        bn = r  # regions only guarantee 32-alignment, not 256
+    assert r % bm == 0 and r % bn == 0
+    assert bm % WORD == 0 and bn % WORD == 0
+    bwn = bn // WORD
+    grid = (r // bm, r // bn)
+    # occupancy-aware block activity (one O(words) reduction per band, no
+    # matmul): row band i must hold an affected row that carries any bit
+    # (empty rows have an empty product); column band j of the hop matrix
+    # must carry any bit (else the product panel is empty and the block
+    # passes through)
+    from repro.core import bitset
+    aff_rows = bitset.unpack_bits(affected_packed)                 # (R,)
+    row_live = jnp.any(r_packed != 0, axis=1) & aff_rows           # (R,)
+    rowact = jnp.any(row_live.reshape(grid[0], bm), axis=1)
+    colact = jnp.any(s_packed.reshape(r, grid[1], bwn) != 0, axis=(0, 2))
+    act = (rowact[:, None] & colact[None, :]).astype(jnp.int32)
+    out, occ = pl.pallas_call(
+        _closure_delete_tiled_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bwn), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, w), lambda i, j: (i, 0)),
+            pl.BlockSpec((r, bwn), lambda i, j: (0, j)),
+            pl.BlockSpec((1, bm // WORD), lambda i, j: (0, i)),
+            pl.BlockSpec((1, 1), lambda i, j: (i, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, bwn), lambda i, j: (i, j)),
+            pl.BlockSpec((bm // WORD, bwn), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((r, w), jnp.uint32),
+            jax.ShapeDtypeStruct((r // WORD, w), jnp.uint32),
+        ],
+        interpret=interpret,
+    )(r_packed, r_packed, s_packed, affected_packed.reshape(1, w), act)
+    return out, occ

@@ -19,6 +19,16 @@ Layout: closure (C, C/32) uint32, mask (C, B/32) uint32 (B = padded batch,
 a multiple of 32), rows (B, C/32) uint32 -> out (C, C/32) uint32.
 Blocking mirrors `bitmm.py`: full-K panels (K = B is small — the candidate
 batch), grid over (C/bm, C/bn).
+
+Tiled variant (`closure_update_tiled`): the operand is the tiled closure's
+REGION window (R, R/32) — `core/closure_cache.TiledClosure` — and the grid
+block (i, j) consults a precomputed block-activity bitmap instead of
+`pl.when` on full-width rows: block (i, j) runs its MXU product only when
+mask row-band i AND rows column-band j both carry bits (one O(words)
+reduction each, no matmul).  Inactive blocks pass the old tiles through.
+Every block also emits the per-32x32-tile occupancy of its OUTPUT in the
+same fused pass — the summary bits are set (and, for the delete kernel,
+cleared) without a second read of the tiles.
 """
 from __future__ import annotations
 
@@ -73,3 +83,92 @@ def closure_update(closure_packed: jax.Array, mask_packed: jax.Array,
         out_shape=jax.ShapeDtypeStruct((c, w), jnp.uint32),
         interpret=interpret,
     )(closure_packed, mask_packed, rows_packed)
+
+
+# ------------------------------------------------------------ tiled variant
+
+def _tile_occupancy(block: jax.Array) -> jax.Array:
+    """uint32 (bm, bwn) packed block -> uint32 (bm/32, bwn) 0/1 per
+    32x32-bit tile (tile (ti, tj) = rows ti*32..ti*32+31 of word tj)."""
+    bm, bwn = block.shape
+    return jnp.any(block.reshape(bm // WORD, WORD, bwn) != 0,
+                   axis=1).astype(jnp.uint32)
+
+
+def _closure_update_tiled_kernel(closure_ref, mask_ref, rows_ref, act_ref,
+                                 out_ref, occ_ref):
+    old = closure_ref[...]                            # (bm, bwn) packed
+
+    @pl.when(act_ref[0, 0] > 0)
+    def _():
+        m = _unpack_f32(mask_ref[...])                # (bm, B)
+        r = _unpack_f32(rows_ref[...])                # (B, bn)
+        acc = jax.lax.dot_general(
+            m, r, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)       # (bm, bn) on the MXU
+        new = old | _pack_bool(acc > 0)
+        out_ref[...] = new
+        occ_ref[...] = _tile_occupancy(new)
+
+    @pl.when(act_ref[0, 0] == 0)
+    def _():
+        out_ref[...] = old
+        occ_ref[...] = _tile_occupancy(old)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
+def closure_update_tiled(tiles_packed: jax.Array, mask_packed: jax.Array,
+                         rows_packed: jax.Array, *, bm: int = 128,
+                         bn: int = 256, interpret: bool = False):
+    """Rank-B fold on a tiles window with block skip + fused occupancy.
+
+    tiles (R, R/32) | mask (R, B/32) x rows (B, R/32)
+    -> (tiles' (R, R/32), occ (R/32, R/32) uint32 0/1 per tile).
+
+    ``occ`` is the per-tile occupancy of the OUTPUT — pack it with
+    `core/bitset.pack_bits` (or `closure_cache.summary_from_occ`) to get
+    the block-occupancy summary with no second pass over the tiles.
+    """
+    r, w = tiles_packed.shape
+    r2, wb = mask_packed.shape
+    b, w2 = rows_packed.shape
+    assert r2 == r and w2 == w and wb * WORD == b and w * WORD == r, (
+        tiles_packed.shape, mask_packed.shape, rows_packed.shape)
+    bm = min(bm, r)
+    bn = min(bn, r)
+    if r % bm != 0:
+        bm = r
+    if r % bn != 0:
+        bn = r  # regions only guarantee 32-alignment, not 256
+    assert r % bm == 0 and r % bn == 0
+    assert bm % WORD == 0 and bn % WORD == 0
+    bwn = bn // WORD
+    grid = (r // bm, r // bn)
+    # block activity, one O(words) reduction per band — no matmul: row
+    # band i is live iff its mask block carries any select bit, column
+    # band j iff the contributed rows carry any bit there
+    rowact = jnp.any(
+        mask_packed.reshape(grid[0], bm, wb) != 0, axis=(1, 2))
+    colact = jnp.any(
+        rows_packed.reshape(b, grid[1], bwn) != 0, axis=(0, 2))
+    act = (rowact[:, None] & colact[None, :]).astype(jnp.int32)
+    out, occ = pl.pallas_call(
+        _closure_update_tiled_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bwn), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, wb), lambda i, j: (i, 0)),
+            pl.BlockSpec((b, bwn), lambda i, j: (0, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (i, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, bwn), lambda i, j: (i, j)),
+            pl.BlockSpec((bm // WORD, bwn), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((r, w), jnp.uint32),
+            jax.ShapeDtypeStruct((r // WORD, w), jnp.uint32),
+        ],
+        interpret=interpret,
+    )(tiles_packed, mask_packed, rows_packed, act)
+    return out, occ

@@ -64,6 +64,36 @@ def closure_delete(r_packed, s_packed, affected_packed, *,
         interpret=impl == "pallas_interpret")
 
 
+def closure_update_tiled(tiles_packed, mask_packed, rows_packed, *,
+                         impl: str = "auto"):
+    """Fused rank-B fold on a tiled-closure region window with
+    block-activity skip; returns ``(tiles', occ)`` where ``occ`` is the
+    output's per-32x32-tile occupancy, emitted in the same pass (pack it
+    into the summary with `closure_cache.summary_from_occ`)."""
+    impl = _resolve(impl)
+    if impl == "ref":
+        return _ref.closure_update_tiled_ref(tiles_packed, mask_packed,
+                                             rows_packed)
+    return _closure_update.closure_update_tiled(
+        tiles_packed, mask_packed, rows_packed,
+        interpret=impl == "pallas_interpret")
+
+
+def closure_delete_tiled(r_packed, s_packed, affected_packed, *,
+                         impl: str = "auto"):
+    """Fused delete-repair hop on a tiled-closure region window with
+    occupancy-aware block skip; returns ``(r', occ)`` with the output's
+    per-tile occupancy emitted in the same pass — repair hops clear
+    summary bits without a second read of the tiles."""
+    impl = _resolve(impl)
+    if impl == "ref":
+        return _ref.closure_delete_tiled_ref(r_packed, s_packed,
+                                             affected_packed)
+    return _closure_delete.closure_delete_tiled(
+        r_packed, s_packed, affected_packed,
+        interpret=impl == "pallas_interpret")
+
+
 def embedding_bag(table, idx, weights, *, impl: str = "auto"):
     """Weighted embedding-bag reduce (recsys hot path)."""
     impl = _resolve(impl)

@@ -45,6 +45,32 @@ def closure_delete_ref(r_packed: jax.Array, s_packed: jax.Array,
     return jnp.where(aff[:, None], r_packed | prod, r_packed)
 
 
+def tile_occupancy_ref(tiles_packed: jax.Array) -> jax.Array:
+    """Per-32x32-tile occupancy of a packed bit matrix: uint32 (R, R/32)
+    -> uint32 (R/32, R/32) of 0/1 (tile (ti, tj) covers rows ti*32..+31 of
+    word column tj).  The reference for the occupancy plane the tiled
+    kernels emit in their fused epilogue."""
+    r, wr = tiles_packed.shape
+    return jnp.any(tiles_packed.reshape(r // 32, 32, wr) != 0,
+                   axis=1).astype(jnp.uint32)
+
+
+def closure_update_tiled_ref(tiles_packed: jax.Array, mask_packed: jax.Array,
+                             rows_packed: jax.Array):
+    """Tiled rank-B fold reference: the dense update on the region window
+    plus the output's per-tile occupancy — (tiles', occ)."""
+    out = closure_update_ref(tiles_packed, mask_packed, rows_packed)
+    return out, tile_occupancy_ref(out)
+
+
+def closure_delete_tiled_ref(r_packed: jax.Array, s_packed: jax.Array,
+                             affected_packed: jax.Array):
+    """Tiled delete-repair hop reference: the dense masked hop on the
+    region window plus the output's per-tile occupancy — (r', occ)."""
+    out = closure_delete_ref(r_packed, s_packed, affected_packed)
+    return out, tile_occupancy_ref(out)
+
+
 def embbag_ref(table: jax.Array, idx: jax.Array,
                weights: jax.Array) -> jax.Array:
     """Embedding bag: table (R, D), idx (B, K), weights (B, K) -> (B, D).

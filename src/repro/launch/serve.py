@@ -382,7 +382,10 @@ def _sgt_churn_inputs(capacity: int, batch: int, ticks: int, seed: int,
 def serve_sgt_churn(capacity: int = 1024, batch: int = 256,
                     ticks: int = 30, seed: int = 0,
                     method: str = "incremental",
-                    profile: str = "delheavy") -> dict:
+                    profile: str = "delheavy",
+                    closure_layout: str = "dense",
+                    closure_region: int = 0,
+                    collect_decisions: bool = False) -> dict:
     """Delete-heavy / mixed SGT serving through a raw `DagEngine` session:
     begins + cycle-checked conflict inserts + conflict-edge retirements +
     vertex finishes every tick, with the exact boolean-matmul row-products
@@ -394,15 +397,26 @@ def serve_sgt_churn(capacity: int = 1024, batch: int = 256,
     ``method="incremental_rebuild"`` pins exactly that baseline:
     `FixedPolicy("incremental", use_delete_repair=False)` — every
     adjacency-clearing delete invalidates and the next check pays a full
-    rebuild."""
-    from repro.api import DagEngine, FixedPolicy
+    rebuild.
 
+    ``closure_layout``/``closure_region`` pick the cache representation
+    (`core/closure_cache.TiledClosure` when "tiled" — the O(reachable)
+    memory rows of `benchmarks/capacity_sweep.py`); the result reports
+    the MEASURED resident closure bytes either way.  With
+    ``collect_decisions`` the result also carries the full accept-bit
+    stream (one bool per candidate edge, tick order) so callers can pin
+    decision equality across layouts and window sizes."""
+    from repro.api import DagEngine, FixedPolicy
+    from repro.core import closure_cache as cc_mod
+
+    kw = dict(closure_layout=closure_layout, closure_region=closure_region)
     if method == "incremental_rebuild":
         eng = DagEngine.create(
             capacity,
-            policy=FixedPolicy("incremental", use_delete_repair=False))
+            policy=FixedPolicy("incremental", use_delete_repair=False),
+            **kw)
     else:
-        eng = DagEngine.create(capacity, method=method)
+        eng = DagEngine.create(capacity, method=method, **kw)
     z = jnp.zeros((), jnp.int32)
     carry0 = (eng, z, z, z)  # engine, n_accepted, row_products, n_repairs
 
@@ -415,31 +429,38 @@ def serve_sgt_churn(capacity: int = 1024, batch: int = 256,
         rp = rp + conf.stats.row_products + rem.stats.row_products \
             + fin.stats.row_products
         nr = nr + rem.stats.n_repair + fin.stats.n_repair
-        return (eng, n_acc + jnp.sum(conf.ok, dtype=jnp.int32), rp, nr)
+        return (eng, n_acc + jnp.sum(conf.ok, dtype=jnp.int32),
+                rp, nr), conf.ok
 
     tick_fn = jax.jit(tick)
 
     def step(carry, xs):
-        carry = tick_fn(carry, *xs)
+        carry, ok = tick_fn(carry, *xs)
         jax.block_until_ready(carry[0].state.adj)
-        return carry
+        return carry, ok
 
     inputs = _sgt_churn_inputs(capacity, batch, ticks, seed, profile)
     # untimed warmup on the first tick's shapes (compile only — starting
     # from the fresh engine keeps the timed stream identical)
     step(carry0, inputs[0])
     tick_times = []
+    decisions = []
     carry = carry0
     for xs in inputs:
         t1 = time.perf_counter()
-        carry = step(carry, xs)
+        carry, ok = step(carry, xs)
         tick_times.append(time.perf_counter() - t1)
+        if collect_decisions:
+            decisions.append(np.asarray(ok))
     eng, n_acc, rp, nr = carry
     med = float(np.median(tick_times))
     out = {"ticks": ticks, "ops_per_s": batch / med, "tick_us": med * 1e6,
            "accepted": int(n_acc), "row_products": int(rp),
            "n_repairs": int(nr),
-           "cache_clean": not bool(eng.cache.dirty)}
+           "cache_clean": not bool(eng.cache.dirty),
+           "closure_bytes": cc_mod.closure_nbytes(eng.cache.closure)}
+    if collect_decisions:
+        out["decisions"] = np.concatenate(decisions)
     print(f"[serve-sgt-{profile}:{method}] {batch * ticks} ops -> "
           f"{out['ops_per_s']:.0f} ops/s (median tick); "
           f"accepted={out['accepted']} row_products={out['row_products']} "

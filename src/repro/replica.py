@@ -485,7 +485,9 @@ class Replica:
                  delete_impl=None):
         self.epoch = epoch      # int32 scalar: version this replica is at
         self.adj = adj          # uint32[C, W]: adjacency mirror
-        self.closure = closure  # uint32[C, W]: strict closure mirror
+        # strict closure mirror: dense uint32[C, W] slab or a
+        # closure_cache.TiledClosure (inherited from the primary's layout)
+        self.closure = closure
         self.update_impl = update_impl
         self.delete_impl = delete_impl
 
@@ -530,8 +532,24 @@ class Replica:
         w_new = bitset.n_words(new_capacity)
         pad = ((0, new_capacity - c), (0, w_new - w))
         return Replica(self.epoch, jnp.pad(self.adj, pad),
-                       jnp.pad(self.closure, pad), self.update_impl,
-                       self.delete_impl)
+                       closure_cache.grow_closure(self.closure,
+                                                  new_capacity),
+                       self.update_impl, self.delete_impl)
+
+    def _windowed(self, need_slots: int) -> "Replica":
+        """Tiled closures: widen the tile window to confine slots up to
+        ``need_slots`` before a delta touches them (host-side, mirroring
+        `DagEngine._pre_widened`'s doubling policy).  Dense: no-op."""
+        if not closure_cache.is_tiled(self.closure):
+            return self
+        region = self.closure.region
+        if need_slots <= region:
+            return self
+        nr = closure_cache.align_region(
+            max(2 * region, need_slots), self.capacity)
+        return Replica(self.epoch, self.adj,
+                       closure_cache.grow_region(self.closure, nr),
+                       self.update_impl, self.delete_impl)
 
     def _adj_after(self, delta: CacheDelta) -> jax.Array:
         """The adjacency mirror after ``delta`` (removes, vertex clears,
@@ -603,6 +621,7 @@ class Replica:
             return self._grown(int(entry.grow_to)) if entry.grow_to \
                 else self
         rep = self._grown(entry.grow_to) if entry.grow_to else self
+        rep = rep._windowed(_max_slot(entry.delta) + 1)
         delta = jax.tree.map(jnp.asarray, entry.delta)
         adj = rep._adj_after(delta)
         closure = closure_cache.apply_delta(
@@ -635,16 +654,21 @@ class Replica:
         """Batch PathExists over slots — one closure bit read per query,
         zero matmul products (the paper's wait-free read, served off the
         replicated closure)."""
-        return bitset.bit_get(self.closure, jnp.asarray(u_slots, jnp.int32),
-                              jnp.asarray(v_slots, jnp.int32))
+        return closure_cache.closure_bit_get(
+            self.closure, jnp.asarray(u_slots, jnp.int32),
+            jnp.asarray(v_slots, jnp.int32))
 
     def converged_with(self, engine: DagEngine) -> bool:
         """True iff this replica's adjacency AND closure equal the
         primary engine's, bit for bit (the engine's cache is re-cleaned
-        first so the comparison is against trusted bits)."""
+        first so the comparison is against trusted bits).  The comparison
+        runs on the dense equivalents, so a tiled replica converges with
+        a dense primary (and vice versa) whenever the bits agree."""
         eng = engine.refresh_cache()
+        mine = closure_cache.dense_of(self.closure)
+        theirs = closure_cache.dense_of(eng.cache.closure)
         return bool(jnp.all(self.adj == eng.state.adj)
-                    & jnp.all(self.closure == eng.cache.closure))
+                    & jnp.all(mine == theirs))
 
 
 # ------------------------------------------------------------ log on disk

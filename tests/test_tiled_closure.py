@@ -1,0 +1,220 @@
+"""Property tests for the tiled block-sparse closure (TiledClosure).
+
+The bar is bit-for-bit: a tiled-layout engine must be indistinguishable
+from the dense-layout engine — every accept decision, every adjacency
+word, and (after unpacking the region window) every closure bit — over
+randomized mixed insert/delete/grow streams; tiled replicas replaying
+the shipped delta log must converge with the primary; and dense-era
+checkpoints must restore forward into tiled templates exactly.
+
+Each property is a plain check function driven two ways: seeded
+np.random streams (always run, so the bar holds even without the dev
+extra) and hypothesis `@given` wrappers (shrinking search, when the
+dev extra is installed).
+"""
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import DagEngine, OpBatch
+from repro.core import closure_cache, dag
+
+KEY_HI = 24
+OPS = (dag.REMOVE_VERTEX, dag.ADD_VERTEX, dag.REMOVE_EDGE, dag.ADD_EDGE,
+       dag.CONTAINS_VERTEX, dag.CONTAINS_EDGE)
+
+
+def _random_stream(seed: int, n: int):
+    rng = np.random.default_rng(seed)
+    return [(int(rng.choice(OPS)), int(rng.integers(0, KEY_HI)),
+             int(rng.integers(0, KEY_HI))) for _ in range(n)]
+
+
+def _batches(ops, size=6):
+    for i in range(0, len(ops), size):
+        chunk = ops[i:i + size]
+        yield OpBatch(op=jnp.asarray([c[0] for c in chunk], jnp.int32),
+                      a=jnp.asarray([c[1] for c in chunk], jnp.int32),
+                      b=jnp.asarray([c[2] for c in chunk], jnp.int32))
+
+
+def _caches_equal(tiled_eng, dense_eng):
+    """Dense embedding of the tiled closure == the dense closure, and the
+    summary matches a from-scratch rebuild of the tiles."""
+    tc = tiled_eng.cache.closure
+    dense = np.asarray(closure_cache.dense_of(tc))
+    want = np.asarray(dense_eng.cache.closure)
+    if not np.array_equal(dense, want):
+        return False
+    summary = np.asarray(closure_cache.build_summary(
+        tc.tiles, closure_cache.closure_capacity(tc)))
+    return np.array_equal(np.asarray(tc.summary), summary)
+
+
+# ------------------------------------------------------ check functions
+
+def check_tiled_equals_dense(ops, grow_at):
+    """Tiled and dense engines replaying the same mixed stream (with a
+    grow dropped at an arbitrary point) agree on every accept bit, every
+    adjacency word, and every closure bit."""
+    t_eng = DagEngine.create(32, method="incremental",
+                             closure_layout="tiled")
+    d_eng = DagEngine.create(32, method="incremental")
+    for i, batch in enumerate(_batches(ops)):
+        if i == grow_at:
+            t_eng = t_eng.grow(64)
+            d_eng = d_eng.grow(64)
+        t_eng, r_t = t_eng.apply(batch, acyclic=True)
+        d_eng, r_d = d_eng.apply(batch, acyclic=True)
+        np.testing.assert_array_equal(np.asarray(r_t.ok), np.asarray(r_d.ok))
+        np.testing.assert_array_equal(np.asarray(r_t.n_overflow),
+                                      np.asarray(r_d.n_overflow))
+    np.testing.assert_array_equal(np.asarray(t_eng.state.adj),
+                                  np.asarray(d_eng.state.adj))
+    assert _caches_equal(t_eng, d_eng)
+    assert bool(closure_cache.cache_matches_state(t_eng.cache,
+                                                  t_eng.state.adj))
+
+
+def check_tiny_region_invariant(ops, region):
+    """A deliberately small window (spills force the degrade-to-dirty
+    fallback) must not move a single accept bit."""
+    t_eng = DagEngine.create(64, method="incremental",
+                             closure_layout="tiled", closure_region=region)
+    d_eng = DagEngine.create(64, method="incremental")
+    for batch in _batches(ops):
+        t_eng, r_t = t_eng.apply(batch, acyclic=True)
+        d_eng, r_d = d_eng.apply(batch, acyclic=True)
+        np.testing.assert_array_equal(np.asarray(r_t.ok), np.asarray(r_d.ok))
+    np.testing.assert_array_equal(np.asarray(t_eng.state.adj),
+                                  np.asarray(d_eng.state.adj))
+
+
+def check_replica_replay_converges(ops):
+    """A tiled replica replaying the primary's shipped delta log converges
+    bit for bit with the primary engine."""
+    from repro.replica import Primary, Replica
+
+    pri = Primary.create(32, method="incremental", closure_layout="tiled")
+    for op, a, b in ops:
+        a = jnp.asarray([a], jnp.int32)
+        b = jnp.asarray([b], jnp.int32)
+        if op == dag.ADD_VERTEX:
+            pri.add_vertices(a)
+        elif op == dag.ADD_EDGE:
+            pri.add_edges_acyclic(a, b)
+        elif op == dag.REMOVE_EDGE:
+            pri.remove_edges(a, b)
+        elif op == dag.REMOVE_VERTEX:
+            pri.remove_vertices(a)
+    rep = Replica.from_engine(
+        DagEngine.create(32, method="incremental", closure_layout="tiled"))
+    rep = rep.replay(pri.log)
+    assert bool(rep.converged_with(pri.engine))
+
+
+def check_dense_checkpoint_forward(pre_ops, post_ops):
+    """A dense-era checkpoint restores into a tiled template exactly, and
+    the restored engine keeps making dense-identical decisions."""
+    from repro.ft import checkpoint as ckpt
+
+    d_eng = DagEngine.create(32, method="incremental")
+    for batch in _batches(pre_ops):
+        d_eng, _ = d_eng.apply(batch, acyclic=True)
+    with tempfile.TemporaryDirectory() as d:
+        ckpt.save_engine_checkpoint(d, 0, d_eng)
+        t_like = DagEngine.create(32, method="incremental",
+                                  closure_layout="tiled")
+        t_eng = ckpt.restore_engine_checkpoint(d, t_like)
+    assert closure_cache.is_tiled(t_eng.cache.closure)
+    assert _caches_equal(t_eng, d_eng)
+    for batch in _batches(post_ops):
+        t_eng, r_t = t_eng.apply(batch, acyclic=True)
+        d_eng, r_d = d_eng.apply(batch, acyclic=True)
+        np.testing.assert_array_equal(np.asarray(r_t.ok), np.asarray(r_d.ok))
+    assert _caches_equal(t_eng, d_eng)
+
+
+def check_coalesced_commit_vs_oracle(ops):
+    """The single coalesced delete commit (vertex clears + edge removals
+    repaired in one affected-row pass) keeps every accept decision equal
+    to the from-scratch closure oracle, and leaves the cache exact."""
+    inc = DagEngine.create(32, method="incremental", closure_layout="tiled")
+    oracle = DagEngine.create(32, method="closure")
+    for batch in _batches(ops):
+        inc, r_i = inc.apply(batch, acyclic=True)
+        oracle, r_o = oracle.apply(batch, acyclic=True)
+        np.testing.assert_array_equal(np.asarray(r_i.ok), np.asarray(r_o.ok))
+    assert bool(closure_cache.cache_matches_state(inc.cache,
+                                                  inc.state.adj))
+
+
+# -------------------------------------- seeded streams (no dev extra)
+
+@pytest.mark.parametrize("seed", range(8))
+def test_tiled_equals_dense_seeded(seed):
+    check_tiled_equals_dense(_random_stream(seed, 36), seed % 5)
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_tiny_region_invariant_seeded(seed):
+    check_tiny_region_invariant(_random_stream(100 + seed, 36),
+                                16 + 4 * seed)
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_replica_replay_converges_seeded(seed):
+    check_replica_replay_converges(_random_stream(200 + seed, 24))
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_dense_checkpoint_forward_seeded(seed):
+    check_dense_checkpoint_forward(_random_stream(300 + seed, 24),
+                                   _random_stream(350 + seed, 12))
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_coalesced_commit_vs_oracle_seeded(seed):
+    check_coalesced_commit_vs_oracle(_random_stream(400 + seed, 30))
+
+
+# ------------------------------- hypothesis wrappers (dev extra only)
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    pass
+else:
+    KEYS = st.integers(min_value=0, max_value=KEY_HI - 1)
+    op_strategy = st.tuples(st.sampled_from(OPS), KEYS, KEYS)
+
+    @settings(max_examples=30, deadline=None)
+    @given(st.lists(op_strategy, min_size=1, max_size=36),
+           st.integers(min_value=0, max_value=4))
+    def test_tiled_equals_dense_property(ops, grow_at):
+        check_tiled_equals_dense(ops, grow_at)
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.lists(op_strategy, min_size=1, max_size=36),
+           st.integers(min_value=16, max_value=32))
+    def test_tiny_region_invariant_property(ops, region):
+        check_tiny_region_invariant(ops, region)
+
+    @settings(max_examples=10, deadline=None)
+    @given(st.lists(op_strategy, min_size=4, max_size=24))
+    def test_replica_replay_converges_property(ops):
+        check_replica_replay_converges(ops)
+
+    @settings(max_examples=10, deadline=None)
+    @given(st.lists(op_strategy, min_size=1, max_size=24),
+           st.lists(op_strategy, min_size=1, max_size=12))
+    def test_dense_checkpoint_forward_property(pre_ops, post_ops):
+        check_dense_checkpoint_forward(pre_ops, post_ops)
+
+    @settings(max_examples=15, deadline=None)
+    @given(st.lists(op_strategy, min_size=2, max_size=30))
+    def test_coalesced_commit_vs_oracle_property(ops):
+        check_coalesced_commit_vs_oracle(ops)
